@@ -1,0 +1,55 @@
+"""L2 server-side aggregation graph (the LUAR metric, Eq. 1, for free).
+
+agg(U[a, d], params[d]) -> (mean[d], u_ssq[L], w_ssq[L])
+
+* `mean` is the FedAvg update, reduced by the L1 Pallas kernel.
+* `u_ssq[l]` / `w_ssq[l]` are per-layer squared norms of the mean
+  update and of the current global parameters: exactly the inputs to
+  s_{t,l} = ||Delta_{t,l}|| / ||x_{t,l}||.  Layer boundaries are static
+  at lowering time (the layer table), so these are unrolled static
+  slices — no communication, no dynamic indexing, mirroring the
+  paper's claim that the metric is measurable server-side for free.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels import aggregate as agg_kernel
+from .kernels import ref as kref
+
+
+def make_agg_fn(spec: nn.ModelSpec, use_pallas: bool = True):
+    offsets = [l.offset for l in _table(spec)]
+    sizes = [l.size for l in _table(spec)]
+
+    def agg(updates, params):
+        if use_pallas:
+            mean = agg_kernel.mean_reduce(updates)
+        else:
+            mean = kref.mean_reduce_ref(updates)
+        u_ssq = kref.layer_ssq_ref(mean, offsets, sizes)
+        w_ssq = kref.layer_ssq_ref(params, offsets, sizes)
+        return mean, u_ssq, w_ssq
+
+    return agg
+
+
+class _Row:
+    __slots__ = ("offset", "size")
+
+    def __init__(self, offset, size):
+        self.offset = offset
+        self.size = size
+
+
+def _table(spec: nn.ModelSpec):
+    return [_Row(r["offset"], r["size"]) for r in spec.layer_table()]
+
+
+def example_agg_args(spec: nn.ModelSpec, a: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((a, spec.dim), f32),
+        jax.ShapeDtypeStruct((spec.dim,), f32),
+    )

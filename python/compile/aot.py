@@ -1,0 +1,128 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + metadata.
+
+Run once at build time (`make artifacts`); Python never executes on the
+FL request path.  Per model this emits:
+
+    artifacts/<model>.train.hlo.txt   local update (tau SGD steps)
+    artifacts/<model>.eval.hlo.txt    loss + correct-count on a chunk
+    artifacts/<model>.agg.hlo.txt     Pallas client-mean + layer norms
+    artifacts/<model>.init.bin        raw little-endian f32 init params
+    artifacts/<model>.meta.json       layer table + graph signatures
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` 0.1.6 crate binds) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import aggregate_graph, models, train
+
+# Paper Table 6 defaults (batch sizes CPU-adjusted, see DESIGN.md).
+DEFAULTS = {
+    "mlp": dict(tau=10, batch=32, eval_batch=256, agg_clients=32, seed=1),
+    "cnn": dict(tau=5, batch=16, eval_batch=256, agg_clients=32, seed=2),
+    "resnet8": dict(tau=5, batch=16, eval_batch=256, agg_clients=32, seed=3),
+    "transformer": dict(tau=5, batch=16, eval_batch=256, agg_clients=32, seed=4),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, out_dir: str, cfg: dict, use_pallas_dense: bool) -> dict:
+    spec = models.build(name, use_pallas=use_pallas_dense)
+    tau, batch = cfg["tau"], cfg["batch"]
+    eval_batch, a = cfg["eval_batch"], cfg["agg_clients"]
+
+    train_fn = train.make_train_fn(spec)
+    eval_fn = train.make_eval_fn(spec)
+    agg_fn = aggregate_graph.make_agg_fn(spec, use_pallas=True)
+
+    files = {}
+    graphs = {
+        "train": (train_fn, train.example_train_args(spec, tau, batch)),
+        "eval": (eval_fn, train.example_eval_args(spec, eval_batch)),
+        "agg": (agg_fn, aggregate_graph.example_agg_args(spec, a)),
+    }
+    for kind, (fn, args) in graphs.items():
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{name}.{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+        print(f"  {fname}: {len(text)} chars")
+
+    init = spec.init_flat(cfg["seed"])
+    init_name = f"{name}.init.bin"
+    init.tofile(os.path.join(out_dir, init_name))
+
+    meta = {
+        "model": name,
+        "dim": spec.dim,
+        "num_classes": spec.num_classes,
+        "input_shape": list(spec.input_shape),
+        "input_dtype": spec.input_dtype,
+        "tau": tau,
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "agg_clients": a,
+        "momentum": train.MOMENTUM,
+        "layers": spec.layer_table(),
+        "artifacts": {**files, "init": init_name},
+        "init_sha256": hashlib.sha256(init.tobytes()).hexdigest(),
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--models",
+        default="mlp,cnn,resnet8,transformer",
+        help="comma-separated subset of models to lower",
+    )
+    p.add_argument("--tau", type=int, default=None, help="override local steps")
+    p.add_argument(
+        "--pallas-dense",
+        action="store_true",
+        help="route model dense layers through the Pallas fused_dense kernel "
+        "(slower lowered HLO on CPU; see EXPERIMENTS.md §Perf)",
+    )
+    args = p.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in DEFAULTS:
+            sys.exit(f"unknown model {name!r}; known: {sorted(DEFAULTS)}")
+        cfg = dict(DEFAULTS[name])
+        if args.tau is not None:
+            cfg["tau"] = args.tau
+        print(f"lowering {name} ...")
+        meta = lower_model(name, out_dir, cfg, args.pallas_dense)
+        print(f"  d={meta['dim']} layers={len(meta['layers'])}")
+    print(f"artifacts written to {os.path.abspath(out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

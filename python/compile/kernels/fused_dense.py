@@ -1,0 +1,105 @@
+"""Pallas fused dense kernel: y = act(x @ w + b).
+
+This is the MXU-shaped kernel of the model forward pass: an (M, K) x
+(K, N) matmul tiled as a 2-D grid over (M/BM, N/BN) with the full K
+contraction resident per block (K is small for these models).  Bias add
+and activation are fused into the same VMEM tile before writeback, so
+the activation never round-trips HBM — the standard TPU fusion the
+paper's cuBLAS-based stack gets from XLA on GPU.
+
+The backward pass is a custom_vjp in plain jnp: Pallas kernels have no
+automatic AD rule, and the matmul transposes in the VJP are themselves
+plain GEMMs XLA fuses well.  This keeps the kernel usable inside the
+L2 train graph (jax.grad flows through).
+
+interpret=True everywhere on this CPU testbed; see aggregate.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 32  # batch tile
+BN = 128  # lane-aligned output tile
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    o_ref[...] = y
+
+
+def _pallas_dense(x, w, b, act: str, interpret: bool):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = min(BM, m), min(BN, n)
+    m_pad = pl.cdiv(m, bm) * bm
+    n_pad = pl.cdiv(n, bn) * bn
+    xp = jnp.pad(x, ((0, m_pad - m), (0, 0))) if m_pad != m else x
+    wp = jnp.pad(w, ((0, 0), (0, n_pad - n))) if n_pad != n else w
+    bp = jnp.pad(b, (0, n_pad - n)) if n_pad != n else b
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, act=act),
+        grid=(m_pad // bm, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_dense(x, w, b, act: str = "relu", interpret: bool = True):
+    """act(x @ w + b) with the forward pass as a Pallas kernel."""
+    return _pallas_dense(x, w, b, act, interpret)
+
+
+def _fwd(x, w, b, act, interpret):
+    y = _pallas_dense(x, w, b, act, interpret)
+    return y, (x, w, b, y)
+
+
+def _bwd(act, interpret, res, gy):
+    x, w, b, y = res
+    if act == "relu":
+        gz = gy * (y > 0.0)
+    elif act == "gelu":
+        # Recompute the gelu derivative from the pre-activation.
+        z = x @ w + b
+        gz = gy * jax.grad(lambda t: jax.nn.gelu(t).sum())(z)
+    else:
+        gz = gy
+    gx = gz @ w.T
+    gw = x.T @ gz
+    gb = gz.sum(axis=0)
+    return gx, gw, gb
+
+
+fused_dense.defvjp(_fwd, _bwd)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """Fraction of MXU issue slots doing useful work for one tile pass.
+
+    The 128x128 MXU processes a (bm,k)x(k,bn) tile in ceil(bm/128)*
+    ceil(k/128)*ceil(bn/128) passes; utilization is useful MACs over
+    issued MACs.  Recorded per-model in EXPERIMENTS.md §Perf.
+    """
+    import math
+
+    bm, bn = min(BM, m), min(BN, n)
+    passes = math.ceil(bm / 128) * math.ceil(k / 128) * math.ceil(bn / 128)
+    issued = passes * 128 * 128 * 128
+    useful = bm * k * bn
+    return useful / issued

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contract: pytest asserts the Pallas kernels
+(interpret=True) match these references to float32 tolerance across a
+hypothesis-swept grid of shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mean_reduce_ref(updates: jnp.ndarray) -> jnp.ndarray:
+    """Mean of stacked client updates: [a, d] -> [d]."""
+    return jnp.mean(updates, axis=0)
+
+
+def weighted_mean_reduce_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted mean of client updates: [a, d], [a] -> [d] (weights sum to 1)."""
+    return jnp.einsum("a,ad->d", weights, updates)
+
+
+def fused_dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Dense layer y = act(x @ w + b); act in {"relu", "gelu", "none"}."""
+    y = x @ w + b
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    return y
+
+
+def layer_ssq_ref(flat: jnp.ndarray, offsets, sizes) -> jnp.ndarray:
+    """Per-layer squared L2 norms of a flat vector (static slices)."""
+    return jnp.stack(
+        [jnp.sum(jax.lax.dynamic_slice_in_dim(flat, o, s) ** 2) for o, s in zip(offsets, sizes)]
+    )

@@ -1,0 +1,18 @@
+"""Model zoo: one module per benchmark family.
+
+Each `build()` returns a `nn.ModelSpec`; `REGISTRY` maps the model name
+used by `aot.py`, the Makefile and the Rust CLI to its builder.
+"""
+
+from . import cnn, mlp, resnet, transformer
+
+REGISTRY = {
+    "mlp": mlp.build,
+    "cnn": cnn.build,
+    "resnet8": resnet.build,
+    "transformer": transformer.build,
+}
+
+
+def build(name: str, **kw):
+    return REGISTRY[name](**kw)

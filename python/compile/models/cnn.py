@@ -1,0 +1,50 @@
+"""FEMNIST-style CNN: the paper's 4-layer model (2 conv + 2 dense).
+
+Matches the paper's FEMNIST setup where delta=2 of 4 layers is the
+sweet spot and the big dense layer is the one most often recycled
+(Fig. 3) — the layer-size distribution here reproduces that skew:
+fc1 holds ~88% of the parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..kernels import fused_dense as fd
+from ..kernels import ref as kref
+
+IMG = 16
+NUM_CLASSES = 10
+
+
+def build(use_pallas: bool = False) -> nn.ModelSpec:
+    layers = [
+        nn.conv_layer("conv1", 3, 1, 16),
+        nn.conv_layer("conv2", 3, 16, 32),
+        nn.dense_layer("fc1", 4 * 4 * 32, 128),
+        nn.dense_layer("fc2", 128, NUM_CLASSES),
+    ]
+
+    def dense(x, w, b, act):
+        if use_pallas:
+            return fd.fused_dense(x, w, b, act)
+        return kref.fused_dense_ref(x, w, b, act)
+
+    def apply(params, x):
+        (w1, b1), (w2, b2), (w3, b3), (w4, b4) = params
+        h = jax.nn.relu(nn.conv2d(x, w1, b1))
+        h = nn.max_pool(h)  # 8x8
+        h = jax.nn.relu(nn.conv2d(h, w2, b2))
+        h = nn.max_pool(h)  # 4x4
+        h = h.reshape(h.shape[0], -1)
+        h = dense(h, w3, b3, "relu")
+        return dense(h, w4, b4, "none")
+
+    return nn.ModelSpec(
+        name="cnn",
+        layers=layers,
+        input_shape=(IMG, IMG, 1),
+        input_dtype="f32",
+        num_classes=NUM_CLASSES,
+        apply_fn=apply,
+    )

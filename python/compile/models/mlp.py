@@ -1,0 +1,44 @@
+"""Quickstart MLP for the synthetic vector benchmark.
+
+Four dense layers so the LUAR layer table is non-trivial; dense layers
+run through the Pallas fused_dense kernel when `use_pallas=True`.
+"""
+
+import jax.numpy as jnp
+
+from .. import nn
+from ..kernels import fused_dense as fd
+from ..kernels import ref as kref
+
+INPUT_DIM = 32
+HIDDEN = (128, 64, 32)
+NUM_CLASSES = 10
+
+
+def build(use_pallas: bool = False) -> nn.ModelSpec:
+    dims = (INPUT_DIM, *HIDDEN, NUM_CLASSES)
+    layers = [
+        nn.dense_layer(f"fc{i}", dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    ]
+
+    def dense(x, w, b, act):
+        if use_pallas:
+            return fd.fused_dense(x, w, b, act)
+        return kref.fused_dense_ref(x, w, b, act)
+
+    def apply(params, x):
+        h = x.reshape(x.shape[0], -1)
+        n = len(params)
+        for i, (w, b) in enumerate(params):
+            h = dense(h, w, b, "relu" if i < n - 1 else "none")
+        return h
+
+    return nn.ModelSpec(
+        name="mlp",
+        layers=layers,
+        input_shape=(INPUT_DIM,),
+        input_dtype="f32",
+        num_classes=NUM_CLASSES,
+        apply_fn=apply,
+    )

@@ -1,0 +1,58 @@
+"""CIFAR-style ResNet-8 (CPU-sized stand-in for the paper's ResNet20).
+
+Three residual stages (8/16/32 channels) of one block each, plus stem
+and classifier: 10 weight layers, ~20k parameters (CPU-sized).  BatchNorm is
+omitted (FL + per-client BN statistics is a known confound the paper
+does not study); He init plus the residual topology keeps training
+stable at the paper's learning rates.  Input is 16x16x3 synthetic
+"CIFAR-like" data (DESIGN.md §Substitutions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+IMG = 12
+NUM_CLASSES = 10
+
+
+def build(use_pallas: bool = False) -> nn.ModelSpec:
+    del use_pallas  # conv model; dense head is tiny
+    layers = [
+        nn.conv_layer("stem", 3, 3, 8),
+        nn.conv_layer("s1_conv1", 3, 8, 8),
+        nn.conv_layer("s1_conv2", 3, 8, 8),
+        nn.conv_layer("s2_conv1", 3, 8, 16),
+        nn.conv_layer("s2_conv2", 3, 16, 16),
+        nn.conv_layer("s2_skip", 1, 8, 16),
+        nn.conv_layer("s3_conv1", 3, 16, 32),
+        nn.conv_layer("s3_conv2", 3, 32, 32),
+        nn.conv_layer("s3_skip", 1, 16, 32),
+        nn.dense_layer("fc", 32, NUM_CLASSES),
+    ]
+
+    def block(h, p1, p2, skip=None, stride=1):
+        y = jax.nn.relu(nn.conv2d(h, *p1, stride=stride))
+        y = nn.conv2d(y, *p2)
+        s = h if skip is None else nn.conv2d(h, *skip, stride=stride)
+        return jax.nn.relu(y + s)
+
+    def apply(params, x):
+        (stem, c11, c12, c21, c22, sk2, c31, c32, sk3, fc) = params
+        h = jax.nn.relu(nn.conv2d(x, *stem))
+        h = block(h, c11, c12)  # 12x12x8
+        h = block(h, c21, c22, skip=sk2, stride=2)  # 6x6x16
+        h = block(h, c31, c32, skip=sk3, stride=2)  # 3x3x32
+        h = h.mean(axis=(1, 2))  # global average pool
+        w, b = fc
+        return h @ w + b
+
+    return nn.ModelSpec(
+        name="resnet8",
+        layers=layers,
+        input_shape=(IMG, IMG, 3),
+        input_dtype="f32",
+        num_classes=NUM_CLASSES,
+        apply_fn=apply,
+    )

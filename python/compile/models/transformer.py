@@ -1,0 +1,106 @@
+"""AG-News-style TinyTransformer (DistilBERT stand-in, CPU-sized).
+
+Token embedding + learned positions, two pre-LN-free transformer
+blocks (attention + FF), mean-pool, classifier head: 12 LUAR layers.
+The embedding layer dominates the parameter count the way DistilBERT's
+embeddings do in the paper's AG News runs (where the biggest layer is
+the one recycled most often, Fig. 3).
+
+FF layers use the Pallas fused_dense kernel when `use_pallas=True`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..kernels import fused_dense as fd
+from ..kernels import ref as kref
+
+VOCAB = 256
+SEQ = 16
+D_MODEL = 32
+N_HEADS = 4
+D_FF = 64
+N_BLOCKS = 2
+NUM_CLASSES = 4  # AG News has 4 classes
+
+
+def build(use_pallas: bool = False) -> nn.ModelSpec:
+    layers = [
+        nn.LayerSpec(
+            "embed",
+            "embed",
+            (
+                nn.ArraySpec("tok", (VOCAB, D_MODEL), "embed", VOCAB),
+                nn.ArraySpec("pos", (SEQ, D_MODEL), "embed", SEQ),
+            ),
+        )
+    ]
+    for i in range(N_BLOCKS):
+        layers += [
+            nn.LayerSpec(
+                f"blk{i}_attn",
+                "attn",
+                (
+                    nn.ArraySpec("wq", (D_MODEL, D_MODEL), "glorot", D_MODEL),
+                    nn.ArraySpec("wk", (D_MODEL, D_MODEL), "glorot", D_MODEL),
+                    nn.ArraySpec("wv", (D_MODEL, D_MODEL), "glorot", D_MODEL),
+                    nn.ArraySpec("wo", (D_MODEL, D_MODEL), "glorot", D_MODEL),
+                ),
+            ),
+            nn.dense_layer(f"blk{i}_ff1", D_MODEL, D_FF, init="glorot"),
+            nn.dense_layer(f"blk{i}_ff2", D_FF, D_MODEL, init="glorot"),
+        ]
+    layers += [
+        nn.dense_layer("head1", D_MODEL, D_MODEL, init="glorot"),
+        nn.dense_layer("head2", D_MODEL, NUM_CLASSES, init="glorot"),
+    ]
+
+    def dense(x, w, b, act):
+        if use_pallas:
+            # fused_dense expects 2-D inputs; fold (B, S) when needed.
+            if x.ndim == 3:
+                bsz, s, k = x.shape
+                return fd.fused_dense(x.reshape(bsz * s, k), w, b, act).reshape(
+                    bsz, s, -1
+                )
+            return fd.fused_dense(x, w, b, act)
+        return kref.fused_dense_ref(x, w, b, act)
+
+    def attention(h, wq, wk, wv, wo):
+        bsz, s, dm = h.shape
+        dh = dm // N_HEADS
+
+        def split(x):
+            return x.reshape(bsz, s, N_HEADS, dh).transpose(0, 2, 1, 3)
+
+        q, k, v = split(h @ wq), split(h @ wk), split(h @ wv)
+        att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(dh), axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, s, dm)
+        return y @ wo
+
+    def apply(params, tokens):
+        it = iter(params)
+        (tok, pos) = next(it)
+        h = tok[tokens] + pos[None, :, :]
+        for _ in range(N_BLOCKS):
+            (wq, wk, wv, wo) = next(it)
+            (w1, b1) = next(it)
+            (w2, b2) = next(it)
+            h = h + attention(h, wq, wk, wv, wo)
+            ff = dense(dense(h, w1, b1, "gelu"), w2, b2, "none")
+            h = h + ff
+        h = h.mean(axis=1)
+        (w, b) = next(it)
+        h = dense(h, w, b, "relu")
+        (w, b) = next(it)
+        return kref.fused_dense_ref(h, w, b, "none")
+
+    return nn.ModelSpec(
+        name="transformer",
+        layers=layers,
+        input_shape=(SEQ,),
+        input_dtype="i32",
+        num_classes=NUM_CLASSES,
+        apply_fn=apply,
+    )

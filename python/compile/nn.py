@@ -1,0 +1,207 @@
+"""Flat-parameter neural-net substrate shared by all L2 model graphs.
+
+A model is a list of *layers*; each layer owns one or more parameter
+arrays (e.g. a conv weight plus its bias).  The FedLUAR algorithm
+operates layer-wise, so the layer is the unit of recycling, and every
+layer's arrays are stored contiguously in the flat f32 parameter vector
+that crosses the Rust<->HLO boundary.
+
+The flatten order (layer order, then array order within a layer) is the
+single source of truth: `layer_table()` emits the offsets that
+`aot.py` writes into `artifacts/<model>.meta.json` and that the Rust
+coordinator uses for all per-layer slicing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """One parameter array inside a layer."""
+
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "he" | "glorot" | "zeros" | "embed" | "ones"
+    fan_in: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """A named network layer: the unit of LUAR recycling."""
+
+    name: str
+    kind: str  # "conv" | "dense" | "embed" | "attn" | "norm"
+    arrays: tuple[ArraySpec, ...]
+
+    @property
+    def size(self) -> int:
+        return sum(a.size for a in self.arrays)
+
+
+class ModelSpec:
+    """Static description of a model: layers + input/output signature."""
+
+    def __init__(
+        self,
+        name: str,
+        layers: list[LayerSpec],
+        input_shape: tuple[int, ...],
+        input_dtype: str,
+        num_classes: int,
+        apply_fn: Callable,
+    ):
+        self.name = name
+        self.layers = layers
+        self.input_shape = input_shape
+        self.input_dtype = input_dtype  # "f32" or "i32"
+        self.num_classes = num_classes
+        self._apply = apply_fn
+
+    # -- flat-vector plumbing -------------------------------------------------
+
+    @property
+    def dim(self) -> int:
+        return sum(l.size for l in self.layers)
+
+    def layer_table(self) -> list[dict]:
+        """Offsets for meta.json; mirrors the flatten order exactly."""
+        table = []
+        off = 0
+        for l in self.layers:
+            arrays = []
+            a_off = off
+            for a in l.arrays:
+                arrays.append(
+                    {
+                        "name": a.name,
+                        "shape": list(a.shape),
+                        "offset": a_off,
+                        "size": a.size,
+                    }
+                )
+                a_off += a.size
+            table.append(
+                {
+                    "name": l.name,
+                    "kind": l.kind,
+                    "offset": off,
+                    "size": l.size,
+                    "arrays": arrays,
+                }
+            )
+            off += l.size
+        assert off == self.dim
+        return table
+
+    def unflatten(self, flat: jnp.ndarray) -> list[list[jnp.ndarray]]:
+        """Static-slice the flat vector back into per-layer array lists."""
+        out = []
+        off = 0
+        for l in self.layers:
+            arrs = []
+            for a in l.arrays:
+                arrs.append(jax.lax.dynamic_slice_in_dim(flat, off, a.size).reshape(a.shape))
+                off += a.size
+            out.append(arrs)
+        return out
+
+    def flatten(self, params: list[list[jnp.ndarray]]) -> jnp.ndarray:
+        leaves = [arr.reshape(-1) for layer in params for arr in layer]
+        return jnp.concatenate(leaves)
+
+    # -- init ------------------------------------------------------------------
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Deterministic initial parameters as a flat float32 numpy vector."""
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for l in self.layers:
+            for a in l.arrays:
+                if a.init == "zeros":
+                    w = np.zeros(a.size, dtype=np.float32)
+                elif a.init == "ones":
+                    w = np.ones(a.size, dtype=np.float32)
+                elif a.init == "he":
+                    std = float(np.sqrt(2.0 / max(a.fan_in, 1)))
+                    w = rng.normal(0.0, std, size=a.size).astype(np.float32)
+                elif a.init == "glorot":
+                    std = float(np.sqrt(1.0 / max(a.fan_in, 1)))
+                    w = rng.normal(0.0, std, size=a.size).astype(np.float32)
+                elif a.init == "embed":
+                    w = rng.normal(0.0, 0.02, size=a.size).astype(np.float32)
+                else:
+                    raise ValueError(f"unknown init {a.init}")
+                chunks.append(w)
+        flat = np.concatenate(chunks)
+        assert flat.size == self.dim
+        return flat
+
+    # -- forward ----------------------------------------------------------------
+
+    def apply(self, params: list[list[jnp.ndarray]], x: jnp.ndarray) -> jnp.ndarray:
+        """Forward pass: x [B, *input_shape] -> logits [B, num_classes]."""
+        return self._apply(params, x)
+
+    def apply_flat(self, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        return self.apply(self.unflatten(flat), x)
+
+
+# -- shared layer constructors ---------------------------------------------------
+
+
+def dense_layer(name: str, d_in: int, d_out: int, init: str = "he") -> LayerSpec:
+    return LayerSpec(
+        name=name,
+        kind="dense",
+        arrays=(
+            ArraySpec("w", (d_in, d_out), init, d_in),
+            ArraySpec("b", (d_out,), "zeros", d_in),
+        ),
+    )
+
+
+def conv_layer(name: str, k: int, c_in: int, c_out: int) -> LayerSpec:
+    return LayerSpec(
+        name=name,
+        kind="conv",
+        arrays=(
+            ArraySpec("w", (k, k, c_in, c_out), "he", k * k * c_in),
+            ArraySpec("b", (c_out,), "zeros", k * k * c_in),
+        ),
+    )
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC conv with SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def max_pool(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32), axis=-1)
+    return nll.mean()

@@ -1,0 +1,98 @@
+"""L2 training / evaluation graphs lowered once per model.
+
+`make_train_fn` builds the client-side local update of Algorithm 2
+line 7-10: tau steps of mini-batch SGD with momentum 0.9 over a
+`lax.scan`, returning the accumulated update Delta = x_tau - x_0 and
+the mean training loss.  Two proximal terms parameterize the advanced
+FL optimizers without extra artifacts:
+
+    g_total = g + mu_g (x - anchor_g) - mu_prev (x - anchor_prev) + wd x
+
+* FedAvg:   mu_g = mu_prev = 0
+* FedProx:  mu_g = mu,   anchor_g    = broadcast global model
+* FedACG:   mu_g = beta, anchor_g    = lookahead-accelerated global
+* MOON-lite: mu_g pull to global, mu_prev push from the client's
+  previous local model (DESIGN.md §Substitutions)
+
+Everything operates on the flat f32 parameter vector; gradients are
+taken w.r.t. the flat vector directly so the update is a single
+contiguous buffer for the Rust coordinator.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+MOMENTUM = 0.9
+
+
+def make_train_fn(spec: nn.ModelSpec):
+    """(params[d], anchor_g[d], anchor_prev[d], xs[tau,B,...], ys[tau,B],
+    lr[], mu_g[], mu_prev[], wd[]) -> (delta[d], mean_loss[])"""
+
+    def loss_fn(flat, x, y):
+        logits = spec.apply_flat(flat, x)
+        return nn.cross_entropy(logits, y)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train(params, anchor_g, anchor_prev, xs, ys, lr, mu_g, mu_prev, wd):
+        def step(carry, batch):
+            flat, mom = carry
+            x, y = batch
+            loss, g = grad_fn(flat, x, y)
+            g = g + mu_g * (flat - anchor_g) - mu_prev * (flat - anchor_prev) + wd * flat
+            mom = MOMENTUM * mom + g
+            flat = flat - lr * mom
+            return (flat, mom), loss
+
+        (final, _), losses = jax.lax.scan(step, (params, jnp.zeros_like(params)), (xs, ys))
+        return final - params, losses.mean()
+
+    return train
+
+
+def make_eval_fn(spec: nn.ModelSpec):
+    """(params[d], xs[B,...], ys[B]) -> (sum_loss[], correct[] i32)
+
+    Returns the *sum* of per-sample NLL so the Rust side can average
+    over arbitrarily many fixed-size chunks exactly.
+    """
+
+    def evaluate(params, xs, ys):
+        logits = spec.apply_flat(params, xs)
+        logz = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logz, ys[:, None].astype(jnp.int32), axis=-1)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == ys).astype(jnp.int32))
+        return jnp.sum(nll), correct
+
+    return evaluate
+
+
+def example_train_args(spec: nn.ModelSpec, tau: int, batch: int):
+    """ShapeDtypeStructs for lowering the train graph."""
+    f32, i32 = jnp.float32, jnp.int32
+    d = spec.dim
+    x_dtype = f32 if spec.input_dtype == "f32" else i32
+    return (
+        jax.ShapeDtypeStruct((d,), f32),  # params
+        jax.ShapeDtypeStruct((d,), f32),  # anchor_g
+        jax.ShapeDtypeStruct((d,), f32),  # anchor_prev
+        jax.ShapeDtypeStruct((tau, batch, *spec.input_shape), x_dtype),
+        jax.ShapeDtypeStruct((tau, batch), i32),
+        jax.ShapeDtypeStruct((), f32),  # lr
+        jax.ShapeDtypeStruct((), f32),  # mu_g
+        jax.ShapeDtypeStruct((), f32),  # mu_prev
+        jax.ShapeDtypeStruct((), f32),  # wd
+    )
+
+
+def example_eval_args(spec: nn.ModelSpec, eval_batch: int):
+    f32, i32 = jnp.float32, jnp.int32
+    x_dtype = f32 if spec.input_dtype == "f32" else i32
+    return (
+        jax.ShapeDtypeStruct((spec.dim,), f32),
+        jax.ShapeDtypeStruct((eval_batch, *spec.input_shape), x_dtype),
+        jax.ShapeDtypeStruct((eval_batch,), i32),
+    )

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (client counts, vector lengths including
+non-BLOCK-multiples, matmul dims) and asserts allclose against ref.py.
+This is the core correctness signal for the aggregation hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, fused_dense, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- mean_reduce
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.integers(min_value=1, max_value=40),
+    d=st.integers(min_value=1, max_value=2000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mean_reduce_matches_ref(a, d, seed):
+    u = _rng(seed).normal(size=(a, d)).astype(np.float32)
+    got = aggregate.mean_reduce(jnp.asarray(u))
+    want = ref.mean_reduce_ref(jnp.asarray(u))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mean_reduce_exact_block_multiple():
+    u = _rng(0).normal(size=(32, aggregate.BLOCK * 3)).astype(np.float32)
+    got = aggregate.mean_reduce(jnp.asarray(u))
+    np.testing.assert_allclose(got, u.mean(axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_mean_reduce_single_client_is_identity():
+    u = _rng(1).normal(size=(1, 777)).astype(np.float32)
+    got = aggregate.mean_reduce(jnp.asarray(u))
+    np.testing.assert_allclose(got, u[0], rtol=1e-6, atol=1e-6)
+
+
+def test_mean_reduce_zeros():
+    u = np.zeros((8, 100), dtype=np.float32)
+    assert np.all(np.asarray(aggregate.mean_reduce(jnp.asarray(u))) == 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    a=st.integers(min_value=2, max_value=33),
+    d=st.integers(min_value=1, max_value=1500),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_weighted_mean_reduce_matches_ref(a, d, seed):
+    rng = _rng(seed)
+    u = rng.normal(size=(a, d)).astype(np.float32)
+    w = rng.dirichlet(np.ones(a)).astype(np.float32)
+    got = aggregate.weighted_mean_reduce(jnp.asarray(u), jnp.asarray(w))
+    want = ref.weighted_mean_reduce_ref(jnp.asarray(u), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_uniform_equals_mean():
+    u = _rng(2).normal(size=(16, 513)).astype(np.float32)
+    w = np.full(16, 1.0 / 16, dtype=np.float32)
+    got = aggregate.weighted_mean_reduce(jnp.asarray(u), jnp.asarray(w))
+    np.testing.assert_allclose(got, u.mean(axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_estimate_under_budget():
+    # a=32, BLOCK=512 must fit VMEM (~16 MiB) with double buffering.
+    assert 2 * aggregate.vmem_bytes(32) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- fused_dense
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=200),
+    act=st.sampled_from(["relu", "gelu", "none"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_dense_matches_ref(m, k, n, act, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32) / np.sqrt(k)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    got = fused_dense.fused_dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    want = ref.fused_dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "none"])
+def test_fused_dense_gradients_match_ref(act):
+    rng = _rng(7)
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 24)).astype(np.float32) / 4.0
+    b = rng.normal(size=(24,)).astype(np.float32)
+
+    def loss_pallas(w, b):
+        return (fused_dense.fused_dense(x, w, b, act) ** 2).sum()
+
+    def loss_ref(w, b):
+        return (ref.fused_dense_ref(x, w, b, act) ** 2).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1))(jnp.asarray(w), jnp.asarray(b))
+    gr = jax.grad(loss_ref, argnums=(0, 1))(jnp.asarray(w), jnp.asarray(b))
+    for a_, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a_, b_, rtol=1e-3, atol=1e-3)
+
+
+def test_fused_dense_grad_wrt_input():
+    rng = _rng(8)
+    x = rng.normal(size=(4, 8)).astype(np.float32)
+    w = rng.normal(size=(8, 8)).astype(np.float32)
+    b = np.zeros(8, dtype=np.float32)
+    gx = jax.grad(lambda x_: fused_dense.fused_dense(x_, w, b, "relu").sum())(jnp.asarray(x))
+    gx_ref = jax.grad(lambda x_: ref.fused_dense_ref(x_, w, b, "relu").sum())(jnp.asarray(x))
+    np.testing.assert_allclose(gx, gx_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_mxu_utilization_estimate_sane():
+    u = fused_dense.mxu_utilization_estimate(32, 64, 128)
+    assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------- layer_ssq
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=50), min_size=1, max_size=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_layer_ssq_partitions_total(sizes, seed):
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).tolist()
+    d = int(sum(sizes))
+    v = _rng(seed).normal(size=d).astype(np.float32)
+    ssq = ref.layer_ssq_ref(jnp.asarray(v), offsets, sizes)
+    assert ssq.shape == (len(sizes),)
+    np.testing.assert_allclose(np.asarray(ssq).sum(), (v**2).sum(), rtol=1e-4)

@@ -1,0 +1,122 @@
+"""L2 model-zoo correctness: shapes, flatten/unflatten round trip,
+layer table consistency, gradient flow to every layer, pallas/ref parity.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL = ["mlp", "cnn", "resnet8", "transformer"]
+
+
+def _inputs(spec, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if spec.input_dtype == "f32":
+        x = rng.normal(size=(batch, *spec.input_shape)).astype(np.float32)
+    else:
+        x = rng.integers(0, 512, size=(batch, *spec.input_shape)).astype(np.int32)
+    y = rng.integers(0, spec.num_classes, size=(batch,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(params=ALL)
+def spec(request):
+    return models.build(request.param)
+
+
+def test_layer_table_is_contiguous(spec):
+    table = spec.layer_table()
+    off = 0
+    for row in table:
+        assert row["offset"] == off
+        a_off = off
+        for a in row["arrays"]:
+            assert a["offset"] == a_off
+            assert a["size"] == int(np.prod(a["shape"])) if a["shape"] else 1
+            a_off += a["size"]
+        assert a_off - off == row["size"]
+        off += row["size"]
+    assert off == spec.dim
+
+
+def test_flatten_unflatten_roundtrip(spec):
+    flat = jnp.asarray(spec.init_flat(0))
+    params = spec.unflatten(flat)
+    flat2 = spec.flatten(params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+def test_forward_shape(spec):
+    flat = jnp.asarray(spec.init_flat(1))
+    x, _ = _inputs(spec, batch=4)
+    logits = spec.apply_flat(flat, x)
+    assert logits.shape == (4, spec.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_init_is_deterministic(spec):
+    a = spec.init_flat(42)
+    b = spec.init_flat(42)
+    c = spec.init_flat(43)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_gradient_reaches_every_layer(spec):
+    """No dead layers: every layer's slice of the gradient is non-zero."""
+    flat = jnp.asarray(spec.init_flat(2))
+    x, y = _inputs(spec, batch=8, seed=3)
+
+    def loss(f):
+        return nn.cross_entropy(spec.apply_flat(f, x), y)
+
+    g = np.asarray(jax.grad(loss)(flat))
+    for row in spec.layer_table():
+        sl = g[row["offset"] : row["offset"] + row["size"]]
+        assert np.abs(sl).max() > 0, f"dead layer {row['name']}"
+
+
+def test_loss_decreases_under_sgd(spec):
+    """A few SGD steps on one batch must reduce the loss (learnability)."""
+    flat = jnp.asarray(spec.init_flat(4))
+    x, y = _inputs(spec, batch=16, seed=5)
+
+    def loss(f):
+        return nn.cross_entropy(spec.apply_flat(f, x), y)
+
+    l0 = float(loss(flat))
+    lr = 0.05 if spec.input_dtype == "f32" else 0.01
+    g = jax.grad(loss)
+    for _ in range(10):
+        flat = flat - lr * g(flat)
+    l1 = float(loss(flat))
+    assert l1 < l0, f"{spec.name}: loss {l0} -> {l1}"
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn", "transformer"])
+def test_pallas_and_ref_paths_agree(name):
+    """use_pallas=True must be numerically identical to the jnp path."""
+    s_ref = models.build(name, use_pallas=False)
+    s_pal = models.build(name, use_pallas=True)
+    flat = jnp.asarray(s_ref.init_flat(6))
+    x, _ = _inputs(s_ref, batch=4, seed=7)
+    a = s_ref.apply_flat(flat, x)
+    b = s_pal.apply_flat(flat, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_registry_contents():
+    assert set(models.REGISTRY) == set(ALL)
+
+
+def test_cnn_dense_dominates_like_femnist():
+    """Paper Fig. 3: FEMNIST's largest layer (fc1) dominates the model."""
+    spec = models.build("cnn")
+    table = spec.layer_table()
+    fc1 = next(r for r in table if r["name"] == "fc1")
+    assert fc1["size"] / spec.dim > 0.75

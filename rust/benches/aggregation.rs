@@ -1,0 +1,59 @@
+//! L3 aggregation hot path: pure-Rust mean reduction (serial vs
+//! threaded) and per-layer norm computation over realistic model
+//! sizes. This is the server-side cost every round pays; compare with
+//! the Pallas-backed HLO aggregation in `runtime_exec`.
+
+use fedluar::bench_harness::Bench;
+use fedluar::rng::Rng;
+use fedluar::tensor;
+
+fn make_updates(a: usize, d: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(1);
+    (0..a).map(|_| (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect()).collect()
+}
+
+fn main() {
+    println!("== aggregation (a=32 clients) ==");
+    for &d in &[14_890usize, 71_754, 1_000_000] {
+        let updates = make_updates(32, d);
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        let elems = Some((32 * d) as u64);
+        let mut b = Bench::new(&format!("mean_d{d}"));
+        b.bench("mean_rows_serial", elems, || {
+            tensor::mean_rows(&refs, &mut out);
+            std::hint::black_box(&out);
+        });
+        b.bench("mean_rows_par", elems, || {
+            tensor::mean_rows_par(&refs, &mut out);
+            std::hint::black_box(&out);
+        });
+        b.compare("mean_rows_serial", "mean_rows_par");
+    }
+
+    println!("\n== per-layer norms (Eq. 1 inputs) ==");
+    let d = 206_922; // cnn-scale
+    let mut rng = Rng::seed_from_u64(2);
+    let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    // 10-layer split
+    let bounds: Vec<usize> = (0..=10).map(|i| i * d / 10).collect();
+    let mut b = Bench::new("layer_ssq");
+    b.bench("ssq_10_layers", Some(d as u64), || {
+        let mut acc = 0.0f64;
+        for w in bounds.windows(2) {
+            acc += tensor::ssq(&v[w[0]..w[1]]);
+        }
+        std::hint::black_box(acc);
+    });
+
+    println!("\n== weighted mean (client weighting) ==");
+    let updates = make_updates(32, 71_754);
+    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    let w = vec![1.0 / 32.0; 32];
+    let mut out = vec![0.0f32; 71_754];
+    let mut b = Bench::new("wmean_d71754");
+    b.bench("weighted_mean_rows", Some((32 * 71_754) as u64), || {
+        tensor::weighted_mean_rows(&refs, &w, &mut out);
+        std::hint::black_box(&out);
+    });
+}

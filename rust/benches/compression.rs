@@ -1,0 +1,108 @@
+//! Compression baselines throughput: the per-client upload transform
+//! every non-LUAR method pays. FedLUAR's comparative advantage is that
+//! its "compression" is free (layer skipping), so these numbers bound
+//! the baselines' client-side overhead.
+
+use fedluar::bench_harness::Bench;
+use fedluar::compress::{
+    Binarize, DropoutAvg, Lbgm, LowRank, Prune, Quantize, TopK, UpdateCompressor,
+};
+use fedluar::model::ModelMeta;
+use fedluar::rng::Rng;
+use std::path::PathBuf;
+
+fn synth_meta(layers: usize, layer_size: usize) -> ModelMeta {
+    // Build a JSON meta on the fly so the bench needs no artifacts.
+    let mut rows = Vec::new();
+    for l in 0..layers {
+        let off = l * layer_size;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{layer_size},
+               "arrays":[{{"name":"w","shape":[{r},{c}],"offset":{off},"size":{layer_size}}}]}}"#,
+            r = layer_size / 64,
+            c = 64
+        ));
+    }
+    let dim = layers * layer_size;
+    let doc = format!(
+        r#"{{"model":"bench","dim":{dim},"num_classes":10,
+            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
+            "eval_batch":64,"agg_clients":32,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
+}
+
+fn main() {
+    let meta = synth_meta(10, 6400); // 64k params over 10 layers
+    let d = meta.dim;
+    let mut rng = Rng::seed_from_u64(3);
+    let base: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let elems = Some(d as u64);
+
+    let mut b = Bench::new(&format!("compress_d{d}"));
+    let mut crng = Rng::seed_from_u64(4);
+    let mut buf = base.clone();
+    let mut round = 0usize;
+
+    let mut q = Quantize::new(16);
+    b.bench("quantize16", elems, || {
+        buf.copy_from_slice(&base);
+        q.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut bin = Binarize::new();
+    b.bench("binarize_ef", elems, || {
+        buf.copy_from_slice(&base);
+        bin.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut p = Prune::new(0.5, 10);
+    b.bench("prune_keep50", elems, || {
+        buf.copy_from_slice(&base);
+        p.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut dr = DropoutAvg::new(0.5);
+    b.bench("dropout50", elems, || {
+        buf.copy_from_slice(&base);
+        dr.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut tk = TopK::new(0.1);
+    b.bench("topk10", elems, || {
+        buf.copy_from_slice(&base);
+        tk.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut lb = Lbgm::new(0.6);
+    b.bench("lbgm", elems, || {
+        buf.copy_from_slice(&base);
+        lb.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    let mut lr = LowRank::new(0.25);
+    b.bench("lowrank25", elems, || {
+        buf.copy_from_slice(&base);
+        lr.compress(0, &mut buf, &meta, round, &mut crng);
+        round += 1;
+        std::hint::black_box(&buf);
+    });
+
+    println!("\nnote: FedLUAR pays none of these — recycling is layer skipping.");
+}

@@ -1,0 +1,49 @@
+//! End-to-end round latency: the whole Algorithm 2 iteration (client
+//! sampling, 32 local updates through PJRT, aggregation, LUAR
+//! decision, server update, accounting) for FedAvg vs FedLUAR.
+//!
+//! The paper's claim is that LUAR adds "little to no additional
+//! computational cost" — the FedLUAR/FedAvg ratio here is that claim,
+//! measured. Requires `make artifacts`.
+
+use fedluar::bench_harness::Bench;
+use fedluar::config::{Method, RunConfig};
+use fedluar::fl::Server;
+
+fn main() {
+    for model in ["mlp", "transformer"] {
+        for (label, method, delta) in [
+            ("fedavg", Method::FedAvg, 0usize),
+            ("fedluar", Method::luar(2), 2),
+        ] {
+            let mut cfg = match RunConfig::benchmark(model) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("skip {model}: {e}");
+                    continue;
+                }
+            };
+            cfg.method = if delta > 0 {
+                Method::luar(if model == "transformer" { 6 } else { 2 })
+            } else {
+                method.clone()
+            };
+            cfg.eval_every = 0; // isolate the round loop
+            cfg.rounds = usize::MAX; // driven manually
+            let mut server = match Server::new(cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("skip {model}: {e:#}");
+                    continue;
+                }
+            };
+            let mut b = Bench::new(&format!("round_{model}")).with_times(500, 2500);
+            b.bench(label, None, || {
+                server.run_round().unwrap();
+            });
+        }
+        println!();
+    }
+    println!("note: fedluar/fedavg ~ 1.0 reproduces the paper's 'little to no");
+    println!("additional computational cost' claim (the savings are in bytes).");
+}

@@ -1,0 +1,76 @@
+//! PJRT execution latency per artifact: literal construction, execute,
+//! copy-out — the L3<->L2 boundary cost. Also compares the
+//! Pallas-backed aggregation graph against the pure-Rust fallback
+//! (EXPERIMENTS.md §Perf tracks this head-to-head).
+//!
+//! Requires `make artifacts`; skips a model if its artifacts are absent.
+
+use fedluar::bench_harness::Bench;
+use fedluar::data::{FedDataset, SynthSpec};
+use fedluar::model::{artifacts_dir, ModelMeta};
+use fedluar::rng::Rng;
+use fedluar::runtime::Engine;
+use fedluar::tensor;
+
+fn dataset(eng: &Engine) -> FedDataset {
+    let m = &eng.meta;
+    let spec = if m.is_text() {
+        SynthSpec::text(m.input_shape[0], 256, m.num_classes)
+    } else {
+        let (h, w, c) = match m.input_shape.len() {
+            1 => (m.input_shape[0], 1, 1),
+            _ => (m.input_shape[0], m.input_shape[1], m.input_shape[2]),
+        };
+        SynthSpec::vision(h, w, c, m.num_classes)
+    };
+    FedDataset::new(spec, 8, 128, 1.0, 512, 7)
+}
+
+fn main() {
+    for model in ["mlp", "cnn", "resnet8", "transformer"] {
+        let Ok(meta) = ModelMeta::load(artifacts_dir(), model) else {
+            eprintln!("skip {model}: run `make artifacts`");
+            continue;
+        };
+        let eng = Engine::load(meta).expect("engine");
+        let ds = dataset(&eng);
+        let params = eng.meta.load_init().unwrap();
+        let (feats, labels) = ds.client_batches(0, 0, eng.meta.tau, eng.meta.batch);
+        let d = eng.meta.dim;
+
+        let mut b = Bench::new(&format!("{model}_d{d}")).with_times(300, 1200);
+        b.bench("train_round(client local update)", None, || {
+            std::hint::black_box(
+                eng.train_round(&params, None, None, &feats, &labels, 0.01, 0.0, 0.0, 0.0)
+                    .unwrap(),
+            );
+        });
+        let (efeats, elabels, _) = ds.test_chunk(0, eng.meta.eval_batch);
+        b.bench("eval_chunk", None, || {
+            std::hint::black_box(eng.eval_chunk(&params, &efeats, &elabels).unwrap());
+        });
+
+        // Pallas agg graph vs pure-Rust mean at the same shape
+        let a = eng.meta.agg_clients;
+        let mut rng = Rng::seed_from_u64(1);
+        let updates: Vec<Vec<f32>> =
+            (0..a).map(|_| (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect()).collect();
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+        let elems = Some((a * d) as u64);
+        b.bench("agg_hlo(pallas mean+norms)", elems, || {
+            std::hint::black_box(eng.aggregate(&refs, &params).unwrap());
+        });
+        let mut out = vec![0.0f32; d];
+        b.bench("agg_rust(mean+norms fallback)", elems, || {
+            tensor::mean_rows(&refs, &mut out);
+            let mut acc = 0.0f64;
+            for lm in &eng.meta.layers {
+                acc += tensor::ssq(&out[lm.offset..lm.offset + lm.size]);
+                acc += tensor::ssq(&params[lm.offset..lm.offset + lm.size]);
+            }
+            std::hint::black_box(acc);
+        });
+        b.compare("agg_rust(mean+norms fallback)", "agg_hlo(pallas mean+norms)");
+        println!();
+    }
+}

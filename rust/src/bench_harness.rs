@@ -1,0 +1,144 @@
+//! Tiny criterion-style micro-benchmark harness (offline build: no
+//! external crates). Warms up, auto-scales iteration counts to a
+//! target measurement time, and reports mean/min/stddev per iteration.
+//!
+//! Used by all `rust/benches/*.rs` (harness = false) binaries; their
+//! output is captured into `bench_output.txt` and EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub std_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elems: Option<u64>,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.elems.map(|e| (e as f64 * 4.0) / self.mean_ns)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(700),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_times(mut self, warmup_ms: u64, measure_ms: u64) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.measure = Duration::from_millis(measure_ms);
+        self
+    }
+
+    /// Benchmark a closure; `elems` enables GB/s throughput reporting
+    /// (f32 elements touched per iteration).
+    pub fn bench<F: FnMut()>(&mut self, label: &str, elems: Option<u64>, mut f: F) -> Stats {
+        // Warmup + estimate per-iter cost.
+        let w0 = Instant::now();
+        let mut iters_warm = 0u64;
+        while w0.elapsed() < self.warmup {
+            f();
+            iters_warm += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / iters_warm.max(1) as f64;
+        // Sample in batches sized to ~20 samples over the measure window.
+        let batch = ((self.measure.as_secs_f64() / 20.0 / per_iter).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        let mut total_iters = 0u64;
+        while m0.elapsed() < self.measure || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 2000 {
+                break;
+            }
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var =
+            samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+        let stats = Stats { iters: total_iters, mean_ns: mean, min_ns: min, std_ns: var.sqrt(), elems };
+        let tput = stats
+            .throughput_gbps()
+            .map(|t| format!("  {:7.2} GB/s", t))
+            .unwrap_or_default();
+        println!(
+            "{}/{:<32} {:>12.0} ns/iter (min {:>12.0}, sd {:>10.0}, n={}){}",
+            self.name, label, mean, min, var.sqrt(), total_iters, tput
+        );
+        self.results.push((label.to_string(), stats));
+        stats
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
+    /// Print a ratio line comparing two recorded labels.
+    pub fn compare(&self, base: &str, other: &str) {
+        let find = |l: &str| self.results.iter().find(|(n, _)| n == l).map(|(_, s)| *s);
+        if let (Some(b), Some(o)) = (find(base), find(other)) {
+            println!(
+                "{}: {} / {} = {:.2}x",
+                self.name,
+                other,
+                base,
+                o.mean_ns / b.mean_ns
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("t").with_times(10, 30);
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", Some(1024), || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters > 0);
+        assert!(s.throughput_gbps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn compare_does_not_panic() {
+        let mut b = Bench::new("t").with_times(5, 15);
+        b.bench("a", None, || {
+            std::hint::black_box(1 + 1);
+        });
+        b.bench("b", None, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        b.compare("a", "b");
+        assert_eq!(b.results().len(), 2);
+    }
+}

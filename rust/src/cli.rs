@@ -1,0 +1,142 @@
+//! Minimal CLI argument parser (offline build: no clap).
+//!
+//! Supports `--key value`, `--key=value`, bare flags, and positional
+//! arguments, with typed getters and an unknown-flag check.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let v = self.flags.get(key).map(String::as_str);
+        if v.is_some() {
+            self.used.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("--{key} {v}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_parse::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.get_parse::<f64>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_parse::<u64>(key)?.unwrap_or(default))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Error on flags nobody consumed (catches typos).
+    pub fn check_unused(&self) -> Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !used.contains(k.as_str())).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+
+    pub fn positional_at(&self, i: usize) -> Result<&str> {
+        self.positional.get(i).map(String::as_str).context("missing positional argument")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("run sub --rounds 20 --model=cnn --quick");
+        assert_eq!(a.positional, vec!["run", "sub"]);
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 20);
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert!(a.has("quick"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--rounds abc");
+        assert!(a.get_usize("rounds", 0).is_err());
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.check_unused().is_err());
+        let _ = a.get("typo");
+        assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5).unwrap(), 1.5);
+        assert!(a.positional_at(0).is_err());
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // a flag followed by a non-flag consumes it as a value
+        let a = parse("--mode fast run");
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Communication accounting + a simple bandwidth model.
+//!
+//! The paper's headline metric is "Comm": upload bytes relative to
+//! FedAvg (clients skip uploading recycled layers; the download side
+//! is the full model either way, plus the delta layer-id list).
+//! `CommAccountant` tracks exact bytes per direction and per layer so
+//! Figure 3 (per-layer aggregation counts) and every Comm column fall
+//! out of the same ledger. `BandwidthModel` converts bytes into
+//! simulated wall-clock for the learning-curve x-axes.
+
+
+#[derive(Debug, Clone)]
+pub struct CommAccountant {
+    pub rounds: u64,
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Number of rounds each layer's update was actually uploaded
+    /// (Figure 3's y-axis, per aggregation).
+    pub layer_upload_rounds: Vec<u64>,
+    /// Upload bytes if every round had been full FedAvg (denominator
+    /// of the Comm column).
+    pub fedavg_up_bytes: u64,
+}
+
+impl CommAccountant {
+    pub fn new(num_layers: usize) -> Self {
+        CommAccountant {
+            rounds: 0,
+            up_bytes: 0,
+            down_bytes: 0,
+            layer_upload_rounds: vec![0; num_layers],
+            fedavg_up_bytes: 0,
+        }
+    }
+
+    /// Record one round.
+    /// `uploaded_layers`: (layer id, actual bytes uploaded per client).
+    /// `full_bytes`: the FedAvg per-client upload for the denominator.
+    /// `down_per_client`: broadcast bytes per client.
+    pub fn record_round(
+        &mut self,
+        active_clients: u64,
+        uploaded_layers: &[(usize, u64)],
+        full_bytes: u64,
+        down_per_client: u64,
+    ) {
+        self.rounds += 1;
+        self.down_bytes += active_clients * down_per_client;
+        self.fedavg_up_bytes += active_clients * full_bytes;
+        for &(layer, bytes) in uploaded_layers {
+            self.layer_upload_rounds[layer] += 1;
+            self.up_bytes += active_clients * bytes;
+        }
+    }
+
+    /// Record one round where every layer is uploaded but lossily
+    /// compressed (the sketching baselines): `total_up_bytes` is the
+    /// exact sum over clients after compression.
+    pub fn record_compressed_round(
+        &mut self,
+        active_clients: u64,
+        total_up_bytes: u64,
+        full_bytes: u64,
+        down_per_client: u64,
+    ) {
+        self.rounds += 1;
+        self.down_bytes += active_clients * down_per_client;
+        self.fedavg_up_bytes += active_clients * full_bytes;
+        self.up_bytes += total_up_bytes;
+        for c in self.layer_upload_rounds.iter_mut() {
+            *c += 1;
+        }
+    }
+
+    /// The paper's Comm column: upload cost normalized to FedAvg.
+    pub fn comm_ratio(&self) -> f64 {
+        if self.fedavg_up_bytes == 0 {
+            return 0.0;
+        }
+        self.up_bytes as f64 / self.fedavg_up_bytes as f64
+    }
+
+    /// Per-layer aggregation frequency (Figure 3): uploads / rounds.
+    pub fn layer_frequencies(&self) -> Vec<f64> {
+        if self.rounds == 0 {
+            return vec![0.0; self.layer_upload_rounds.len()];
+        }
+        self.layer_upload_rounds.iter().map(|&c| c as f64 / self.rounds as f64).collect()
+    }
+}
+
+/// Asymmetric link model typical of FL edge deployments.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthModel {
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    pub rtt_s: f64,
+}
+
+impl Default for BandwidthModel {
+    fn default() -> Self {
+        // Modest edge uplink; the regime where the paper's savings matter.
+        BandwidthModel { up_mbps: 20.0, down_mbps: 100.0, rtt_s: 0.05 }
+    }
+}
+
+impl BandwidthModel {
+    /// Seconds to complete one round's communication phase, assuming
+    /// the slowest active client bounds the round (synchronous FL).
+    pub fn round_seconds(&self, up_bytes_per_client: u64, down_bytes_per_client: u64) -> f64 {
+        let up = (up_bytes_per_client as f64 * 8.0) / (self.up_mbps * 1e6);
+        let down = (down_bytes_per_client as f64 * 8.0) / (self.down_mbps * 1e6);
+        up + down + self.rtt_s
+    }
+}
+
+/// Server memory-footprint model (paper Section 3.4 / Table 1):
+/// FedAvg holds `a` full client models; FedLUAR holds `a` partial
+/// models plus one recycled-update buffer of the skipped size.
+pub fn memory_footprint_bytes(a: u64, model_bytes: u64, recycled_bytes: u64) -> (u64, u64) {
+    let fedavg = a * model_bytes;
+    let fedluar = a * (model_bytes - recycled_bytes) + recycled_bytes;
+    (fedavg, fedluar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedavg_ratio_is_one() {
+        let mut acc = CommAccountant::new(3);
+        for _ in 0..5 {
+            acc.record_round(4, &[(0, 40), (1, 40), (2, 20)], 100, 100);
+        }
+        assert!((acc.comm_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(acc.layer_frequencies(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn skipped_layers_reduce_ratio() {
+        let mut acc = CommAccountant::new(2);
+        // layer 1 (60 bytes of 100) always skipped
+        for _ in 0..10 {
+            acc.record_round(2, &[(0, 40)], 100, 100);
+        }
+        assert!((acc.comm_ratio() - 0.4).abs() < 1e-12);
+        assert_eq!(acc.layer_frequencies(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn down_bytes_tracked() {
+        let mut acc = CommAccountant::new(1);
+        acc.record_round(3, &[(0, 10)], 10, 50);
+        assert_eq!(acc.down_bytes, 150);
+        assert_eq!(acc.up_bytes, 30);
+    }
+
+    #[test]
+    fn bandwidth_model_monotone() {
+        let bw = BandwidthModel::default();
+        assert!(bw.round_seconds(1_000_000, 0) > bw.round_seconds(100_000, 0));
+        assert!(bw.round_seconds(0, 0) >= bw.rtt_s);
+    }
+
+    #[test]
+    fn memory_footprint_matches_paper_formula() {
+        // a*(d-k)+k < a*d whenever k>0, a>1
+        let (avg, luar) = memory_footprint_bytes(32, 1000, 600);
+        assert_eq!(avg, 32_000);
+        assert_eq!(luar, 32 * 400 + 600);
+        assert!(luar < avg);
+    }
+}

@@ -1,0 +1,127 @@
+//! FedDropoutAvg (Gunesli et al.): each client drops a random subset
+//! of parameters from its upload at rate `fdr`; the server averages
+//! whatever arrives. The dropped set is seeded per (client, round), so
+//! the server can reconstruct it — cost = (1-rate) * d * 4 bytes, no
+//! index transmission (the shared seed plays the paper's role of the
+//! dropout mask agreed between client and server).
+//!
+//! Dropped coordinates are zeroed (not rescaled): with the server
+//! averaging over all clients this matches FedDropoutAvg's model
+//! averaging of partially-overlapping submodels in expectation up to
+//! the (1-rate) attenuation the original also exhibits per-coordinate;
+//! we apply the standard inverse-rate correction to stay unbiased.
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+
+pub struct DropoutAvg {
+    rate: f32,
+}
+
+impl DropoutAvg {
+    pub fn new(rate: f32) -> Self {
+        assert!((0.0..1.0).contains(&rate), "dropout rate must be in [0,1)");
+        DropoutAvg { rate }
+    }
+}
+
+impl UpdateCompressor for DropoutAvg {
+    fn compress(
+        &mut self,
+        client: usize,
+        update: &mut [f32],
+        _meta: &ModelMeta,
+        round: usize,
+        _rng: &mut Rng,
+    ) -> u64 {
+        // Seeded mask: reproducible for (client, round)
+        let mut mask_rng =
+            Rng::seed_from_u64(0xd20_0000 ^ ((client as u64) << 32) ^ round as u64);
+        let keep_scale = 1.0 / (1.0 - self.rate);
+        let mut kept = 0u64;
+        for v in update.iter_mut() {
+            if mask_rng.f32() < self.rate {
+                *v = 0.0;
+            } else {
+                *v *= keep_scale; // inverted-dropout unbiasedness
+                kept += 1;
+            }
+        }
+        kept * 4
+    }
+
+    fn label(&self) -> &'static str {
+        "fda"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn drop_fraction_near_rate() {
+        let meta = toy_meta();
+        let mut total_zero = 0usize;
+        let n_trials = 50;
+        let mut rng = Rng::seed_from_u64(0);
+        for t in 0..n_trials {
+            let mut u = vec![1.0f32; meta.dim];
+            DropoutAvg::new(0.5).compress(t, &mut u, &meta, 0, &mut rng);
+            total_zero += u.iter().filter(|&&v| v == 0.0).count();
+        }
+        let frac = total_zero as f64 / (n_trials * meta.dim) as f64;
+        assert!((frac - 0.5).abs() < 0.05, "drop fraction {frac}");
+    }
+
+    #[test]
+    fn kept_coords_are_rescaled() {
+        let meta = toy_meta();
+        let mut u = vec![1.0f32; meta.dim];
+        let mut rng = Rng::seed_from_u64(1);
+        DropoutAvg::new(0.5).compress(0, &mut u, &meta, 3, &mut rng);
+        for &v in &u {
+            assert!(v == 0.0 || (v - 2.0).abs() < 1e-6, "unexpected value {v}");
+        }
+    }
+
+    #[test]
+    fn mask_is_deterministic_per_client_round() {
+        let meta = toy_meta();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut a = toy_update(5, meta.dim);
+        let mut b = a.clone();
+        DropoutAvg::new(0.75).compress(3, &mut a, &meta, 9, &mut rng);
+        DropoutAvg::new(0.75).compress(3, &mut b, &meta, 9, &mut rng);
+        assert_eq!(a, b);
+        let mut c = toy_update(5, meta.dim);
+        DropoutAvg::new(0.75).compress(4, &mut c, &meta, 9, &mut rng);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let meta = toy_meta();
+        let base = toy_update(6, meta.dim);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut acc = vec![0.0f64; meta.dim];
+        let n = 600;
+        for r in 0..n {
+            let mut u = base.clone();
+            DropoutAvg::new(0.5).compress(r % 64, &mut u, &meta, r / 64, &mut rng);
+            for (a, &v) in acc.iter_mut().zip(&u) {
+                *a += v as f64;
+            }
+        }
+        let rmse: f64 = (acc
+            .iter()
+            .zip(&base)
+            .map(|(a, &b)| (a / n as f64 - b as f64).powi(2))
+            .sum::<f64>()
+            / meta.dim as f64)
+            .sqrt();
+        assert!(rmse < 0.12, "rmse {rmse}");
+    }
+}

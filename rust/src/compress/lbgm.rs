@@ -1,0 +1,148 @@
+//! LBGM — Look-back Gradient Multiplier (Azam et al., ICLR 2022).
+//!
+//! The insight the paper builds on: client gradient subspaces are
+//! approximately low-rank over time, so when a new update is nearly
+//! parallel to the client's previous transmitted direction, it's
+//! enough to send the scalar projection ("gradient multiplier")
+//! instead of the full vector. We implement the single-anchor variant:
+//! each client keeps its last fully-transmitted update as the anchor;
+//! if cos^2(update, anchor) >= threshold, only the projection
+//! coefficient crosses the wire and the update is replaced by its
+//! look-back reconstruction; otherwise the full update is sent and
+//! becomes the new anchor.
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+use crate::tensor;
+use std::collections::HashMap;
+
+pub struct Lbgm {
+    /// cos^2 threshold (the original's delta hyper-parameter).
+    threshold: f32,
+    anchors: HashMap<usize, Vec<f32>>,
+    pub scalar_rounds: u64,
+    pub full_rounds: u64,
+}
+
+impl Lbgm {
+    pub fn new(threshold: f32) -> Self {
+        assert!((0.0..=1.0).contains(&threshold));
+        Lbgm { threshold, anchors: HashMap::new(), scalar_rounds: 0, full_rounds: 0 }
+    }
+}
+
+impl UpdateCompressor for Lbgm {
+    fn compress(
+        &mut self,
+        client: usize,
+        update: &mut [f32],
+        _meta: &ModelMeta,
+        _round: usize,
+        _rng: &mut Rng,
+    ) -> u64 {
+        if let Some(anchor) = self.anchors.get(&client) {
+            let a_ssq = tensor::ssq(anchor);
+            let u_ssq = tensor::ssq(update);
+            if a_ssq > 1e-24 && u_ssq > 1e-24 {
+                let d = tensor::dot(update, anchor);
+                let cos2 = (d * d) / (a_ssq * u_ssq);
+                if cos2 >= self.threshold as f64 {
+                    // look-back: u <- (u . a / ||a||^2) a, send one scalar
+                    let coef = (d / a_ssq) as f32;
+                    for (u, &a) in update.iter_mut().zip(anchor.iter()) {
+                        *u = coef * a;
+                    }
+                    self.scalar_rounds += 1;
+                    return 4;
+                }
+            }
+        }
+        self.anchors.insert(client, update.to_vec());
+        self.full_rounds += 1;
+        (update.len() as u64) * 4
+    }
+
+    fn label(&self) -> &'static str {
+        "lbgm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn first_round_sends_full() {
+        let meta = toy_meta();
+        let mut l = Lbgm::new(0.9);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut u = toy_update(1, meta.dim);
+        let bytes = l.compress(0, &mut u, &meta, 0, &mut rng);
+        assert_eq!(bytes, 160);
+        assert_eq!(l.full_rounds, 1);
+    }
+
+    #[test]
+    fn parallel_update_sends_scalar() {
+        let meta = toy_meta();
+        let mut l = Lbgm::new(0.9);
+        let mut rng = Rng::seed_from_u64(1);
+        let base = toy_update(2, meta.dim);
+        let mut u0 = base.clone();
+        l.compress(0, &mut u0, &meta, 0, &mut rng);
+        // second update = 0.5 * base (perfectly parallel)
+        let mut u1: Vec<f32> = base.iter().map(|v| 0.5 * v).collect();
+        let bytes = l.compress(0, &mut u1, &meta, 1, &mut rng);
+        assert_eq!(bytes, 4);
+        assert_eq!(l.scalar_rounds, 1);
+        // reconstruction equals the true update here
+        for (a, b) in u1.iter().zip(base.iter().map(|v| 0.5 * v)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn orthogonal_update_sends_full_and_rebases() {
+        let meta = toy_meta();
+        let mut l = Lbgm::new(0.5);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut u0 = vec![0.0f32; meta.dim];
+        u0[0] = 1.0;
+        l.compress(0, &mut u0, &meta, 0, &mut rng);
+        let mut u1 = vec![0.0f32; meta.dim];
+        u1[1] = 1.0; // orthogonal
+        let bytes = l.compress(0, &mut u1, &meta, 1, &mut rng);
+        assert_eq!(bytes, 160);
+        assert_eq!(u1[1], 1.0, "full path must not modify the update");
+        // now parallel to the new anchor
+        let mut u2 = vec![0.0f32; meta.dim];
+        u2[1] = 3.0;
+        assert_eq!(l.compress(0, &mut u2, &meta, 2, &mut rng), 4);
+    }
+
+    #[test]
+    fn anchors_are_per_client() {
+        let meta = toy_meta();
+        let mut l = Lbgm::new(0.9);
+        let mut rng = Rng::seed_from_u64(3);
+        let base = toy_update(4, meta.dim);
+        let mut u0 = base.clone();
+        l.compress(0, &mut u0, &meta, 0, &mut rng);
+        // different client, parallel update: still full (no anchor yet)
+        let mut u1 = base.clone();
+        assert_eq!(l.compress(1, &mut u1, &meta, 1, &mut rng), 160);
+    }
+
+    #[test]
+    fn zero_update_goes_full_path() {
+        let meta = toy_meta();
+        let mut l = Lbgm::new(0.9);
+        let mut rng = Rng::seed_from_u64(4);
+        let mut u0 = toy_update(5, meta.dim);
+        l.compress(0, &mut u0, &meta, 0, &mut rng);
+        let mut z = vec![0.0f32; meta.dim];
+        assert_eq!(l.compress(0, &mut z, &meta, 1, &mut rng), 160);
+    }
+}

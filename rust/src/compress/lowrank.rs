@@ -1,0 +1,228 @@
+//! FedPara substitute: randomized low-rank projection of layer updates.
+//!
+//! FedPara re-parameterizes weights as low-rank Hadamard products,
+//! changing the architecture itself. That rewiring is orthogonal to
+//! the aggregation question this repo studies, so we reproduce the
+//! communication/noise profile instead: each matrix-shaped layer
+//! update M (m x n) is replaced by its rank-r randomized rangefinder
+//! approximation  M ≈ Q (Qᵀ M), Q = orth(M G), G seeded per round and
+//! shared with the server — upload cost r*(m+n)*4 bytes per layer.
+//! Vector-shaped arrays (biases) pass through untouched.
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+
+pub struct LowRank {
+    rank_ratio: f32,
+}
+
+impl LowRank {
+    pub fn new(rank_ratio: f32) -> Self {
+        assert!(rank_ratio > 0.0 && rank_ratio <= 1.0);
+        LowRank { rank_ratio }
+    }
+}
+
+/// Gram–Schmidt orthonormalization of the columns of `y` (m x r,
+/// column-major stored row-major as m rows of r). Degenerate columns
+/// are zeroed.
+fn orthonormalize(y: &mut [f32], m: usize, r: usize) {
+    for j in 0..r {
+        // subtract projections on previous columns
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += (y[i * r + j] as f64) * (y[i * r + p] as f64);
+            }
+            for i in 0..m {
+                y[i * r + j] -= (dot as f32) * y[i * r + p];
+            }
+        }
+        let mut nrm = 0.0f64;
+        for i in 0..m {
+            nrm += (y[i * r + j] as f64).powi(2);
+        }
+        let nrm = nrm.sqrt();
+        if nrm > 1e-12 {
+            let inv = (1.0 / nrm) as f32;
+            for i in 0..m {
+                y[i * r + j] *= inv;
+            }
+        } else {
+            for i in 0..m {
+                y[i * r + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Rank-r approximation of `mat` (m x n, row-major) in place.
+fn lowrank_approx(mat: &mut [f32], m: usize, n: usize, r: usize, rng: &mut Rng) {
+    if r >= m.min(n) {
+        return;
+    }
+    // Y = M G, G ~ N(0,1) n x r
+    let g: Vec<f32> = (0..n * r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut y = vec![0.0f32; m * r];
+    for i in 0..m {
+        for k in 0..n {
+            let v = mat[i * n + k];
+            if v != 0.0 {
+                let grow = &g[k * r..k * r + r];
+                let yrow = &mut y[i * r..i * r + r];
+                for j in 0..r {
+                    yrow[j] += v * grow[j];
+                }
+            }
+        }
+    }
+    orthonormalize(&mut y, m, r);
+    // B = Qᵀ M  (r x n)
+    let mut b = vec![0.0f32; r * n];
+    for i in 0..m {
+        for j in 0..r {
+            let q = y[i * r + j];
+            if q != 0.0 {
+                for k in 0..n {
+                    b[j * n + k] += q * mat[i * n + k];
+                }
+            }
+        }
+    }
+    // M <- Q B
+    for i in 0..m {
+        for k in 0..n {
+            let mut acc = 0.0f32;
+            for j in 0..r {
+                acc += y[i * r + j] * b[j * n + k];
+            }
+            mat[i * n + k] = acc;
+        }
+    }
+}
+
+/// View an array's shape as a matrix: dense (m,n) stays; conv
+/// (kh,kw,ci,co) folds to (kh*kw*ci, co); vectors return None.
+fn matrix_shape(shape: &[usize]) -> Option<(usize, usize)> {
+    match shape.len() {
+        2 => Some((shape[0], shape[1])),
+        4 => Some((shape[0] * shape[1] * shape[2], shape[3])),
+        _ => None,
+    }
+}
+
+impl UpdateCompressor for LowRank {
+    fn compress(
+        &mut self,
+        client: usize,
+        update: &mut [f32],
+        meta: &ModelMeta,
+        round: usize,
+        _rng: &mut Rng,
+    ) -> u64 {
+        let mut bytes = 0u64;
+        for lm in &meta.layers {
+            for am in &lm.arrays {
+                let sl = &mut update[am.offset..am.offset + am.size];
+                match matrix_shape(&am.shape) {
+                    Some((m, n)) if m.min(n) > 1 => {
+                        let full_rank = m.min(n);
+                        let r = (((full_rank as f32) * self.rank_ratio).round() as usize)
+                            .clamp(1, full_rank);
+                        if r < full_rank {
+                            // projection seed shared with server
+                            let mut prng = Rng::seed_from_u64(
+                                0x10_a11c ^ ((client as u64) << 32) ^ ((round as u64) << 8),
+                            );
+                            lowrank_approx(sl, m, n, r, &mut prng);
+                            bytes += (r * (m + n)) as u64 * 4;
+                        } else {
+                            bytes += (am.size as u64) * 4;
+                        }
+                    }
+                    _ => {
+                        bytes += (am.size as u64) * 4;
+                    }
+                }
+            }
+        }
+        bytes
+    }
+
+    fn label(&self) -> &'static str {
+        "fedpara"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn exact_for_rank_one_matrix() {
+        // M = u vᵀ is rank 1; a rank-1 rangefinder recovers it exactly.
+        let (m, n) = (6, 4);
+        let u: Vec<f32> = (1..=6).map(|i| i as f32).collect();
+        let v: Vec<f32> = (1..=4).map(|i| i as f32 * 0.5).collect();
+        let mut mat = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                mat[i * n + j] = u[i] * v[j];
+            }
+        }
+        let orig = mat.clone();
+        let mut rng = Rng::seed_from_u64(7);
+        lowrank_approx(&mut mat, m, n, 1, &mut rng);
+        for (a, b) in mat.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn full_rank_request_is_identity() {
+        let mut mat = toy_update(1, 24);
+        let orig = mat.clone();
+        let mut rng = Rng::seed_from_u64(8);
+        lowrank_approx(&mut mat, 6, 4, 4, &mut rng);
+        assert_eq!(mat, orig);
+    }
+
+    #[test]
+    fn approximation_reduces_energy_but_not_to_zero() {
+        let mut mat = toy_update(2, 6 * 4);
+        let orig_ssq: f64 = mat.iter().map(|&v| (v as f64).powi(2)).sum();
+        let mut rng = Rng::seed_from_u64(9);
+        lowrank_approx(&mut mat, 6, 4, 2, &mut rng);
+        let new_ssq: f64 = mat.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(new_ssq > 0.1 * orig_ssq, "too much energy lost");
+        assert!(new_ssq <= orig_ssq * 1.001, "projection must not add energy");
+    }
+
+    #[test]
+    fn compressor_touches_only_matrix_arrays() {
+        let meta = toy_meta();
+        let orig = toy_update(3, meta.dim);
+        let mut u = orig.clone();
+        let mut rng = Rng::seed_from_u64(10);
+        let bytes = LowRank::new(0.25).compress(0, &mut u, &meta, 0, &mut rng);
+        // bias (offset 24..28) untouched
+        assert_eq!(&u[24..28], &orig[24..28]);
+        // rank-1 of 6x4: 1*(6+4)*4 = 40 bytes; fc1 4x3 rank1: (4+3)*4=28;
+        // bias 4*4 = 16
+        assert_eq!(bytes, 40 + 28 + 16);
+    }
+
+    #[test]
+    fn deterministic_per_client_round() {
+        let meta = toy_meta();
+        let mut rng = Rng::seed_from_u64(11);
+        let base = toy_update(4, meta.dim);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        LowRank::new(0.25).compress(2, &mut a, &meta, 5, &mut rng);
+        LowRank::new(0.25).compress(2, &mut b, &meta, 5, &mut rng);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,150 @@
+//! PruneFL-style magnitude pruning (Jiang et al.).
+//!
+//! PruneFL maintains a global pruning mask over model parameters,
+//! reconfigured periodically from accumulated importance; clients only
+//! train and communicate unpruned coordinates. We reproduce the
+//! communication pipeline: a shared mask of the top `keep_ratio`
+//! coordinates by accumulated |update| magnitude, refreshed every
+//! `reconfig_every` rounds. Because the mask is shared server state,
+//! no index transmission is needed — cost = keep_ratio * d * 4 bytes.
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+
+pub struct Prune {
+    keep_ratio: f32,
+    reconfig_every: usize,
+    mask: Vec<bool>,
+    /// Accumulated |update| importance since the last reconfiguration.
+    importance: Vec<f64>,
+    last_reconfig: Option<usize>,
+}
+
+impl Prune {
+    pub fn new(keep_ratio: f32, reconfig_every: usize) -> Self {
+        assert!((0.0..=1.0).contains(&keep_ratio));
+        Prune {
+            keep_ratio,
+            reconfig_every: reconfig_every.max(1),
+            mask: Vec::new(),
+            importance: Vec::new(),
+            last_reconfig: None,
+        }
+    }
+
+    pub fn kept(&self) -> usize {
+        self.mask.iter().filter(|&&b| b).count()
+    }
+
+    fn reconfigure(&mut self, d: usize) {
+        let keep = ((d as f32) * self.keep_ratio).round().max(1.0) as usize;
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&a, &b| {
+            self.importance[b].partial_cmp(&self.importance[a]).unwrap().then(a.cmp(&b))
+        });
+        self.mask = vec![false; d];
+        for &i in idx.iter().take(keep) {
+            self.mask[i] = true;
+        }
+        self.importance.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+impl UpdateCompressor for Prune {
+    fn compress(
+        &mut self,
+        _client: usize,
+        update: &mut [f32],
+        _meta: &ModelMeta,
+        round: usize,
+        _rng: &mut Rng,
+    ) -> u64 {
+        let d = update.len();
+        if self.importance.len() != d {
+            self.importance = vec![0.0; d];
+            // first round: keep everything until importance accrues
+            self.mask = vec![true; d];
+            self.last_reconfig = Some(round);
+        }
+        for (imp, &u) in self.importance.iter_mut().zip(update.iter()) {
+            *imp += u.abs() as f64;
+        }
+        if round.saturating_sub(self.last_reconfig.unwrap_or(0)) >= self.reconfig_every
+            || (self.last_reconfig == Some(round) && round > 0)
+        {
+            self.reconfigure(d);
+            self.last_reconfig = Some(round);
+        }
+        // First reconfig happens as soon as we have reconfig_every rounds
+        // of importance; before that the mask may still be all-true.
+        if self.mask.iter().all(|&b| b) && round >= self.reconfig_every {
+            self.reconfigure(d);
+            self.last_reconfig = Some(round);
+        }
+        let mut kept = 0u64;
+        for (u, &m) in update.iter_mut().zip(&self.mask) {
+            if m {
+                kept += 1;
+            } else {
+                *u = 0.0;
+            }
+        }
+        kept * 4
+    }
+
+    fn label(&self) -> &'static str {
+        "prunefl"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn first_rounds_are_dense() {
+        let meta = toy_meta();
+        let mut p = Prune::new(0.25, 5);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut u = toy_update(1, meta.dim);
+        let bytes = p.compress(0, &mut u, &meta, 0, &mut rng);
+        assert_eq!(bytes, 40 * 4, "round 0 should be dense");
+    }
+
+    #[test]
+    fn mask_sparsifies_after_reconfig() {
+        let meta = toy_meta();
+        let mut p = Prune::new(0.25, 3);
+        let mut rng = Rng::seed_from_u64(1);
+        let mut bytes = 0;
+        for round in 0..6 {
+            let mut u = toy_update(10 + round as u64, meta.dim);
+            bytes = p.compress(0, &mut u, &meta, round, &mut rng);
+            if round >= 3 {
+                let nz = u.iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(nz, 10, "round {round}: {nz} nonzeros");
+            }
+        }
+        assert_eq!(bytes, 10 * 4);
+        assert_eq!(p.kept(), 10);
+    }
+
+    #[test]
+    fn mask_keeps_high_importance_coords() {
+        let meta = toy_meta();
+        let mut p = Prune::new(0.1, 2);
+        let mut rng = Rng::seed_from_u64(2);
+        for round in 0..5 {
+            let mut u = vec![0.01f32; meta.dim];
+            // coordinate 7 always large
+            u[7] = 10.0;
+            p.compress(0, &mut u, &meta, round, &mut rng);
+        }
+        let mut u = vec![0.01f32; meta.dim];
+        u[7] = 10.0;
+        p.compress(0, &mut u, &meta, 5, &mut rng);
+        assert!(u[7] != 0.0, "dominant coordinate pruned");
+    }
+}

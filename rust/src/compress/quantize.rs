@@ -1,0 +1,142 @@
+//! FedPAQ-style stochastic uniform quantization (Reisizadeh et al.).
+//!
+//! Per layer: the update is quantized to `levels` uniform levels over
+//! its [min, max] range with *stochastic rounding*, which keeps the
+//! quantizer unbiased (E[q(x)] = x) — the property FedPAQ's analysis
+//! needs. Upload cost: ceil(log2(levels)) bits per element plus the
+//! two f32 range scalars per layer.
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+
+pub struct Quantize {
+    levels: u32,
+}
+
+impl Quantize {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 2, "need at least 2 quantization levels");
+        Quantize { levels }
+    }
+
+    pub fn bits_per_element(&self) -> u32 {
+        32 - (self.levels - 1).leading_zeros()
+    }
+}
+
+impl UpdateCompressor for Quantize {
+    fn compress(
+        &mut self,
+        _client: usize,
+        update: &mut [f32],
+        meta: &ModelMeta,
+        _round: usize,
+        rng: &mut Rng,
+    ) -> u64 {
+        let mut bits: u64 = 0;
+        for lm in &meta.layers {
+            let sl = &mut update[lm.offset..lm.offset + lm.size];
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in sl.iter() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if !lo.is_finite() || hi <= lo {
+                bits += 2 * 32;
+                continue;
+            }
+            let step = (hi - lo) / (self.levels - 1) as f32;
+            for v in sl.iter_mut() {
+                let t = (*v - lo) / step;
+                let floor = t.floor();
+                let frac = t - floor;
+                // stochastic rounding: up with probability frac
+                let q = if rng.f32() < frac { floor + 1.0 } else { floor };
+                *v = lo + q.min((self.levels - 1) as f32) * step;
+            }
+            bits += (lm.size as u64) * self.bits_per_element() as u64 + 2 * 32;
+        }
+        bits.div_ceil(8)
+    }
+
+    fn label(&self) -> &'static str {
+        "fedpaq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn bits_per_element_log2() {
+        assert_eq!(Quantize::new(2).bits_per_element(), 1);
+        assert_eq!(Quantize::new(16).bits_per_element(), 4);
+        assert_eq!(Quantize::new(17).bits_per_element(), 5);
+        assert_eq!(Quantize::new(256).bits_per_element(), 8);
+    }
+
+    #[test]
+    fn quantization_is_bounded_by_step() {
+        let meta = toy_meta();
+        let orig = toy_update(2, meta.dim);
+        let mut u = orig.clone();
+        let mut rng = Rng::seed_from_u64(1);
+        Quantize::new(16).compress(0, &mut u, &meta, 0, &mut rng);
+        for lm in &meta.layers {
+            let sl = &orig[lm.offset..lm.offset + lm.size];
+            let lo = sl.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = sl.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let step = (hi - lo) / 15.0;
+            for (a, b) in u[lm.offset..lm.offset + lm.size].iter().zip(sl) {
+                assert!((a - b).abs() <= step + 1e-6, "{a} vs {b} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let meta = toy_meta();
+        let orig = toy_update(3, meta.dim);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut acc = vec![0.0f64; meta.dim];
+        let n = 400;
+        for _ in 0..n {
+            let mut u = orig.clone();
+            Quantize::new(4).compress(0, &mut u, &meta, 0, &mut rng);
+            for (a, &v) in acc.iter_mut().zip(&u) {
+                *a += v as f64;
+            }
+        }
+        // mean of quantized ~= original (unbiasedness), coarse 4 levels
+        let mut max_err = 0.0f64;
+        for (a, &o) in acc.iter().zip(&orig) {
+            max_err = max_err.max((a / n as f64 - o as f64).abs());
+        }
+        assert!(max_err < 0.15, "bias {max_err}");
+    }
+
+    #[test]
+    fn byte_cost_scales_with_levels() {
+        let meta = toy_meta();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut u4 = toy_update(4, meta.dim);
+        let b4 = Quantize::new(4).compress(0, &mut u4, &meta, 0, &mut rng);
+        let mut u256 = toy_update(4, meta.dim);
+        let b256 = Quantize::new(256).compress(0, &mut u256, &meta, 0, &mut rng);
+        assert!(b4 < b256);
+        // 2 bits/elem * 40 + 2 ranges * 2 layers
+        assert_eq!(b4, (40 * 2 + 4 * 32_u64).div_ceil(8));
+    }
+
+    #[test]
+    fn constant_layer_is_passthrough() {
+        let meta = toy_meta();
+        let mut u = vec![0.5f32; meta.dim];
+        let mut rng = Rng::seed_from_u64(4);
+        Quantize::new(8).compress(0, &mut u, &meta, 0, &mut rng);
+        assert!(u.iter().all(|&v| v == 0.5));
+    }
+}

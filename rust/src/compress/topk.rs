@@ -1,0 +1,91 @@
+//! Classic top-k update sparsification (Alistarh et al.): keep the
+//! `keep_ratio` largest-magnitude coordinates, zero the rest. Cost is
+//! k values + k indices (4+4 bytes each).
+
+use super::UpdateCompressor;
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+
+pub struct TopK {
+    keep_ratio: f32,
+}
+
+impl TopK {
+    pub fn new(keep_ratio: f32) -> Self {
+        assert!((0.0..=1.0).contains(&keep_ratio));
+        TopK { keep_ratio }
+    }
+}
+
+impl UpdateCompressor for TopK {
+    fn compress(
+        &mut self,
+        _client: usize,
+        update: &mut [f32],
+        _meta: &ModelMeta,
+        _round: usize,
+        _rng: &mut Rng,
+    ) -> u64 {
+        let d = update.len();
+        let k = (((d as f32) * self.keep_ratio).round() as usize).clamp(1, d);
+        if k == d {
+            return (d as u64) * 4;
+        }
+        // Select the k-th largest |value| via select_nth on a copy.
+        let mut mags: Vec<f32> = update.iter().map(|v| v.abs()).collect();
+        let (_, kth, _) = mags.select_nth_unstable_by(d - k, |a, b| a.partial_cmp(b).unwrap());
+        let thresh = *kth;
+        let mut kept = 0usize;
+        for v in update.iter_mut() {
+            if v.abs() >= thresh && kept < k {
+                kept += 1;
+            } else {
+                *v = 0.0;
+            }
+        }
+        (kept as u64) * 8
+    }
+
+    fn label(&self) -> &'static str {
+        "topk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_k_largest() {
+        let meta = toy_meta();
+        let mut u: Vec<f32> = (0..meta.dim).map(|i| i as f32 - 20.0).collect();
+        let mut rng = Rng::seed_from_u64(0);
+        let bytes = TopK::new(0.25).compress(0, &mut u, &meta, 0, &mut rng);
+        let nz = u.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 10);
+        assert_eq!(bytes, 80);
+        // the largest magnitude (-20) survives
+        assert!(u.contains(&-20.0));
+    }
+
+    #[test]
+    fn full_ratio_is_identity() {
+        let meta = toy_meta();
+        let orig = toy_update(1, meta.dim);
+        let mut u = orig.clone();
+        let mut rng = Rng::seed_from_u64(1);
+        let bytes = TopK::new(1.0).compress(0, &mut u, &meta, 0, &mut rng);
+        assert_eq!(u, orig);
+        assert_eq!(bytes, 160);
+    }
+
+    #[test]
+    fn tiny_ratio_keeps_at_least_one() {
+        let meta = toy_meta();
+        let mut u = toy_update(2, meta.dim);
+        let mut rng = Rng::seed_from_u64(2);
+        TopK::new(0.0).compress(0, &mut u, &meta, 0, &mut rng);
+        assert_eq!(u.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+}

@@ -1,0 +1,602 @@
+//! Experiment configuration: CLI/file-loadable description of one FL
+//! run — benchmark, federation topology, method, and optimizer. The
+//! four built-in benchmarks mirror the paper's Table 6 hyper-parameter
+//! block (CPU-scaled; DESIGN.md §Substitutions).
+//!
+//! Offline build: no serde/toml, so config files use a plain
+//! `key = value` format parsed in-tree (`RunConfig::load`/`save`);
+//! method/optimizer specs use compact strings like `luar:delta=2`.
+
+use crate::data::{SynthKind, SynthSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which layer-selection scheme picks the recycling set (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionScheme {
+    /// Weighted random sampling by 1/s_{t,l} (the paper's LUAR).
+    Luar,
+    /// Uniform random delta layers.
+    Random,
+    /// First delta layers (input side).
+    Top,
+    /// Last delta layers (output side).
+    Bottom,
+    /// Smallest gradient norm (the baseline the paper argues against).
+    GradNorm,
+    /// Deterministically the delta smallest s_{t,l} (no resampling).
+    Deterministic,
+}
+
+impl SelectionScheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "luar" => Self::Luar,
+            "random" => Self::Random,
+            "top" => Self::Top,
+            "bottom" => Self::Bottom,
+            "grad_norm" | "gradnorm" => Self::GradNorm,
+            "deterministic" => Self::Deterministic,
+            other => bail!("unknown selection scheme {other}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Luar => "luar",
+            Self::Random => "random",
+            Self::Top => "top",
+            Self::Bottom => "bottom",
+            Self::GradNorm => "grad_norm",
+            Self::Deterministic => "deterministic",
+        }
+    }
+}
+
+/// What to do with the selected layers' updates (Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecycleMode {
+    /// Re-apply the previous global update for the layer (FedLUAR).
+    Recycle,
+    /// Apply nothing for the layer (the "Dropping" ablation).
+    Drop,
+}
+
+/// Communication-efficiency method under test (Table 2 rows).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// Full model aggregation every round.
+    FedAvg,
+    /// The paper's contribution (Alg. 1 + 2). `delta = 0` with
+    /// `adaptive = true` means the kappa-adaptive controller picks the
+    /// recycling depth each round (Theorem 2 bound as policy).
+    Luar { delta: usize, scheme: SelectionScheme, mode: RecycleMode, adaptive: bool },
+    /// FedPAQ: stochastic uniform quantization to `levels` levels.
+    Quantize { levels: u32 },
+    /// FedBAT-style sign binarization with per-layer scale + error feedback.
+    Binarize,
+    /// PruneFL-style magnitude pruning of updates, mask refreshed every
+    /// `reconfig_every` rounds.
+    Prune { keep_ratio: f32, reconfig_every: usize },
+    /// FedDropoutAvg: random parameter dropout at rate `rate`.
+    DropoutAvg { rate: f32 },
+    /// LBGM: look-back gradient multiplier (send a scalar when the
+    /// update stays within `threshold` cosine of the anchor direction).
+    Lbgm { threshold: f32 },
+    /// Top-k sparsification (classic sketching baseline).
+    TopK { keep_ratio: f32 },
+    /// FedPara substitute: rank-limited layer updates (DESIGN.md).
+    LowRank { rank_ratio: f32 },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::FedAvg => "FedAvg".into(),
+            Method::Luar {
+                mode: RecycleMode::Recycle,
+                scheme: SelectionScheme::Luar,
+                adaptive,
+                ..
+            } => {
+                if *adaptive { "FedLUAR-auto".into() } else { "FedLUAR".into() }
+            }
+            Method::Luar { mode: RecycleMode::Drop, .. } => "LUAR-Drop".into(),
+            Method::Luar { scheme, .. } => format!("LUAR[{}]", scheme.name()),
+            Method::Quantize { .. } => "FedPAQ".into(),
+            Method::Binarize => "FedBAT".into(),
+            Method::Prune { .. } => "PruneFL".into(),
+            Method::DropoutAvg { .. } => "FDA".into(),
+            Method::Lbgm { .. } => "LBGM".into(),
+            Method::TopK { .. } => "TopK".into(),
+            Method::LowRank { .. } => "FedPara".into(),
+        }
+    }
+
+    pub fn luar(delta: usize) -> Self {
+        Method::Luar {
+            delta,
+            scheme: SelectionScheme::Luar,
+            mode: RecycleMode::Recycle,
+            adaptive: false,
+        }
+    }
+
+    /// Kappa-adaptive FedLUAR (`luar:delta=auto`).
+    pub fn luar_auto() -> Self {
+        Method::Luar {
+            delta: 1,
+            scheme: SelectionScheme::Luar,
+            mode: RecycleMode::Recycle,
+            adaptive: true,
+        }
+    }
+
+    /// Parse a compact method spec: `fedavg`, `luar:delta=2`,
+    /// `luar:delta=2,scheme=random,mode=drop`, `quantize:levels=16`,
+    /// `prune:keep=0.5,every=50`, `dropout:rate=0.5`, `lbgm:thresh=0.95`,
+    /// `topk:keep=0.1`, `lowrank:ratio=0.25`, `binarize`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, parse_kv(a)?),
+            None => (spec, BTreeMap::new()),
+        };
+        let getf = |k: &str, d: f32| -> Result<f32> {
+            args.get(k).map(|v| v.parse::<f32>().context(k.to_string())).unwrap_or(Ok(d))
+        };
+        let getu = |k: &str, d: usize| -> Result<usize> {
+            args.get(k).map(|v| v.parse::<usize>().context(k.to_string())).unwrap_or(Ok(d))
+        };
+        Ok(match name {
+            "fedavg" => Method::FedAvg,
+            "luar" => {
+                let scheme = match args.get("scheme") {
+                    Some(s) => SelectionScheme::parse(s)?,
+                    None => SelectionScheme::Luar,
+                };
+                let mode = match args.get("mode").map(String::as_str) {
+                    Some("drop") => RecycleMode::Drop,
+                    Some("recycle") | None => RecycleMode::Recycle,
+                    Some(other) => bail!("unknown mode {other}"),
+                };
+                if args.get("delta").map(String::as_str) == Some("auto") {
+                    Method::Luar { delta: 1, scheme, mode, adaptive: true }
+                } else {
+                    Method::Luar { delta: getu("delta", 2)?, scheme, mode, adaptive: false }
+                }
+            }
+            "quantize" | "fedpaq" => Method::Quantize { levels: getu("levels", 16)? as u32 },
+            "binarize" | "fedbat" => Method::Binarize,
+            "prune" | "prunefl" => Method::Prune {
+                keep_ratio: getf("keep", 0.5)?,
+                reconfig_every: getu("every", 50)?,
+            },
+            "dropout" | "fda" => Method::DropoutAvg { rate: getf("rate", 0.5)? },
+            "lbgm" => Method::Lbgm { threshold: getf("thresh", 0.95)? },
+            "topk" => Method::TopK { keep_ratio: getf("keep", 0.1)? },
+            "lowrank" | "fedpara" => Method::LowRank { rank_ratio: getf("ratio", 0.25)? },
+            other => bail!("unknown method {other}"),
+        })
+    }
+
+    pub fn spec_string(&self) -> String {
+        match self {
+            Method::FedAvg => "fedavg".into(),
+            Method::Luar { delta, scheme, mode, adaptive } => format!(
+                "luar:delta={},scheme={},mode={}",
+                if *adaptive { "auto".to_string() } else { delta.to_string() },
+                scheme.name(),
+                if *mode == RecycleMode::Drop { "drop" } else { "recycle" }
+            ),
+            Method::Quantize { levels } => format!("quantize:levels={levels}"),
+            Method::Binarize => "binarize".into(),
+            Method::Prune { keep_ratio, reconfig_every } => {
+                format!("prune:keep={keep_ratio},every={reconfig_every}")
+            }
+            Method::DropoutAvg { rate } => format!("dropout:rate={rate}"),
+            Method::Lbgm { threshold } => format!("lbgm:thresh={threshold}"),
+            Method::TopK { keep_ratio } => format!("topk:keep={keep_ratio}"),
+            Method::LowRank { rank_ratio } => format!("lowrank:ratio={rank_ratio}"),
+        }
+    }
+}
+
+fn parse_kv(s: &str) -> Result<BTreeMap<String, String>> {
+    let mut m = BTreeMap::new();
+    for part in s.split(',') {
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once('=').with_context(|| format!("bad arg {part:?}"))?;
+        m.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(m)
+}
+
+/// Server-side optimizer applied to the aggregated update (Table 3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerOptCfg {
+    /// x += delta (vanilla FedAvg server).
+    Sgd,
+    /// FedOpt / FedAdam with server learning rate.
+    Adam { lr: f32 },
+    /// FedACG: lookahead momentum broadcast + momentum accumulation.
+    Acg { lambda: f32 },
+    /// FedMut: mutate the broadcast model per client by +/- the last
+    /// global update scaled by `alpha`.
+    Mut { alpha: f32 },
+}
+
+impl ServerOptCfg {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, parse_kv(a)?),
+            None => (spec, BTreeMap::new()),
+        };
+        let getf = |k: &str, d: f32| -> f32 {
+            args.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Ok(match name {
+            "sgd" => Self::Sgd,
+            "adam" | "fedopt" => Self::Adam { lr: getf("lr", 0.9) },
+            "acg" | "fedacg" => Self::Acg { lambda: getf("lambda", 0.7) },
+            "mut" | "fedmut" => Self::Mut { alpha: getf("alpha", 0.5) },
+            other => bail!("unknown server optimizer {other}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sgd => "SGD",
+            Self::Adam { .. } => "FedOpt",
+            Self::Acg { .. } => "FedACG",
+            Self::Mut { .. } => "FedMut",
+        }
+    }
+}
+
+/// Client-side local objective shaping (FedProx / MOON-lite).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ClientOptCfg {
+    /// Proximal pull toward the broadcast model (FedProx mu; also the
+    /// FedACG penalty beta).
+    pub mu_global: f32,
+    /// MOON-lite repulsion from the client's previous local model.
+    pub mu_prev: f32,
+}
+
+/// Full description of one FL run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub rounds: usize,
+    pub num_clients: usize,
+    pub active_clients: usize,
+    /// Dirichlet concentration (paper: 0.1 vision, 0.5 text).
+    pub alpha: f64,
+    pub per_client: usize,
+    pub test_size: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// Rounds at which lr is multiplied by 0.1 (paper's decay epochs).
+    pub lr_decay_rounds: Vec<usize>,
+    pub seed: u64,
+    pub method: Method,
+    /// When `method` is LUAR, optionally apply this baseline's lossy
+    /// compression to the *uploaded* layers too (Table 3's
+    /// "FedPAQ + LUAR" style composition).
+    pub luar_compress: Option<Method>,
+    pub server_opt: ServerOptCfg,
+    pub client_opt: ClientOptCfg,
+    pub eval_every: usize,
+    /// Synthetic data difficulty (noise scale).
+    pub difficulty: f32,
+    /// Per-round probability that an active client fails before
+    /// uploading (straggler/failure injection; server aggregates over
+    /// survivors).
+    pub client_failure_rate: f64,
+}
+
+impl RunConfig {
+    /// Paper-aligned defaults for each built-in benchmark.
+    pub fn benchmark(model: &str) -> Result<Self> {
+        let (lr, alpha, per_client, difficulty) = match model {
+            "mlp" => (0.05, 0.5, 128, 2.5),
+            "cnn" => (0.02, 0.1, 120, 1.5),
+            "resnet8" => (0.02, 0.1, 128, 2.0),
+            "transformer" => (0.02, 0.5, 128, 5.0),
+            other => bail!("unknown benchmark {other}"),
+        };
+        Ok(RunConfig {
+            model: model.to_string(),
+            rounds: 60,
+            num_clients: 128,
+            active_clients: 32,
+            alpha,
+            per_client,
+            test_size: 1024,
+            lr,
+            weight_decay: 1e-4,
+            lr_decay_rounds: vec![],
+            seed: 42,
+            method: Method::FedAvg,
+            luar_compress: None,
+            server_opt: ServerOptCfg::Sgd,
+            client_opt: ClientOptCfg::default(),
+            eval_every: 5,
+            difficulty,
+            client_failure_rate: 0.0,
+        })
+    }
+
+    pub fn with_method(mut self, m: Method) -> Self {
+        self.method = m;
+        self
+    }
+
+    pub fn with_rounds(mut self, r: usize) -> Self {
+        self.rounds = r;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Synthetic data spec matching the model's input signature.
+    pub fn synth_spec(
+        &self,
+        input_shape: &[usize],
+        num_classes: usize,
+        is_text: bool,
+    ) -> SynthSpec {
+        if is_text {
+            SynthSpec {
+                kind: SynthKind::Text { seq: input_shape[0], vocab: 256 },
+                num_classes,
+                difficulty: self.difficulty,
+            }
+        } else {
+            let (h, w, c) = match input_shape.len() {
+                1 => (input_shape[0], 1, 1),
+                3 => (input_shape[0], input_shape[1], input_shape[2]),
+                _ => panic!("unsupported input rank {}", input_shape.len()),
+            };
+            SynthSpec {
+                kind: SynthKind::Vision { h, w, c },
+                num_classes,
+                difficulty: self.difficulty,
+            }
+        }
+    }
+
+    /// Learning rate at a given round after staged decay.
+    pub fn lr_at(&self, round: usize) -> f32 {
+        let mut lr = self.lr;
+        for &r in &self.lr_decay_rounds {
+            if round >= r {
+                lr *= 0.1;
+            }
+        }
+        lr
+    }
+
+    /// Serialize to the in-tree `key = value` config format.
+    pub fn save_kv(&self) -> String {
+        let decay =
+            self.lr_decay_rounds.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(" ");
+        format!(
+            "model = {}\nrounds = {}\nnum_clients = {}\nactive_clients = {}\n\
+             alpha = {}\nper_client = {}\ntest_size = {}\nlr = {}\nweight_decay = {}\n\
+             lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
+             mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
+             client_failure_rate = {}\n",
+            self.model,
+            self.rounds,
+            self.num_clients,
+            self.active_clients,
+            self.alpha,
+            self.per_client,
+            self.test_size,
+            self.lr,
+            self.weight_decay,
+            decay,
+            self.seed,
+            self.method.spec_string(),
+            self.luar_compress.as_ref().map(|m| m.spec_string()).unwrap_or_else(|| "none".into()),
+            match &self.server_opt {
+                ServerOptCfg::Sgd => "sgd".to_string(),
+                ServerOptCfg::Adam { lr } => format!("adam:lr={lr}"),
+                ServerOptCfg::Acg { lambda } => format!("acg:lambda={lambda}"),
+                ServerOptCfg::Mut { alpha } => format!("mut:alpha={alpha}"),
+            },
+            self.client_opt.mu_global,
+            self.client_opt.mu_prev,
+            self.eval_every,
+            self.difficulty,
+            self.client_failure_rate,
+        )
+    }
+
+    /// Parse the `key = value` format (comments with '#', blank lines ok).
+    pub fn load_kv(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) =
+                line.split_once('=').with_context(|| format!("line {}: missing '='", i + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("missing config key {k}"))
+        };
+        let mut cfg = RunConfig::benchmark(get("model")?)?;
+        macro_rules! set {
+            ($field:ident, $key:literal) => {
+                if let Some(v) = kv.get($key) {
+                    cfg.$field = v.parse().with_context(|| format!("bad {}", $key))?;
+                }
+            };
+        }
+        set!(rounds, "rounds");
+        set!(num_clients, "num_clients");
+        set!(active_clients, "active_clients");
+        set!(alpha, "alpha");
+        set!(per_client, "per_client");
+        set!(test_size, "test_size");
+        set!(lr, "lr");
+        set!(weight_decay, "weight_decay");
+        set!(seed, "seed");
+        set!(eval_every, "eval_every");
+        set!(difficulty, "difficulty");
+        if let Some(v) = kv.get("lr_decay_rounds") {
+            cfg.lr_decay_rounds = v
+                .split_whitespace()
+                .map(|t| t.parse::<usize>().context("bad lr_decay_rounds"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = kv.get("method") {
+            cfg.method = Method::parse(v)?;
+        }
+        if let Some(v) = kv.get("luar_compress") {
+            if v != "none" {
+                cfg.luar_compress = Some(Method::parse(v)?);
+            }
+        }
+        if let Some(v) = kv.get("server_opt") {
+            cfg.server_opt = ServerOptCfg::parse(v)?;
+        }
+        if let Some(v) = kv.get("mu_global") {
+            cfg.client_opt.mu_global = v.parse().context("bad mu_global")?;
+        }
+        if let Some(v) = kv.get("mu_prev") {
+            cfg.client_opt.mu_prev = v.parse().context("bad mu_prev")?;
+        }
+        if let Some(v) = kv.get("client_failure_rate") {
+            cfg.client_failure_rate = v.parse().context("bad client_failure_rate")?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::load_kv(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmarks_exist() {
+        for m in ["mlp", "cnn", "resnet8", "transformer"] {
+            RunConfig::benchmark(m).unwrap();
+        }
+        assert!(RunConfig::benchmark("nope").is_err());
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let mut cfg = RunConfig::benchmark("cnn").unwrap().with_method(Method::luar(2));
+        cfg.lr_decay_rounds = vec![30, 45];
+        cfg.server_opt = ServerOptCfg::Adam { lr: 0.9 };
+        cfg.client_opt.mu_global = 0.001;
+        let text = cfg.save_kv();
+        let back = RunConfig::load_kv(&text).unwrap();
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.server_opt, cfg.server_opt);
+        assert_eq!(back.lr_decay_rounds, cfg.lr_decay_rounds);
+        assert_eq!(back.client_opt.mu_global, 0.001);
+    }
+
+    #[test]
+    fn method_parse_variants() {
+        assert_eq!(Method::parse("fedavg").unwrap(), Method::FedAvg);
+        assert_eq!(
+            Method::parse("luar:delta=5").unwrap(),
+            Method::luar(5)
+        );
+        assert_eq!(
+            Method::parse("luar:delta=3,scheme=random,mode=drop").unwrap(),
+            Method::Luar {
+                delta: 3,
+                scheme: SelectionScheme::Random,
+                mode: RecycleMode::Drop,
+                adaptive: false
+            }
+        );
+        assert_eq!(Method::parse("quantize:levels=8").unwrap(), Method::Quantize { levels: 8 });
+        assert!(Method::parse("bogus").is_err());
+        assert!(Method::parse("luar:delta=x").is_err());
+    }
+
+    #[test]
+    fn method_spec_roundtrip() {
+        for spec in [
+            "fedavg",
+            "luar:delta=4,scheme=grad_norm,mode=drop",
+            "quantize:levels=16",
+            "binarize",
+            "prune:keep=0.5,every=50",
+            "dropout:rate=0.75",
+            "lbgm:thresh=0.95",
+            "topk:keep=0.1",
+            "lowrank:ratio=0.25",
+        ] {
+            let m = Method::parse(spec).unwrap();
+            let again = Method::parse(&m.spec_string()).unwrap();
+            assert_eq!(m, again, "{spec}");
+        }
+    }
+
+    #[test]
+    fn lr_decay_schedule() {
+        let mut cfg = RunConfig::benchmark("mlp").unwrap();
+        cfg.lr = 1.0;
+        cfg.lr_decay_rounds = vec![10, 20];
+        assert_eq!(cfg.lr_at(0), 1.0);
+        assert!((cfg.lr_at(10) - 0.1).abs() < 1e-6);
+        assert!((cfg.lr_at(25) - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn method_labels() {
+        assert_eq!(Method::FedAvg.label(), "FedAvg");
+        assert_eq!(Method::luar(3).label(), "FedLUAR");
+        assert_eq!(
+            Method::Luar {
+                delta: 3,
+                scheme: SelectionScheme::Luar,
+                mode: RecycleMode::Drop,
+                adaptive: false
+            }
+            .label(),
+            "LUAR-Drop"
+        );
+        assert_eq!(Method::parse("luar:delta=auto").unwrap(), Method::luar_auto());
+        assert_eq!(Method::luar_auto().label(), "FedLUAR-auto");
+        assert_eq!(Method::parse("luar:scheme=top").unwrap().label(), "LUAR[top]");
+    }
+
+    #[test]
+    fn synth_spec_from_shapes() {
+        let cfg = RunConfig::benchmark("cnn").unwrap();
+        let s = cfg.synth_spec(&[28, 28, 1], 10, false);
+        assert_eq!(s.feature_elems(), 784);
+        let t = cfg.synth_spec(&[32], 4, true);
+        assert_eq!(t.feature_elems(), 32);
+    }
+
+    #[test]
+    fn server_opt_parse() {
+        assert_eq!(ServerOptCfg::parse("sgd").unwrap(), ServerOptCfg::Sgd);
+        assert_eq!(ServerOptCfg::parse("adam:lr=1.2").unwrap(), ServerOptCfg::Adam { lr: 1.2 });
+        assert_eq!(ServerOptCfg::parse("fedmut").unwrap(), ServerOptCfg::Mut { alpha: 0.5 });
+        assert!(ServerOptCfg::parse("zzz").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Label-based Dirichlet(alpha) partitioning — the paper's non-IID
+//! generator (Section 4, "Data Heterogeneity"). For every class k we
+//! draw p ~ Dir(alpha * 1_N) over the N clients and split that class's
+//! samples proportionally; small alpha concentrates each class on few
+//! clients (alpha=0.1 is the paper's "highly non-IID" setting).
+
+use crate::rng::Rng;
+
+/// For each of `k` classes, the per-client sample counts.
+/// Returns `assignment[class][client] = count`, with
+/// `sum_client assignment[class] == per_class`.
+pub fn dirichlet_partition(
+    k: usize,
+    num_clients: usize,
+    per_class: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(alpha > 0.0, "alpha must be positive");
+    let mut out = Vec::with_capacity(k);
+    for class in 0..k {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xd1f1_0000 ^ class as u64);
+        let p = rng.dirichlet(alpha, num_clients);
+        out.push(largest_remainder(&p, per_class));
+    }
+    out
+}
+
+/// Apportion `total` integer samples to proportions `p` (sums exactly).
+fn largest_remainder(p: &[f64], total: usize) -> Vec<usize> {
+    let raw: Vec<f64> = p.iter().map(|x| x * total as f64).collect();
+    let mut counts: Vec<usize> = raw.iter().map(|x| x.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut remainders: Vec<(usize, f64)> =
+        raw.iter().enumerate().map(|(i, x)| (i, x - x.floor())).collect();
+    remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (i, _) in remainders.iter().take(total - assigned) {
+        counts[*i] += 1;
+    }
+    counts
+}
+
+/// Mean total-variation distance between per-client label histograms
+/// and the global histogram; 0 = perfectly IID.
+pub fn label_skew(hists: &[Vec<usize>]) -> f64 {
+    let k = hists.first().map(|h| h.len()).unwrap_or(0);
+    if k == 0 {
+        return 0.0;
+    }
+    let mut global = vec![0usize; k];
+    for h in hists {
+        for (g, &c) in global.iter_mut().zip(h) {
+            *g += c;
+        }
+    }
+    let g_total: usize = global.iter().sum();
+    if g_total == 0 {
+        return 0.0;
+    }
+    let g_dist: Vec<f64> = global.iter().map(|&c| c as f64 / g_total as f64).collect();
+    let mut acc = 0.0;
+    let mut counted = 0usize;
+    for h in hists {
+        let n: usize = h.iter().sum();
+        if n == 0 {
+            continue;
+        }
+        let tv: f64 = h
+            .iter()
+            .zip(&g_dist)
+            .map(|(&c, &g)| (c as f64 / n as f64 - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        acc / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_sums_exactly() {
+        let a = dirichlet_partition(5, 16, 1000, 0.1, 1);
+        for class in &a {
+            assert_eq!(class.iter().sum::<usize>(), 1000);
+            assert_eq!(class.len(), 16);
+        }
+    }
+
+    #[test]
+    fn high_alpha_is_balanced() {
+        let a = dirichlet_partition(1, 10, 10_000, 1000.0, 2);
+        for &c in &a[0] {
+            assert!((c as i64 - 1000).abs() < 200, "count {c}");
+        }
+    }
+
+    #[test]
+    fn low_alpha_is_concentrated() {
+        let a = dirichlet_partition(1, 10, 10_000, 0.05, 3);
+        let max = *a[0].iter().max().unwrap();
+        assert!(max > 5_000, "max shard only {max}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(
+            dirichlet_partition(3, 8, 100, 0.5, 9),
+            dirichlet_partition(3, 8, 100, 0.5, 9)
+        );
+        assert_ne!(
+            dirichlet_partition(3, 8, 100, 0.5, 9),
+            dirichlet_partition(3, 8, 100, 0.5, 10)
+        );
+    }
+
+    #[test]
+    fn skew_metric_bounds() {
+        // perfectly IID
+        let iid = vec![vec![10, 10], vec![10, 10]];
+        assert!(label_skew(&iid) < 1e-9);
+        // fully partitioned
+        let apart = vec![vec![20, 0], vec![0, 20]];
+        let s = label_skew(&apart);
+        assert!(s > 0.49 && s <= 0.5 + 1e-9, "skew {s}");
+    }
+
+    #[test]
+    fn largest_remainder_exact() {
+        let c = largest_remainder(&[0.3333, 0.3333, 0.3334], 10);
+        assert_eq!(c.iter().sum::<usize>(), 10);
+    }
+}

@@ -1,0 +1,173 @@
+//! Figures 1, 3, 4/5/6: layer-wise diagnostics and learning curves,
+//! rendered as ASCII charts + CSV series.
+
+use super::{apply_knobs, default_delta, default_rounds, fresh, paper_name, parse_models, run_cached, write_rows};
+use crate::cli::Args;
+use crate::config::{Method, RunConfig};
+use crate::fl::Server;
+use anyhow::Result;
+
+fn base_cfg(model: &str, args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::benchmark(model)?;
+    cfg.rounds = default_rounds(model);
+    apply_knobs(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn bar(v: f64, vmax: f64, width: usize) -> String {
+    let n = if vmax > 0.0 { ((v / vmax) * width as f64).round() as usize } else { 0 };
+    "#".repeat(n.min(width))
+}
+
+// -------------------------------------------------------------- Figure 1
+
+/// Layer-wise ||Delta|| vs ||x|| and their ratio after a few FedAvg
+/// rounds — the observation that motivates the s_{t,l} metric: the
+/// smallest-gradient layers are NOT the smallest-ratio layers.
+pub fn fig1(args: &Args) -> Result<()> {
+    let models = parse_models(args, &["cnn", "resnet8"]);
+    let mut rows = vec![];
+    for model in &models {
+        let mut cfg = base_cfg(model, args)?;
+        cfg.method = Method::FedAvg;
+        cfg.rounds = cfg.rounds.min(8);
+        cfg.eval_every = 0;
+        let mut server = Server::new(cfg)?;
+        server.run()?;
+        let stats = server.layer_stats();
+        let gmax = stats.iter().map(|s| s.1).fold(0.0, f64::max);
+        let rmax = stats.iter().map(|s| s.3).fold(0.0, f64::max);
+        println!("\nFigure 1 — {} after {} rounds", paper_name(model), server.round);
+        println!(
+            "{:<12} {:>9} {:>9} {:>9}  {:<20} {:<20}",
+            "layer", "|grad|", "|weight|", "ratio", "grad-norm bar", "ratio bar"
+        );
+        for (name, g, w, r) in &stats {
+            println!(
+                "{:<12} {:>9.4} {:>9.4} {:>9.5}  {:<20} {:<20}",
+                name,
+                g,
+                w,
+                r,
+                bar(*g, gmax, 20),
+                bar(*r, rmax, 20)
+            );
+            rows.push(format!("{model},{name},{g},{w},{r}"));
+        }
+        // the paper's point: argmin over |grad| != argmin over ratio
+        let min_g = stats
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .map(|(i, s)| (i, s.0.clone()))
+            .unwrap();
+        let min_r = stats
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .3.partial_cmp(&b.1 .3).unwrap())
+            .map(|(i, s)| (i, s.0.clone()))
+            .unwrap();
+        println!(
+            "smallest |grad|: {} (layer {});  smallest ratio: {} (layer {}){}",
+            min_g.1,
+            min_g.0,
+            min_r.1,
+            min_r.0,
+            if min_g.0 != min_r.0 { "  <- differ, as in the paper" } else { "" }
+        );
+    }
+    write_rows("fig1", "model,layer,grad_norm,weight_norm,ratio", &rows)
+}
+
+// -------------------------------------------------------------- Figure 3
+
+/// Per-layer aggregation counts: FedAvg aggregates every layer every
+/// round; FedLUAR's counts dip where updates were recycled.
+pub fn fig3(args: &Args) -> Result<()> {
+    let models = parse_models(args, &["cnn", "resnet8", "transformer"]);
+    let mut rows = vec![];
+    for model in &models {
+        let delta = default_delta(model);
+        let mut cfg = base_cfg(model, args)?;
+        cfg.method = Method::luar(delta);
+        cfg.eval_every = 0;
+        let mut server = Server::new(cfg)?;
+        server.run()?;
+        let rounds = server.comm.rounds;
+        println!(
+            "\nFigure 3 — {} aggregations per layer over {} rounds (delta={})",
+            paper_name(model),
+            rounds,
+            delta
+        );
+        println!("{:<12} {:>6} {:>8} {:>8}  {}", "layer", "aggs", "FedAvg", "size%", "bar");
+        let meta = server.meta();
+        for (l, lm) in meta.layers.iter().enumerate() {
+            let c = server.comm.layer_upload_rounds[l];
+            println!(
+                "{:<12} {:>6} {:>8} {:>7.1}%  {}",
+                lm.name,
+                c,
+                rounds,
+                100.0 * lm.size as f64 / meta.dim as f64,
+                bar(c as f64, rounds as f64, 30)
+            );
+            rows.push(format!("{model},{},{c},{rounds},{}", lm.name, lm.size));
+        }
+        println!(
+            "total comm ratio {:.3} (gap from FedAvg = recycled uploads)",
+            server.comm.comm_ratio()
+        );
+    }
+    write_rows("fig3", "model,layer,aggregations,rounds,layer_size", &rows)
+}
+
+// ---------------------------------------------------------- Figures 4/5/6
+
+/// Accuracy vs cumulative communication (normalized to FedAvg's total):
+/// the paper's learning-curve comparison for 4 representative methods.
+pub fn curves(args: &Args) -> Result<()> {
+    let models = parse_models(args, &["cnn"]);
+    let mut rows = vec![];
+    for model in &models {
+        let delta = default_delta(model);
+        let methods: Vec<Method> = vec![
+            Method::FedAvg,
+            Method::Quantize { levels: 16 },
+            Method::Prune { keep_ratio: 0.5, reconfig_every: 10 },
+            Method::luar(delta),
+        ];
+        println!("\nFigures 4/5/6 — {} accuracy vs relative comm cost", paper_name(model));
+        // FedAvg's total upload = x-axis unit
+        let mut fedavg_total = 0u64;
+        let mut all: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+        for m in methods {
+            let mut cfg = base_cfg(model, args)?.with_method(m.clone());
+            cfg.eval_every = 2.min(cfg.eval_every.max(1));
+            let (h, _) = run_cached(cfg, fresh(args))?;
+            if m == Method::FedAvg {
+                fedavg_total = h.records.last().map(|r| r.up_bytes).unwrap_or(1);
+            }
+            let series: Vec<(f64, f64)> = h
+                .records
+                .iter()
+                .map(|r| (r.up_bytes as f64, r.test_acc))
+                .collect();
+            all.push((m.label(), series));
+        }
+        let unit = fedavg_total.max(1) as f64;
+        for (label, series) in &all {
+            let pts: String = series
+                .iter()
+                .map(|(x, y)| format!("({:.2},{:.1}%)", x / unit, y * 100.0))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("{label:<10} {pts}");
+            for (x, y) in series {
+                rows.push(format!("{model},{label},{:.4},{:.4}", x / unit, y));
+            }
+        }
+        println!("paper shape: FedLUAR reaches FedAvg-level accuracy at a fraction of the x-axis.");
+    }
+    write_rows("curves", "model,method,rel_comm,acc", &rows)
+}

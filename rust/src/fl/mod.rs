@@ -1,0 +1,352 @@
+//! The FL coordinator — Algorithm 2 (FedLUAR) with every baseline
+//! method and server optimizer plugged into the same round loop.
+//!
+//! Round t:
+//! 1. sample `a` active clients;
+//! 2. broadcast x_t (or the optimizer's per-client variant) + R_t;
+//! 3. each client runs tau local SGD steps through the AOT train
+//!    graph and returns Delta_t^i; layers in R_t are not uploaded
+//!    (LUAR) or the update is lossily compressed (baselines);
+//! 4. aggregate via the Pallas-backed agg graph (exactly FedAvg's
+//!    mean) which also returns the Eq. 1 norms for free;
+//! 5. LUAR composes \hat{Delta}_t (Alg. 1), measures kappa, resamples
+//!    R_{t+1};
+//! 6. the server optimizer applies \hat{Delta}_t;
+//! 7. communication + simulated wall-clock are recorded.
+//!
+//! `checkpoint.rs` adds save/resume of the full server state.
+
+mod checkpoint;
+
+use crate::comm::{BandwidthModel, CommAccountant};
+use crate::compress::{self, UpdateCompressor};
+use crate::config::{Method, RunConfig};
+use crate::data::FedDataset;
+use crate::luar::{DeltaController, LuarState};
+use crate::metrics::{History, RoundRecord};
+use crate::model::{artifacts_dir, ModelMeta};
+use crate::optim::ServerOpt;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::tensor;
+use anyhow::Result;
+
+/// Everything one FL run needs; drive with `run()` or `run_round()`.
+pub struct Server {
+    pub engine: Engine,
+    pub cfg: RunConfig,
+    pub ds: FedDataset,
+    pub opt: ServerOpt,
+    pub luar: LuarState,
+    compressor: Box<dyn UpdateCompressor>,
+    pub comm: CommAccountant,
+    pub bw: BandwidthModel,
+    pub history: History,
+    /// Per-client previous local model (MOON-lite), populated lazily.
+    prev_local: Vec<Option<Vec<f32>>>,
+    rng: Rng,
+    pub round: usize,
+    sim_seconds: f64,
+    train_loss_ema: f64,
+    /// Last per-layer norms (Figure 1 diagnostics).
+    pub last_update_ssq: Vec<f32>,
+    pub last_weight_ssq: Vec<f32>,
+    /// Kappa-adaptive recycling depth (only for `luar:delta=auto`).
+    pub delta_ctl: Option<DeltaController>,
+    /// Clients that failed before upload (failure injection), total.
+    pub failed_clients: u64,
+}
+
+impl Server {
+    /// Build a server from a config, loading artifacts from the default
+    /// directory.
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        let meta = ModelMeta::load(artifacts_dir(), &cfg.model)?;
+        Self::with_meta(cfg, meta)
+    }
+
+    pub fn with_meta(cfg: RunConfig, meta: ModelMeta) -> Result<Self> {
+        let engine = Engine::load(meta)?;
+        let meta = &engine.meta;
+        let spec = cfg.synth_spec(&meta.input_shape, meta.num_classes, meta.is_text());
+        let ds = FedDataset::new(
+            spec,
+            cfg.num_clients,
+            cfg.per_client,
+            cfg.alpha,
+            cfg.test_size,
+            cfg.seed,
+        );
+        let init = meta.load_init()?;
+        let opt = ServerOpt::new(cfg.server_opt.clone(), init);
+        let luar = LuarState::new(meta.num_layers(), meta.dim);
+        let compressor = match (&cfg.method, &cfg.luar_compress) {
+            (Method::Luar { .. }, Some(base)) => compress::build(base),
+            _ => compress::build(&cfg.method),
+        };
+        let comm = CommAccountant::new(meta.num_layers());
+        let num_layers = meta.num_layers();
+        let delta_ctl = match &cfg.method {
+            Method::Luar { adaptive: true, .. } => Some(DeltaController::new(num_layers)),
+            _ => None,
+        };
+        let prev_local = vec![None; cfg.num_clients];
+        let rng = Rng::seed_from_u64(cfg.seed ^ 0xf1_f1f1);
+        Ok(Server {
+            engine,
+            ds,
+            opt,
+            luar,
+            compressor,
+            comm,
+            bw: BandwidthModel::default(),
+            history: History::default(),
+            prev_local,
+            rng,
+            round: 0,
+            sim_seconds: 0.0,
+            train_loss_ema: f64::NAN,
+            last_update_ssq: vec![0.0; num_layers],
+            last_weight_ssq: vec![0.0; num_layers],
+            delta_ctl,
+            failed_clients: 0,
+            cfg,
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.engine.meta
+    }
+
+    /// Run the full configured schedule; returns the history.
+    pub fn run(&mut self) -> Result<&History> {
+        while self.round < self.cfg.rounds {
+            self.run_round()?;
+        }
+        Ok(&self.history)
+    }
+
+    /// One communication round (Alg. 2 lines 4–12).
+    pub fn run_round(&mut self) -> Result<()> {
+        let t = self.round;
+        let cfg = self.cfg.clone();
+        let meta = self.engine.meta.clone();
+        let lr = cfg.lr_at(t);
+        let a = cfg.active_clients;
+        let mut actives = self.ds.sample_clients(t, a, cfg.seed);
+        // Failure injection: each active client independently fails
+        // before uploading with the configured probability; the server
+        // aggregates over survivors (never fewer than one).
+        if cfg.client_failure_rate > 0.0 {
+            let mut frng = Rng::seed_from_u64(cfg.seed ^ 0xfa11 ^ (t as u64) << 16);
+            let before = actives.len();
+            actives.retain(|_| !frng.gen_bool(cfg.client_failure_rate));
+            if actives.is_empty() {
+                actives = self.ds.sample_clients(t, 1, cfg.seed ^ 1);
+            }
+            self.failed_clients += (before - actives.len()) as u64;
+        }
+
+        let (is_luar, mut luar_delta, luar_scheme, luar_mode) = match cfg.method {
+            Method::Luar { delta, scheme, mode, .. } => (true, delta, Some(scheme), Some(mode)),
+            _ => (false, 0, None, None),
+        };
+        if let Some(ctl) = &self.delta_ctl {
+            luar_delta = ctl.delta;
+        }
+
+        // --- client phase -------------------------------------------------
+        let mu_g = cfg.client_opt.mu_global;
+        let mu_p = cfg.client_opt.mu_prev;
+        let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
+        let shared_broadcast =
+            if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
+
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
+        let mut loss_sum = 0.0f64;
+        let mut up_bytes_total = 0u64;
+        for (slot, &client) in actives.iter().enumerate() {
+            let start = match &shared_broadcast {
+                Some(b) => b.clone(),
+                None => self.opt.broadcast(slot),
+            };
+            let (feats, labels) = self.ds.client_batches(client, t, meta.tau, meta.batch);
+            let out = self.engine.train_round(
+                &start,
+                anchor_g.as_deref(),
+                self.prev_local[client].as_deref().filter(|_| mu_p > 0.0),
+                &feats,
+                &labels,
+                lr,
+                mu_g,
+                mu_p,
+                cfg.weight_decay,
+            )?;
+            loss_sum += out.loss as f64;
+            let mut delta = out.delta;
+            if mu_p > 0.0 {
+                let mut local = start.clone();
+                tensor::axpy(1.0, &delta, &mut local);
+                self.prev_local[client] = Some(local);
+            }
+            if is_luar {
+                // Clients omit R_t layers from the upload (Alg. 1 line 2).
+                for &l in &self.luar.recycle_set {
+                    let lm = &meta.layers[l];
+                    delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+                }
+                let uploaded_bytes = meta.layer_bytes(&self.luar.upload_set(meta.num_layers()));
+                if cfg.luar_compress.is_some() {
+                    // Table 3 composition: baseline compression on the
+                    // uploaded layers. The compressor reports whole-vector
+                    // bytes; scale to the uploaded fraction.
+                    let b = self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
+                    // re-zero recycled layers (compressors like binarize
+                    // may have produced nonzeros there)
+                    for &l in &self.luar.recycle_set {
+                        let lm = &meta.layers[l];
+                        delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+                    }
+                    up_bytes_total +=
+                        (b as f64 * uploaded_bytes as f64 / meta.full_bytes() as f64) as u64;
+                } else {
+                    up_bytes_total += uploaded_bytes;
+                }
+            } else {
+                up_bytes_total +=
+                    self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
+            }
+            deltas.push(delta);
+        }
+
+        // --- aggregation (Pallas graph when shapes match) ------------------
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let (mut mean, u_ssq, w_ssq) = if refs.len() == meta.agg_clients {
+            let out = self.engine.aggregate(&refs, self.opt.params())?;
+            (out.mean, out.update_ssq, out.weight_ssq)
+        } else {
+            // fallback for non-standard client counts
+            let mut mean = vec![0.0f32; meta.dim];
+            tensor::mean_rows_par(&refs, &mut mean);
+            let params = self.opt.params();
+            let mut u_ssq = Vec::with_capacity(meta.num_layers());
+            let mut w_ssq = Vec::with_capacity(meta.num_layers());
+            for lm in &meta.layers {
+                let r = lm.offset..lm.offset + lm.size;
+                u_ssq.push(tensor::ssq(&mean[r.clone()]) as f32);
+                w_ssq.push(tensor::ssq(&params[r]) as f32);
+            }
+            (mean, u_ssq, w_ssq)
+        };
+        self.last_update_ssq = u_ssq.clone();
+        self.last_weight_ssq = w_ssq.clone();
+
+        // --- LUAR composition + next selection (Alg. 1) --------------------
+        let mut kappa = 0.0;
+        if is_luar {
+            self.luar.update_scores(&u_ssq, &w_ssq);
+            kappa = self.luar.compose_update(&mut mean, &meta, luar_mode.unwrap());
+            let next_delta = match &mut self.delta_ctl {
+                Some(ctl) => ctl.observe(kappa),
+                None => luar_delta,
+            };
+            let grad_norms: Vec<f64> =
+                u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
+            self.luar.select_next(luar_scheme.unwrap(), next_delta, &grad_norms, &mut self.rng);
+        }
+
+        // --- server update --------------------------------------------------
+        self.opt.apply(&mean);
+
+        // --- accounting ------------------------------------------------------
+        let full = meta.full_bytes();
+        // Broadcast: full model + the delta layer-id list (paper §3.2).
+        let down = full + (self.luar.recycle_set.len() as u64) * 4;
+        if is_luar {
+            // R_t was consumed this round and select_next already wrote
+            // R_{t+1} into recycle_set, so identify this round's
+            // uploads via staleness (reset to 0 on upload by
+            // compose_update, incremented when recycled).
+            let uploaded_now: Vec<(usize, u64)> = (0..meta.num_layers())
+                .filter(|l| !self.luar_recycled_this_round(*l))
+                .map(|l| (l, (meta.layers[l].size as u64) * 4))
+                .collect();
+            self.comm.record_round(actives.len() as u64, &uploaded_now, full, down);
+        } else {
+            self.comm.record_compressed_round(actives.len() as u64, up_bytes_total, full, down);
+        }
+        self.sim_seconds +=
+            self.bw.round_seconds(up_bytes_total / actives.len().max(1) as u64, down);
+
+        let train_loss = loss_sum / actives.len().max(1) as f64;
+        self.train_loss_ema = if self.train_loss_ema.is_nan() {
+            train_loss
+        } else {
+            0.7 * self.train_loss_ema + 0.3 * train_loss
+        };
+
+        self.round += 1;
+        let last = self.round == cfg.rounds;
+        if last || (cfg.eval_every > 0 && self.round % cfg.eval_every == 0) {
+            let (test_loss, test_acc) = self.engine.eval_dataset(self.opt.params(), &self.ds)?;
+            self.history.push(RoundRecord {
+                round: self.round,
+                train_loss,
+                test_loss,
+                test_acc,
+                up_bytes: self.comm.up_bytes,
+                comm_ratio: self.comm.comm_ratio(),
+                kappa,
+                sim_seconds: self.sim_seconds,
+            });
+        }
+        Ok(())
+    }
+
+    /// Whether layer `l` was in R_t for the round that just ran.
+    /// (select_next already produced R_{t+1}, so this uses staleness:
+    /// a layer recycled this round has staleness >= 1.)
+    fn luar_recycled_this_round(&self, l: usize) -> bool {
+        self.luar.staleness[l] >= 1
+    }
+
+    /// Figure 1 diagnostics: per-layer (name, ||Delta||, ||x||, ratio).
+    pub fn layer_stats(&self) -> Vec<(String, f64, f64, f64)> {
+        self.engine
+            .meta
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, lm)| {
+                let g = (self.last_update_ssq[l] as f64).max(0.0).sqrt();
+                let w = (self.last_weight_ssq[l] as f64).max(0.0).sqrt();
+                let ratio = if w > 1e-12 { g / w } else { 0.0 };
+                (lm.name.clone(), g, w, ratio)
+            })
+            .collect()
+    }
+
+    /// Checkpoint access to the coordinator RNG.
+    pub(crate) fn rng_state(&self) -> Vec<u64> {
+        self.rng.state().to_vec()
+    }
+
+    pub(crate) fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
+    /// Server peak memory model (Table 1): buffers held at aggregation.
+    /// Returns (fedavg_bytes, this_method_bytes).
+    pub fn memory_footprint(&self) -> (u64, u64) {
+        let meta = &self.engine.meta;
+        let a = self.cfg.active_clients as u64;
+        let full = meta.full_bytes();
+        match &self.cfg.method {
+            Method::Luar { .. } => {
+                let recycled = meta.layer_bytes(&self.luar.recycle_set);
+                crate::comm::memory_footprint_bytes(a, full, recycled)
+            }
+            _ => (a * full, a * full),
+        }
+    }
+}

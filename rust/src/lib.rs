@@ -1,0 +1,28 @@
+//! FedLUAR: Layer-wise Update Aggregation with Recycling
+//! (NeurIPS 2025) — a Rust + JAX + Pallas reproduction.
+//!
+//! Three layers:
+//! * L1: Pallas kernels (aggregation mean-reduce, fused dense) —
+//!   `python/compile/kernels/`, build time only.
+//! * L2: JAX graphs (local training, eval, server aggregation) lowered
+//!   once to HLO text — `python/compile/`, build time only.
+//! * L3: this crate — the federated-learning coordinator that loads the
+//!   AOT artifacts via PJRT and runs the paper's algorithms with Python
+//!   never on the request path.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod compress;
+pub mod data;
+pub mod exp;
+pub mod fl;
+pub mod json;
+pub mod luar;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;

@@ -1,0 +1,137 @@
+//! Kappa-adaptive recycling depth — the Theorem 2 bound as a policy.
+//!
+//! Theorem 2 guarantees convergence to a stationary-point neighborhood
+//! only while kappa_t = ||recycled update||^2 / ||full update||^2 stays
+//! below 1/16. The paper leaves delta as a hand-tuned hyper-parameter;
+//! this controller (an extension implementing the paper's own theory)
+//! grows delta while the measured kappa has margin and shrinks it when
+//! the bound is threatened — "recycle as much as is provably safe".
+//!
+//! Enabled with `--method luar:delta=auto`.
+
+/// Proportional controller over the recycling depth.
+#[derive(Debug, Clone)]
+pub struct DeltaController {
+    /// Hard ceiling from Theorem 2 (1/16).
+    pub kappa_bound: f64,
+    /// Grow when the EMA is below this fraction of the bound.
+    pub grow_margin: f64,
+    pub delta: usize,
+    pub min_delta: usize,
+    pub max_delta: usize,
+    ema: f64,
+    /// EMA smoothing (per-round kappa is noisy under sampling).
+    beta: f64,
+    /// Rounds between adjustments (let the EMA settle).
+    cooldown: usize,
+    since_change: usize,
+}
+
+impl DeltaController {
+    /// `num_layers` caps delta at L-1 (recycling everything would stop
+    /// all learning).
+    pub fn new(num_layers: usize) -> Self {
+        DeltaController {
+            kappa_bound: 1.0 / 16.0,
+            grow_margin: 0.5,
+            delta: 1,
+            min_delta: 1,
+            max_delta: num_layers.saturating_sub(1).max(1),
+            ema: 0.0,
+            beta: 0.7,
+            cooldown: 3,
+            since_change: 0,
+        }
+    }
+
+    pub fn kappa_ema(&self) -> f64 {
+        self.ema
+    }
+
+    /// Feed the round's measured kappa; returns the delta for the next
+    /// round.
+    pub fn observe(&mut self, kappa: f64) -> usize {
+        self.ema = self.beta * self.ema + (1.0 - self.beta) * kappa.clamp(0.0, 1.0);
+        self.since_change += 1;
+        if self.since_change < self.cooldown {
+            return self.delta;
+        }
+        if self.ema > self.kappa_bound && self.delta > self.min_delta {
+            // bound threatened: back off immediately
+            self.delta -= 1;
+            self.since_change = 0;
+        } else if self.ema < self.kappa_bound * self.grow_margin && self.delta < self.max_delta {
+            self.delta += 1;
+            self.since_change = 0;
+        }
+        self.delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_under_low_kappa() {
+        let mut c = DeltaController::new(10);
+        for _ in 0..40 {
+            c.observe(0.001);
+        }
+        assert!(c.delta > 3, "delta stuck at {}", c.delta);
+        assert!(c.delta <= 9);
+    }
+
+    #[test]
+    fn shrinks_when_bound_exceeded() {
+        let mut c = DeltaController::new(10);
+        for _ in 0..40 {
+            c.observe(0.001);
+        }
+        let high = c.delta;
+        for _ in 0..40 {
+            c.observe(0.5);
+        }
+        assert!(c.delta < high, "did not back off: {} -> {}", high, c.delta);
+        assert_eq!(c.delta, c.min_delta);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut c = DeltaController::new(3);
+        for _ in 0..100 {
+            c.observe(0.0);
+        }
+        assert_eq!(c.delta, 2); // max = L-1
+        for _ in 0..100 {
+            c.observe(1.0);
+        }
+        assert_eq!(c.delta, 1); // min
+    }
+
+    #[test]
+    fn cooldown_limits_change_rate() {
+        let mut c = DeltaController::new(20);
+        let d0 = c.delta;
+        c.observe(0.0);
+        c.observe(0.0);
+        assert_eq!(c.delta, d0, "changed before cooldown elapsed");
+    }
+
+    #[test]
+    fn single_layer_model_is_stable() {
+        let mut c = DeltaController::new(1);
+        for _ in 0..10 {
+            assert_eq!(c.observe(0.0), 1);
+        }
+    }
+
+    #[test]
+    fn ema_tracks_kappa() {
+        let mut c = DeltaController::new(5);
+        for _ in 0..50 {
+            c.observe(0.04);
+        }
+        assert!((c.kappa_ema() - 0.04).abs() < 0.005);
+    }
+}

@@ -1,0 +1,274 @@
+//! LUAR — Layer-wise Update Aggregation with Recycling (Algorithm 1).
+//!
+//! The server-side state of the paper's contribution:
+//! * `scores` — s_{t,l} = ||Delta_{t,l}|| / ||x_{t,l}|| (Eq. 1), fed by
+//!   the per-layer squared norms the Pallas-backed aggregation graph
+//!   returns for free;
+//! * `probabilities` — p_{t,l} ∝ 1/s_{t,l} (Eq. 2);
+//! * the recycle buffer \hat{Delta}_{t-1} and the composition
+//!   \hat{Delta}_t = [r_t, u_t] (Eq. 3–5);
+//! * the layer-selection schemes of the Table 4 ablation;
+//! * kappa_t — the Theorem 2 noise ratio, logged every round.
+
+mod adaptive;
+mod select;
+
+pub use adaptive::DeltaController;
+pub use select::select_layers;
+
+use crate::config::{RecycleMode, SelectionScheme};
+use crate::model::ModelMeta;
+use crate::rng::Rng;
+use crate::tensor;
+
+/// Server-side LUAR state across rounds.
+#[derive(Debug, Clone)]
+pub struct LuarState {
+    /// s_{t,l}; starts at +inf priority (score 0 means "never observed",
+    /// treated as highest priority so every layer uploads early on).
+    pub scores: Vec<f64>,
+    /// Whether a layer's score has ever been observed.
+    pub observed: Vec<bool>,
+    /// \hat{Delta}_{t-1}: the previous composed global update.
+    pub prev_update: Vec<f32>,
+    /// R_t: layers recycled *this* round (empty at t=0, Alg. 2 line 2).
+    pub recycle_set: Vec<usize>,
+    /// Rounds since each layer last uploaded (staleness k in Eq. 6).
+    pub staleness: Vec<u32>,
+}
+
+impl LuarState {
+    pub fn new(num_layers: usize, dim: usize) -> Self {
+        LuarState {
+            scores: vec![0.0; num_layers],
+            observed: vec![false; num_layers],
+            prev_update: vec![0.0; dim],
+            recycle_set: Vec::new(),
+            staleness: vec![0; num_layers],
+        }
+    }
+
+    /// Layers the clients must upload this round (complement of R_t).
+    pub fn upload_set(&self, num_layers: usize) -> Vec<usize> {
+        (0..num_layers).filter(|l| !self.recycle_set.contains(l)).collect()
+    }
+
+    /// Update s_{t,l} from the aggregation graph's per-layer squared
+    /// norms — only for uploaded layers (recycled layers keep their
+    /// stale score; the stochastic sampler is what lets them refresh
+    /// later, see the paper's discussion of deterministic recycling).
+    pub fn update_scores(&mut self, update_ssq: &[f32], weight_ssq: &[f32]) {
+        for l in 0..self.scores.len() {
+            if self.recycle_set.contains(&l) {
+                continue;
+            }
+            let w = (weight_ssq[l] as f64).max(1e-24);
+            self.scores[l] = ((update_ssq[l] as f64) / w).sqrt();
+            self.observed[l] = true;
+        }
+    }
+
+    /// Eq. 2: p_{t,l} ∝ 1/s_{t,l}. Unobserved layers get probability 0
+    /// (they must upload at least once before they can be recycled).
+    pub fn probabilities(&self) -> Vec<f64> {
+        let inv: Vec<f64> = self
+            .scores
+            .iter()
+            .zip(&self.observed)
+            .map(|(&s, &obs)| if obs && s > 0.0 { 1.0 / s } else { 0.0 })
+            .collect();
+        let total: f64 = inv.iter().sum();
+        if total <= 0.0 {
+            return vec![0.0; inv.len()];
+        }
+        inv.iter().map(|v| v / total).collect()
+    }
+
+    /// Compose \hat{Delta}_t (Eq. 3–5) into `mean` in place:
+    /// uploaded layers keep the fresh aggregate, recycled layers are
+    /// overwritten with the previous round's composed update (Recycle)
+    /// or zero (the Dropping ablation). Afterwards the buffer holds
+    /// \hat{Delta}_t and staleness is advanced.
+    ///
+    /// Returns kappa_t = ||recycled part||^2 / ||\hat{Delta}_t||^2.
+    pub fn compose_update(
+        &mut self,
+        mean: &mut [f32],
+        meta: &ModelMeta,
+        mode: RecycleMode,
+    ) -> f64 {
+        for &l in &self.recycle_set {
+            let lm = &meta.layers[l];
+            let range = lm.offset..lm.offset + lm.size;
+            match mode {
+                RecycleMode::Recycle => {
+                    mean[range.clone()].copy_from_slice(&self.prev_update[range.clone()]);
+                }
+                RecycleMode::Drop => {
+                    mean[range.clone()].iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+        }
+        // kappa before the buffer swap
+        let total = tensor::ssq(mean);
+        let recycled: f64 = self
+            .recycle_set
+            .iter()
+            .map(|&l| {
+                let lm = &meta.layers[l];
+                tensor::ssq(&mean[lm.offset..lm.offset + lm.size])
+            })
+            .sum();
+        let kappa = if total > 0.0 { recycled / total } else { 0.0 };
+        self.prev_update.copy_from_slice(mean);
+        for l in 0..self.staleness.len() {
+            if self.recycle_set.contains(&l) {
+                self.staleness[l] += 1;
+            } else {
+                self.staleness[l] = 0;
+            }
+        }
+        kappa
+    }
+
+    /// Alg. 1 lines 6–8: pick R_{t+1}.
+    pub fn select_next(
+        &mut self,
+        scheme: SelectionScheme,
+        delta: usize,
+        grad_norms: &[f64],
+        rng: &mut Rng,
+    ) {
+        self.recycle_set = select_layers(
+            scheme,
+            delta,
+            &self.scores,
+            &self.observed,
+            &self.probabilities(),
+            grad_norms,
+            rng,
+        );
+    }
+
+    pub fn max_staleness(&self) -> u32 {
+        self.staleness.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+    use std::path::PathBuf;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::from_json(
+            r#"{
+            "model":"toy","dim":10,"num_classes":2,
+            "input_shape":[4],"input_dtype":"f32",
+            "tau":2,"batch":3,"eval_batch":8,"agg_clients":4,"momentum":0.9,
+            "layers":[
+              {"name":"a","kind":"dense","offset":0,"size":6,"arrays":[]},
+              {"name":"b","kind":"dense","offset":6,"size":4,"arrays":[]}
+            ],
+            "artifacts":{"train":"t","eval":"e","agg":"g","init":"i"},
+            "init_sha256":"x"
+        }"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scores_update_skips_recycled() {
+        let mut st = LuarState::new(2, 10);
+        st.update_scores(&[4.0, 9.0], &[1.0, 1.0]);
+        assert!((st.scores[0] - 2.0).abs() < 1e-9);
+        assert!((st.scores[1] - 3.0).abs() < 1e-9);
+        st.recycle_set = vec![1];
+        st.update_scores(&[1.0, 100.0], &[1.0, 1.0]);
+        assert!((st.scores[0] - 1.0).abs() < 1e-9);
+        assert!((st.scores[1] - 3.0).abs() < 1e-9, "recycled layer score must stay stale");
+    }
+
+    #[test]
+    fn probabilities_invert_scores() {
+        let mut st = LuarState::new(3, 10);
+        st.update_scores(&[1.0, 4.0, 16.0], &[1.0, 1.0, 1.0]);
+        let p = st.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // s = [1, 2, 4] -> 1/s = [1, .5, .25] -> p = [4/7, 2/7, 1/7]
+        assert!(p[0] > p[1] && p[1] > p[2]);
+        assert!((p[0] - 4.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unobserved_layers_never_sampled() {
+        let st = LuarState::new(2, 10);
+        assert_eq!(st.probabilities(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn compose_recycles_previous_update() {
+        let m = meta();
+        let mut st = LuarState::new(2, 10);
+        // round 0: full upload, buffer keeps the composed update
+        let mut u0: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let k0 = st.compose_update(&mut u0, &m, RecycleMode::Recycle);
+        assert_eq!(k0, 0.0, "no recycled layers at t=0");
+        // round 1: layer 1 recycled -> its slice must equal round 0's
+        st.recycle_set = vec![1];
+        let mut u1 = vec![100.0f32; 10];
+        let k1 = st.compose_update(&mut u1, &m, RecycleMode::Recycle);
+        assert_eq!(&u1[6..10], &[6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(&u1[0..6], &[100.0; 6]);
+        assert!(k1 > 0.0 && k1 < 1.0);
+        assert_eq!(st.staleness, vec![0, 1]);
+    }
+
+    #[test]
+    fn compose_drop_zeroes() {
+        let m = meta();
+        let mut st = LuarState::new(2, 10);
+        st.recycle_set = vec![0];
+        let mut u = vec![1.0f32; 10];
+        st.compose_update(&mut u, &m, RecycleMode::Drop);
+        assert_eq!(&u[0..6], &[0.0; 6]);
+        assert_eq!(&u[6..10], &[1.0; 4]);
+    }
+
+    #[test]
+    fn kappa_is_recycled_fraction() {
+        let m = meta();
+        let mut st = LuarState::new(2, 10);
+        let mut u0 = vec![1.0f32; 10];
+        st.compose_update(&mut u0, &m, RecycleMode::Recycle);
+        st.recycle_set = vec![1];
+        let mut u1 = vec![1.0f32; 10];
+        let k = st.compose_update(&mut u1, &m, RecycleMode::Recycle);
+        // recycled layer slice has ssq 4, total 10
+        assert!((k - 0.4).abs() < 1e-9, "kappa {k}");
+    }
+
+    #[test]
+    fn upload_set_is_complement() {
+        let mut st = LuarState::new(4, 10);
+        st.recycle_set = vec![1, 3];
+        assert_eq!(st.upload_set(4), vec![0, 2]);
+    }
+
+    #[test]
+    fn staleness_resets_on_upload() {
+        let m = meta();
+        let mut st = LuarState::new(2, 10);
+        st.recycle_set = vec![1];
+        let mut u = vec![1.0f32; 10];
+        st.compose_update(&mut u, &m, RecycleMode::Recycle);
+        st.compose_update(&mut u, &m, RecycleMode::Recycle);
+        assert_eq!(st.staleness[1], 2);
+        st.recycle_set = vec![];
+        st.compose_update(&mut u, &m, RecycleMode::Recycle);
+        assert_eq!(st.staleness, vec![0, 0]);
+        assert_eq!(st.max_staleness(), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Layer-selection schemes (Table 4 ablation).
+//!
+//! `Luar` is the paper's scheme: weighted random sampling without
+//! replacement by p ∝ 1/s. The alternatives exist to reproduce the
+//! ablation: uniform random, input-side, output-side, smallest
+//! gradient norm, and deterministic smallest-s (which the paper shows
+//! recycles the same layers until they go stale and diverge).
+
+use crate::config::SelectionScheme;
+use crate::rng::Rng;
+
+/// Pick the delta-sized recycle set R_{t+1}.
+///
+/// * `scores` / `observed` — s_{t,l} and whether it was ever measured;
+/// * `probs` — Eq. 2 distribution (zeros if nothing observed yet);
+/// * `grad_norms` — per-layer aggregated update norms for `GradNorm`.
+pub fn select_layers(
+    scheme: SelectionScheme,
+    delta: usize,
+    scores: &[f64],
+    observed: &[bool],
+    probs: &[f64],
+    grad_norms: &[f64],
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let num_layers = scores.len();
+    let delta = delta.min(num_layers);
+    if delta == 0 {
+        return Vec::new();
+    }
+    // Before any score is observed nothing may be recycled (round 0).
+    if !observed.iter().any(|&o| o) {
+        return Vec::new();
+    }
+    match scheme {
+        SelectionScheme::Luar => {
+            if probs.iter().sum::<f64>() <= 0.0 {
+                return Vec::new();
+            }
+            rng.weighted_sample_without_replacement(probs, delta)
+        }
+        SelectionScheme::Random => rng.sample_indices(num_layers, delta),
+        SelectionScheme::Top => (0..delta).collect(),
+        SelectionScheme::Bottom => (num_layers - delta..num_layers).collect(),
+        SelectionScheme::GradNorm => smallest_k(grad_norms, delta),
+        SelectionScheme::Deterministic => {
+            // smallest observed s deterministically, every round;
+            // never more than the observed count
+            let masked: Vec<f64> = scores
+                .iter()
+                .zip(observed)
+                .map(|(&s, &o)| if o { s } else { f64::INFINITY })
+                .collect();
+            let mut sel = smallest_k(&masked, delta);
+            sel.retain(|&l| observed[l]);
+            sel
+        }
+    }
+}
+
+/// Indices of the k smallest values (stable order by value then index).
+fn smallest_k(values: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| {
+        values[a].partial_cmp(&values[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(1234)
+    }
+
+    #[test]
+    fn nothing_recycled_before_first_observation() {
+        let mut r = rng();
+        let sel = select_layers(
+            SelectionScheme::Luar,
+            2,
+            &[0.0; 4],
+            &[false; 4],
+            &[0.0; 4],
+            &[0.0; 4],
+            &mut r,
+        );
+        assert!(sel.is_empty());
+    }
+
+    #[test]
+    fn luar_prefers_low_score_layers() {
+        let mut r = rng();
+        let scores = vec![0.001, 1.0, 1.0, 1.0];
+        let observed = vec![true; 4];
+        let inv: Vec<f64> = scores.iter().map(|s| 1.0 / s).collect();
+        let total: f64 = inv.iter().sum();
+        let probs: Vec<f64> = inv.iter().map(|v| v / total).collect();
+        let mut hits = 0;
+        for _ in 0..100 {
+            let sel = select_layers(
+                SelectionScheme::Luar,
+                1,
+                &scores,
+                &observed,
+                &probs,
+                &[0.0; 4],
+                &mut r,
+            );
+            if sel == vec![0] {
+                hits += 1;
+            }
+        }
+        assert!(hits > 95, "low-s layer picked {hits}/100");
+    }
+
+    #[test]
+    fn top_and_bottom_are_positional() {
+        let mut r = rng();
+        let obs = vec![true; 5];
+        let s = vec![1.0; 5];
+        let p = vec![0.2; 5];
+        assert_eq!(
+            select_layers(SelectionScheme::Top, 2, &s, &obs, &p, &[0.0; 5], &mut r),
+            vec![0, 1]
+        );
+        assert_eq!(
+            select_layers(SelectionScheme::Bottom, 2, &s, &obs, &p, &[0.0; 5], &mut r),
+            vec![3, 4]
+        );
+    }
+
+    #[test]
+    fn gradnorm_picks_smallest_norms() {
+        let mut r = rng();
+        let obs = vec![true; 4];
+        let sel = select_layers(
+            SelectionScheme::GradNorm,
+            2,
+            &[1.0; 4],
+            &obs,
+            &[0.25; 4],
+            &[5.0, 0.1, 3.0, 0.2],
+            &mut r,
+        );
+        assert_eq!(sel, vec![1, 3]);
+    }
+
+    #[test]
+    fn deterministic_picks_smallest_scores_every_time() {
+        let mut r = rng();
+        let obs = vec![true, true, false, true];
+        let s = vec![0.5, 0.1, 0.0, 2.0];
+        let sel1 =
+            select_layers(SelectionScheme::Deterministic, 2, &s, &obs, &[0.25; 4], &[0.0; 4], &mut r);
+        let sel2 =
+            select_layers(SelectionScheme::Deterministic, 2, &s, &obs, &[0.25; 4], &[0.0; 4], &mut r);
+        assert_eq!(sel1, vec![1, 0], "unobserved layer 2 must be excluded");
+        assert_eq!(sel1, sel2);
+    }
+
+    #[test]
+    fn random_is_distinct_and_sized() {
+        let mut r = rng();
+        let obs = vec![true; 10];
+        let sel =
+            select_layers(SelectionScheme::Random, 4, &[1.0; 10], &obs, &[0.1; 10], &[0.0; 10], &mut r);
+        assert_eq!(sel.len(), 4);
+        let mut d = sel.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn delta_clamped_to_layer_count() {
+        let mut r = rng();
+        let obs = vec![true; 3];
+        let sel =
+            select_layers(SelectionScheme::Random, 10, &[1.0; 3], &obs, &[0.3; 3], &[0.0; 3], &mut r);
+        assert_eq!(sel.len(), 3);
+    }
+
+    #[test]
+    fn delta_zero_selects_nothing() {
+        let mut r = rng();
+        let sel = select_layers(
+            SelectionScheme::Luar,
+            0,
+            &[1.0; 3],
+            &[true; 3],
+            &[0.3; 3],
+            &[0.0; 3],
+            &mut r,
+        );
+        assert!(sel.is_empty());
+    }
+}

@@ -1,0 +1,158 @@
+//! `fedluar` — the FedLUAR coordinator CLI.
+//!
+//! Subcommands:
+//!   run        one FL run (model x method x optimizer), CSV history
+//!   info       inspect a model's artifacts / layer table
+//!   exp        regenerate a paper table or figure (see `exp list`)
+//!
+//! Examples:
+//!   fedluar run --model cnn --method luar:delta=2 --rounds 60
+//!   fedluar run --model resnet8 --method quantize:levels=16
+//!   fedluar exp table2 --quick
+//!   fedluar exp fig1 --model cnn
+
+use anyhow::{bail, Result};
+use fedluar::cli::Args;
+use fedluar::config::{ClientOptCfg, Method, RunConfig, ServerOptCfg};
+use fedluar::exp;
+use fedluar::fl::Server;
+use fedluar::model::{artifacts_dir, ModelMeta};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        Some("exp") => exp::dispatch(&args),
+        Some(other) => bail!("unknown subcommand {other}; try run | info | exp"),
+        None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+fedluar — Layer-wise Update Aggregation with Recycling (NeurIPS 2025 reproduction)
+
+USAGE:
+  fedluar run  --model <mlp|cnn|resnet8|transformer> [--method SPEC]
+               [--rounds N] [--clients N] [--active N] [--alpha F]
+               [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
+               [--mu-prev F] [--eval-every N] [--out results/run.csv]
+               [--config FILE]
+  fedluar info --model <name>
+  fedluar exp  <table1|table2|table3|table4|table5|delta-sweep|alpha-sweep|
+                client-sweep|fig1|fig3|curves|list> [--quick] [...]
+
+METHOD SPECS:
+  fedavg | luar:delta=2[,scheme=luar|random|top|bottom|grad_norm|deterministic]
+  [,mode=recycle|drop] | quantize:levels=16 | binarize | prune:keep=0.5,every=50
+  | dropout:rate=0.5 | lbgm:thresh=0.95 | topk:keep=0.1 | lowrank:ratio=0.25
+
+SERVER OPT SPECS:
+  sgd | adam:lr=0.9 | acg:lambda=0.7 | mut:alpha=0.5
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load_file(path)?,
+        None => RunConfig::benchmark(args.get_or("model", "mlp"))?,
+    };
+    if let Some(m) = args.get("model") {
+        if cfg.model != m {
+            cfg = RunConfig::benchmark(m)?;
+        }
+    }
+    if let Some(spec) = args.get("method") {
+        cfg.method = Method::parse(spec)?;
+    }
+    if let Some(spec) = args.get("server-opt") {
+        cfg.server_opt = ServerOptCfg::parse(spec)?;
+    }
+    cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
+    cfg.num_clients = args.get_usize("clients", cfg.num_clients)?;
+    cfg.active_clients = args.get_usize("active", cfg.active_clients)?;
+    cfg.alpha = args.get_f64("alpha", cfg.alpha)?;
+    cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.client_opt = ClientOptCfg {
+        mu_global: args.get_f64("mu-global", cfg.client_opt.mu_global as f64)? as f32,
+        mu_prev: args.get_f64("mu-prev", cfg.client_opt.mu_prev as f64)? as f32,
+    };
+    let out = args.get_or("out", "results/run.csv").to_string();
+    args.check_unused()?;
+
+    println!("# fedluar run: {} / {} / {}", cfg.model, cfg.method.label(), cfg.server_opt.label());
+    let mut server = Server::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..server.cfg.rounds {
+        server.run_round()?;
+        if let Some(rec) = server.history.records.last() {
+            if rec.round == server.round {
+                println!(
+                    "round {:4}  train_loss {:.4}  test_acc {:5.2}%  comm {:.3}  kappa {:.4}",
+                    rec.round,
+                    rec.train_loss,
+                    rec.test_acc * 100.0,
+                    rec.comm_ratio,
+                    rec.kappa
+                );
+            }
+        }
+    }
+    server.history.write_csv(&out)?;
+    let stats = server.engine.stats();
+    println!(
+        "# done in {:.1}s wall ({} train execs {:.1}s, {} evals {:.1}s, {} aggs {:.2}s)",
+        t0.elapsed().as_secs_f64(),
+        stats.train_calls,
+        stats.train_secs,
+        stats.eval_calls,
+        stats.eval_secs,
+        stats.agg_calls,
+        stats.agg_secs,
+    );
+    println!(
+        "# final: acc {:.2}%  comm_ratio {:.3}  max_kappa {:.4} (theorem2 bound 1/16 = 0.0625)",
+        server.history.final_acc() * 100.0,
+        server.history.final_comm_ratio(),
+        server.history.max_kappa()
+    );
+    println!("# history -> {out}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mlp").to_string();
+    args.check_unused()?;
+    let meta = ModelMeta::load(artifacts_dir(), &model)?;
+    println!("model        {}", meta.model);
+    println!("dim          {}", meta.dim);
+    println!("layers       {}", meta.num_layers());
+    println!("input        {:?} ({})", meta.input_shape, meta.input_dtype);
+    println!("classes      {}", meta.num_classes);
+    println!("tau/batch    {}/{}", meta.tau, meta.batch);
+    println!("agg clients  {}", meta.agg_clients);
+    println!("init sha256  {}", &meta.init_sha256[..16]);
+    println!("\n{:<14} {:>10} {:>10} {:>8}", "layer", "offset", "size", "share");
+    for l in &meta.layers {
+        println!(
+            "{:<14} {:>10} {:>10} {:>7.2}%",
+            l.name,
+            l.offset,
+            l.size,
+            100.0 * l.size as f64 / meta.dim as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Run metrics: per-round history, accuracy/loss records, CSV output.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One evaluated checkpoint of a run.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative upload bytes so far.
+    pub up_bytes: u64,
+    /// Upload cost normalized to FedAvg-so-far.
+    pub comm_ratio: f64,
+    /// kappa_t = ||recycled-layer update||^2 / ||full update||^2
+    /// (Theorem 2 requires < 1/16 for convergence).
+    pub kappa: f64,
+    /// Simulated communication wall-clock so far (bandwidth model).
+    pub sim_seconds: f64,
+}
+
+/// Full history of a run plus its terminal summary.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    /// Mean of the last `k` evaluated accuracies (the paper reports
+    /// averaged terminal accuracy over repeats; within one run this
+    /// smooths evaluation noise).
+    pub fn tail_acc(&self, k: usize) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let n = self.records.len();
+        let lo = n.saturating_sub(k);
+        let slice = &self.records[lo..];
+        slice.iter().map(|r| r.test_acc).sum::<f64>() / slice.len() as f64
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.records.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_comm_ratio(&self) -> f64 {
+        self.records.last().map(|r| r.comm_ratio).unwrap_or(0.0)
+    }
+
+    pub fn max_kappa(&self) -> f64 {
+        self.records.iter().map(|r| r.kappa).fold(0.0, f64::max)
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.3}",
+                r.round,
+                r.train_loss,
+                r.test_loss,
+                r.test_acc,
+                r.up_bytes,
+                r.comm_ratio,
+                r.kappa,
+                r.sim_seconds
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl History {
+    /// Parse a CSV written by `write_csv` (run-cache reload path).
+    pub fn read_csv(path: impl AsRef<Path>) -> std::io::Result<History> {
+        let text = std::fs::read_to_string(path)?;
+        let mut h = History::default();
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 8 {
+                continue;
+            }
+            let p = |s: &str| s.parse::<f64>().unwrap_or(f64::NAN);
+            h.push(RoundRecord {
+                round: f[0].parse().unwrap_or(0),
+                train_loss: p(f[1]),
+                test_loss: p(f[2]),
+                test_acc: p(f[3]),
+                up_bytes: f[4].parse().unwrap_or(0),
+                comm_ratio: p(f[5]),
+                kappa: p(f[6]),
+                sim_seconds: p(f[7]),
+            });
+        }
+        Ok(h)
+    }
+}
+
+/// Mean and (population) std over repeated-run accuracies, formatted
+/// the way the paper's tables report them.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+pub fn fmt_acc(mean: f64, std: f64) -> String {
+    format!("{:5.2} ± {:.1}%", mean * 100.0, std * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_loss: 1.0,
+            test_acc: acc,
+            up_bytes: 10,
+            comm_ratio: 0.5,
+            kappa: 0.01,
+            sim_seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn tail_and_best() {
+        let mut h = History::default();
+        for (i, a) in [0.1, 0.5, 0.4, 0.6].iter().enumerate() {
+            h.push(rec(i, *a));
+        }
+        assert!((h.final_acc() - 0.6).abs() < 1e-12);
+        assert!((h.best_acc() - 0.6).abs() < 1e-12);
+        assert!((h.tail_acc(2) - 0.5).abs() < 1e-12);
+        assert!((h.tail_acc(100) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_history_is_zeroes() {
+        let h = History::default();
+        assert_eq!(h.final_acc(), 0.0);
+        assert_eq!(h.tail_acc(3), 0.0);
+        assert_eq!(h.max_kappa(), 0.0);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut h = History::default();
+        h.push(rec(0, 0.3));
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        let path = dir.join("run.csv");
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,"));
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[0.5, 0.7]);
+        assert!((m - 0.6).abs() < 1e-12);
+        assert!((s - 0.1).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn fmt_acc_shape() {
+        let s = fmt_acc(0.6123, 0.007);
+        assert!(s.contains("61.23"));
+        assert!(s.contains("0.7%"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Model metadata: the layer table emitted by `python/compile/aot.py`.
+//!
+//! This is the contract between the L2 graphs and the L3 coordinator:
+//! layer names, kinds, and flat-vector offsets. Everything LUAR does
+//! (scoring, recycling, per-layer communication accounting) consumes
+//! this table. Parsed with the in-tree JSON parser (offline build).
+
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArrayMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: String,
+    pub offset: usize,
+    pub size: usize,
+    pub arrays: Vec<ArrayMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactFiles {
+    pub train: String,
+    pub eval: String,
+    pub agg: String,
+    pub init: String,
+}
+
+/// Parsed `<model>.meta.json` plus the directory it was loaded from.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub model: String,
+    pub dim: usize,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String, // "f32" | "i32"
+    pub tau: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub agg_clients: usize,
+    pub momentum: f32,
+    pub layers: Vec<LayerMeta>,
+    pub artifacts: ArtifactFiles,
+    pub init_sha256: String,
+    pub dir: PathBuf,
+}
+
+fn usize_arr(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|v| v.as_usize()).collect()
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join(format!("{model}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let meta = Self::from_json(&text, dir)?;
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn from_json(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut layers = Vec::new();
+        for l in j.get("layers")?.as_arr()? {
+            let mut arrays = Vec::new();
+            for a in l.get("arrays")?.as_arr()? {
+                arrays.push(ArrayMeta {
+                    name: a.get("name")?.as_str()?.to_string(),
+                    shape: usize_arr(a.get("shape")?)?,
+                    offset: a.get("offset")?.as_usize()?,
+                    size: a.get("size")?.as_usize()?,
+                });
+            }
+            layers.push(LayerMeta {
+                name: l.get("name")?.as_str()?.to_string(),
+                kind: l.get("kind")?.as_str()?.to_string(),
+                offset: l.get("offset")?.as_usize()?,
+                size: l.get("size")?.as_usize()?,
+                arrays,
+            });
+        }
+        let arts = j.get("artifacts")?;
+        Ok(ModelMeta {
+            model: j.get("model")?.as_str()?.to_string(),
+            dim: j.get("dim")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            input_shape: usize_arr(j.get("input_shape")?)?,
+            input_dtype: j.get("input_dtype")?.as_str()?.to_string(),
+            tau: j.get("tau")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            agg_clients: j.get("agg_clients")?.as_usize()?,
+            momentum: j.get("momentum")?.as_f64()? as f32,
+            layers,
+            artifacts: ArtifactFiles {
+                train: arts.get("train")?.as_str()?.to_string(),
+                eval: arts.get("eval")?.as_str()?.to_string(),
+                agg: arts.get("agg")?.as_str()?.to_string(),
+                init: arts.get("init")?.as_str()?.to_string(),
+            },
+            init_sha256: j.get("init_sha256")?.as_str()?.to_string(),
+            dir,
+        })
+    }
+
+    /// Consistency checks on the layer table (mirrors the pytest side).
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for l in &self.layers {
+            if l.offset != off {
+                bail!("layer {} offset {} != expected {}", l.name, l.offset, off);
+            }
+            if !l.arrays.is_empty() {
+                let arr_total: usize = l.arrays.iter().map(|a| a.size).sum();
+                if arr_total != l.size {
+                    bail!("layer {} arrays sum {} != size {}", l.name, arr_total, l.size);
+                }
+            }
+            off += l.size;
+        }
+        if off != self.dim {
+            bail!("layer sizes sum {} != dim {}", off, self.dim);
+        }
+        if self.input_dtype != "f32" && self.input_dtype != "i32" {
+            bail!("unsupported input dtype {}", self.input_dtype);
+        }
+        Ok(())
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Number of scalar input features (product of input_shape).
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn is_text(&self) -> bool {
+        self.input_dtype == "i32"
+    }
+
+    /// Slice layer `l` out of a flat vector.
+    pub fn layer<'a>(&self, flat: &'a [f32], l: usize) -> &'a [f32] {
+        let m = &self.layers[l];
+        &flat[m.offset..m.offset + m.size]
+    }
+
+    pub fn layer_mut<'a>(&self, flat: &'a mut [f32], l: usize) -> &'a mut [f32] {
+        let m = &self.layers[l];
+        &mut flat[m.offset..m.offset + m.size]
+    }
+
+    /// Load `<model>.init.bin` (raw little-endian f32) as the initial
+    /// global parameters.
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.artifacts.init);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != self.dim * 4 {
+            bail!("init.bin has {} bytes, expected {}", bytes.len(), self.dim * 4);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Bytes to upload the full model update (f32).
+    pub fn full_bytes(&self) -> u64 {
+        (self.dim as u64) * 4
+    }
+
+    /// Bytes for the given subset of layers.
+    pub fn layer_bytes(&self, layers: &[usize]) -> u64 {
+        layers.iter().map(|&l| (self.layers[l].size as u64) * 4).sum()
+    }
+}
+
+/// Default artifacts directory: `$FEDLUAR_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FEDLUAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const TOY: &str = r#"{
+        "model":"toy","dim":10,"num_classes":2,
+        "input_shape":[4],"input_dtype":"f32",
+        "tau":2,"batch":3,"eval_batch":8,"agg_clients":4,"momentum":0.9,
+        "layers":[
+          {"name":"a","kind":"dense","offset":0,"size":6,
+           "arrays":[{"name":"w","shape":[2,2],"offset":0,"size":4},
+                      {"name":"b","shape":[2],"offset":4,"size":2}]},
+          {"name":"b","kind":"dense","offset":6,"size":4,
+           "arrays":[{"name":"w","shape":[4],"offset":6,"size":4}]}
+        ],
+        "artifacts":{"train":"t","eval":"e","agg":"g","init":"i"},
+        "init_sha256":"x"
+    }"#;
+
+    fn toy_meta() -> ModelMeta {
+        ModelMeta::from_json(TOY, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parse_and_validate_ok() {
+        let m = toy_meta();
+        m.validate().unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.num_layers(), 2);
+        assert_eq!(m.input_elems(), 4);
+        assert!(!m.is_text());
+        assert_eq!(m.layers[0].arrays[1].shape, vec![2]);
+    }
+
+    #[test]
+    fn validate_rejects_gap() {
+        let mut m = toy_meta();
+        m.layers[1].offset = 7;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_total() {
+        let mut m = toy_meta();
+        m.dim = 11;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_dtype() {
+        let mut m = toy_meta();
+        m.input_dtype = "f64".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn layer_slicing() {
+        let m = toy_meta();
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(m.layer(&flat, 0), &flat[0..6]);
+        assert_eq!(m.layer(&flat, 1), &flat[6..10]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let m = toy_meta();
+        assert_eq!(m.full_bytes(), 40);
+        assert_eq!(m.layer_bytes(&[0]), 24);
+        assert_eq!(m.layer_bytes(&[0, 1]), 40);
+    }
+
+    #[test]
+    fn missing_key_is_loud() {
+        let broken = TOY.replace("\"dim\":10,", "");
+        assert!(ModelMeta::from_json(&broken, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Server-side optimizers (the Table 3 "harmonization" targets).
+//!
+//! All of them consume the composed global update \hat{Delta}_t that
+//! LUAR (or plain averaging) produced — LUAR is agnostic to the
+//! optimizer, which is exactly the paper's Section 4.2 claim.
+//!
+//! * `Sgd`   — FedAvg server: x += delta.
+//! * `Adam`  — FedOpt/FedAdam (Reddi et al.): delta as pseudo-gradient.
+//! * `Acg`   — FedACG (Kim et al., CVPR'24): server keeps momentum m;
+//!   broadcasts the lookahead x + lambda*m; m <- lambda*m + delta;
+//!   x <- x + m. Clients add a proximal penalty toward the broadcast.
+//! * `Mut`   — FedMut (Hu et al., AAAI'24): broadcasts per-client
+//!   mutations x ± alpha*delta_prev (paired so mutations cancel in
+//!   aggregate), which searches a flatter region around x.
+
+use crate::config::ServerOptCfg;
+use crate::tensor;
+
+pub struct ServerOpt {
+    cfg: ServerOptCfg,
+    /// Global model x_t.
+    x: Vec<f32>,
+    /// Adam first/second moments or ACG momentum (lazily sized).
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Last composed update (for FedMut mutations).
+    last_delta: Vec<f32>,
+    step: u64,
+}
+
+impl ServerOpt {
+    pub fn new(cfg: ServerOptCfg, init: Vec<f32>) -> Self {
+        let d = init.len();
+        let needs_m = !matches!(cfg, ServerOptCfg::Sgd);
+        let needs_v = matches!(cfg, ServerOptCfg::Adam { .. });
+        ServerOpt {
+            cfg,
+            x: init,
+            m: if needs_m { vec![0.0; d] } else { Vec::new() },
+            v: if needs_v { vec![0.0; d] } else { Vec::new() },
+            last_delta: Vec::new(),
+            step: 0,
+        }
+    }
+
+    /// Current global parameters.
+    pub fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Checkpoint snapshot: (x, m, v, last_delta, step).
+    pub fn snapshot(&self) -> (&[f32], &[f32], &[f32], &[f32], u64) {
+        (&self.x, &self.m, &self.v, &self.last_delta, self.step)
+    }
+
+    /// Restore a snapshot taken with the same optimizer config.
+    pub fn restore(&mut self, x: Vec<f32>, m: Vec<f32>, v: Vec<f32>, last_delta: Vec<f32>, step: u64) {
+        self.x = x;
+        self.m = m;
+        self.v = v;
+        self.last_delta = last_delta;
+        self.step = step;
+    }
+
+    /// The model broadcast to client in slot `slot` this round
+    /// (Alg. 2 line 5). Most optimizers broadcast x; ACG broadcasts the
+    /// lookahead; FedMut broadcasts paired mutations.
+    pub fn broadcast(&self, slot: usize) -> Vec<f32> {
+        match &self.cfg {
+            ServerOptCfg::Acg { lambda } => {
+                let mut out = self.x.clone();
+                if !self.m.is_empty() {
+                    tensor::axpy(*lambda, &self.m, &mut out);
+                }
+                out
+            }
+            ServerOptCfg::Mut { alpha } => {
+                let mut out = self.x.clone();
+                if !self.last_delta.is_empty() {
+                    let sign = if slot % 2 == 0 { 1.0 } else { -1.0 };
+                    tensor::axpy(sign * alpha, &self.last_delta, &mut out);
+                }
+                out
+            }
+            _ => self.x.clone(),
+        }
+    }
+
+    /// Whether clients should measure their local deltas against the
+    /// broadcast (true for FedMut, whose broadcasts differ per client).
+    pub fn per_client_broadcast(&self) -> bool {
+        matches!(self.cfg, ServerOptCfg::Mut { .. })
+    }
+
+    /// The anchor for the FedProx/FedACG proximal term.
+    pub fn prox_anchor(&self) -> Vec<f32> {
+        // For ACG the penalty is toward the broadcast lookahead.
+        self.broadcast(0)
+    }
+
+    /// Apply the composed global update \hat{Delta}_t (Alg. 2 line 12).
+    pub fn apply(&mut self, delta: &[f32]) {
+        self.step += 1;
+        match self.cfg.clone() {
+            ServerOptCfg::Sgd => {
+                tensor::axpy(1.0, delta, &mut self.x);
+            }
+            ServerOptCfg::Adam { lr } => {
+                const B1: f32 = 0.9;
+                const B2: f32 = 0.99;
+                const EPS: f32 = 1e-3; // FedOpt's tau adaptivity term
+                let t = self.step as i32;
+                let bc1 = 1.0 - B1.powi(t);
+                let bc2 = 1.0 - B2.powi(t);
+                for i in 0..self.x.len() {
+                    let g = delta[i];
+                    self.m[i] = B1 * self.m[i] + (1.0 - B1) * g;
+                    self.v[i] = B2 * self.v[i] + (1.0 - B2) * g * g;
+                    let mh = self.m[i] / bc1;
+                    let vh = self.v[i] / bc2;
+                    self.x[i] += lr * mh / (vh.sqrt() + EPS);
+                }
+            }
+            ServerOptCfg::Acg { lambda } => {
+                for i in 0..self.x.len() {
+                    self.m[i] = lambda * self.m[i] + delta[i];
+                    self.x[i] += self.m[i];
+                }
+            }
+            ServerOptCfg::Mut { .. } => {
+                tensor::axpy(1.0, delta, &mut self.x);
+                self.last_delta = delta.to_vec();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(d: usize, v: f32) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn sgd_adds_delta() {
+        let mut o = ServerOpt::new(ServerOptCfg::Sgd, vec![1.0; 4]);
+        o.apply(&delta(4, 0.5));
+        assert_eq!(o.params(), &[1.5; 4]);
+        assert_eq!(o.broadcast(0), vec![1.5; 4]);
+    }
+
+    #[test]
+    fn adam_moves_toward_delta_sign() {
+        let mut o = ServerOpt::new(ServerOptCfg::Adam { lr: 0.1 }, vec![0.0; 4]);
+        for _ in 0..5 {
+            o.apply(&delta(4, 1.0));
+        }
+        assert!(o.params()[0] > 0.0);
+        let mut o2 = ServerOpt::new(ServerOptCfg::Adam { lr: 0.1 }, vec![0.0; 4]);
+        for _ in 0..5 {
+            o2.apply(&delta(4, -1.0));
+        }
+        assert!(o2.params()[0] < 0.0);
+    }
+
+    #[test]
+    fn adam_is_scale_adaptive() {
+        // Adam normalizes by sqrt(v): tiny deltas still move x measurably.
+        let mut small = ServerOpt::new(ServerOptCfg::Adam { lr: 0.1 }, vec![0.0; 1]);
+        for _ in 0..20 {
+            small.apply(&[1e-4]);
+        }
+        let mut big = ServerOpt::new(ServerOptCfg::Adam { lr: 0.1 }, vec![0.0; 1]);
+        for _ in 0..20 {
+            big.apply(&[1.0]);
+        }
+        let ratio = big.params()[0] / small.params()[0];
+        assert!(ratio < 50.0, "adam not adaptive: ratio {ratio}");
+    }
+
+    #[test]
+    fn acg_broadcast_is_lookahead() {
+        let mut o = ServerOpt::new(ServerOptCfg::Acg { lambda: 0.5 }, vec![0.0; 2]);
+        o.apply(&[1.0, 1.0]); // m = [1,1], x = [1,1]
+        assert_eq!(o.params(), &[1.0, 1.0]);
+        assert_eq!(o.broadcast(0), vec![1.5, 1.5]); // x + 0.5*m
+        o.apply(&[1.0, 1.0]); // m = 0.5*1+1 = 1.5, x = 2.5
+        assert_eq!(o.params(), &[2.5, 2.5]);
+    }
+
+    #[test]
+    fn acg_momentum_accelerates() {
+        let mut acg = ServerOpt::new(ServerOptCfg::Acg { lambda: 0.9 }, vec![0.0; 1]);
+        let mut sgd = ServerOpt::new(ServerOptCfg::Sgd, vec![0.0; 1]);
+        for _ in 0..10 {
+            acg.apply(&[1.0]);
+            sgd.apply(&[1.0]);
+        }
+        assert!(acg.params()[0] > sgd.params()[0]);
+    }
+
+    #[test]
+    fn mut_broadcasts_paired_mutations() {
+        let mut o = ServerOpt::new(ServerOptCfg::Mut { alpha: 0.5 }, vec![0.0; 2]);
+        // first round: no previous delta, broadcasts are identical
+        assert_eq!(o.broadcast(0), o.broadcast(1));
+        o.apply(&[2.0, 2.0]);
+        let b0 = o.broadcast(0);
+        let b1 = o.broadcast(1);
+        assert_eq!(b0, vec![3.0, 3.0]); // x=2 + 0.5*2
+        assert_eq!(b1, vec![1.0, 1.0]); // x=2 - 0.5*2
+        // mutations cancel pairwise around x
+        let mid: Vec<f32> = b0.iter().zip(&b1).map(|(a, b)| (a + b) / 2.0).collect();
+        assert_eq!(mid, o.params());
+        assert!(o.per_client_broadcast());
+    }
+}

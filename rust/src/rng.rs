@@ -1,0 +1,329 @@
+//! Deterministic PRNG substrate (no external crates available in the
+//! offline build): SplitMix64 seeding + xoshiro256** generation, plus
+//! the distributions the simulator needs — uniform, Bernoulli, normal
+//! (Box–Muller), Gamma (Marsaglia–Tsang), Dirichlet, Fisher–Yates
+//! shuffle, and weighted sampling without replacement (the LUAR layer
+//! sampler, Alg. 1 line 8).
+//!
+//! Determinism is a core requirement: every experiment in
+//! EXPERIMENTS.md is reproducible from its seed.
+
+/// xoshiro256** seeded via SplitMix64 (Blackman & Vigna).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Snapshot / restore for checkpointing.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo). Lemire-style rejection-free
+    /// multiply-shift is fine here; modulo bias at these ranges is
+    /// negligible for simulation, but we use rejection to stay exact.
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        let span = (hi - lo) as u64;
+        // rejection sampling for exactness
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + (v % span) as usize;
+            }
+        }
+    }
+
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (uses both values).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; boosts shape<1 with the
+    /// standard u^(1/shape) trick.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            let u = self.f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_n) via normalized Gammas.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let s: f64 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    /// In-place Fisher–Yates.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from 0..n uniformly (partial F-Y).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.gen_range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Weighted sampling of `k` distinct indices without replacement
+    /// (successive draws with renormalization) — Alg. 1 line 8's
+    /// Random_Choice([L], delta, p). Weights must be non-negative and
+    /// not all zero.
+    pub fn weighted_sample_without_replacement(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        let n = weights.len();
+        let k = k.min(n);
+        assert!(weights.iter().all(|&w| w >= 0.0), "negative weight");
+        let mut w = weights.to_vec();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let total: f64 = w.iter().sum();
+            if total <= 0.0 {
+                // remaining mass exhausted: return fewer picks rather
+                // than inventing zero-probability selections
+                break;
+            }
+            let mut t = self.f64() * total;
+            let mut pick = n - 1;
+            for (i, &wi) in w.iter().enumerate() {
+                if t < wi {
+                    pick = i;
+                    break;
+                }
+                t -= wi;
+            }
+            // guard against fp drift picking an exhausted index
+            if w[pick] == 0.0 {
+                match w.iter().position(|&x| x > 0.0) {
+                    Some(i) => pick = i,
+                    None => break,
+                }
+            }
+            out.push(pick);
+            w[pick] = 0.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        let mut c = Rng::seed_from_u64(8);
+        let xs: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::seed_from_u64(1);
+        let n = 20_000;
+        let m: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Rng::seed_from_u64(2);
+        for _ in 0..1000 {
+            let v = r.gen_range(3, 9);
+            assert!((3..9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::seed_from_u64(4);
+        for shape in [0.1, 0.5, 1.0, 3.0, 10.0] {
+            let n = 20_000;
+            let m: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((m - shape).abs() < 0.15 * shape.max(1.0), "shape {shape} mean {m}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seed_from_u64(5);
+        let p = r.dirichlet(0.1, 16);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn low_alpha_dirichlet_concentrates() {
+        let mut r = Rng::seed_from_u64(6);
+        let mut max_mass = 0.0f64;
+        for _ in 0..20 {
+            let p = r.dirichlet(0.05, 10);
+            max_mass = max_mass.max(p.iter().cloned().fold(0.0, f64::max));
+        }
+        assert!(max_mass > 0.8, "max mass {max_mass}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(7);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::seed_from_u64(8);
+        let s = r.sample_indices(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 30);
+    }
+
+    #[test]
+    fn weighted_sampling_distinct_and_biased() {
+        let mut r = Rng::seed_from_u64(9);
+        // index 0 has overwhelming weight: it should almost always appear
+        let w = vec![1000.0, 1.0, 1.0, 1.0, 1.0];
+        let mut count0 = 0;
+        for _ in 0..200 {
+            let s = r.weighted_sample_without_replacement(&w, 2);
+            assert_eq!(s.len(), 2);
+            assert_ne!(s[0], s[1]);
+            if s.contains(&0) {
+                count0 += 1;
+            }
+        }
+        assert!(count0 > 190, "heavy index sampled only {count0}/200");
+    }
+
+    #[test]
+    fn weighted_sampling_zero_weights_yield_nothing() {
+        let mut r = Rng::seed_from_u64(10);
+        let s = r.weighted_sample_without_replacement(&[0.0, 0.0, 0.0], 2);
+        assert!(s.is_empty(), "zero-mass indices must never be selected");
+    }
+
+    #[test]
+    fn weighted_sampling_exhausted_mass_returns_fewer() {
+        let mut r = Rng::seed_from_u64(12);
+        let s = r.weighted_sample_without_replacement(&[1.0, 0.0, 0.0], 3);
+        assert_eq!(s, vec![0]);
+    }
+
+    #[test]
+    fn weighted_sampling_k_equals_n() {
+        let mut r = Rng::seed_from_u64(11);
+        let mut s = r.weighted_sample_without_replacement(&[1.0, 2.0, 3.0], 3);
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+}

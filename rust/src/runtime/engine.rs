@@ -1,0 +1,249 @@
+//! The PJRT engine: one compiled executable per lowered graph.
+
+use super::literal::{features_literal, i32_literal, scalar_f32, vec_f32_literal};
+use crate::data::{FedDataset, Features};
+use crate::model::ModelMeta;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::time::Instant;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Result of one client's local-training call (Alg. 2 lines 6-10).
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    /// Accumulated local update Delta_t^i = x_tau - x_0 (flat).
+    pub delta: Vec<f32>,
+    /// Mean training loss across the tau local steps.
+    pub loss: f32,
+}
+
+/// Result of one eval-chunk call.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    /// Sum of per-sample NLL over the chunk.
+    pub loss_sum: f32,
+    /// Number of correct top-1 predictions in the chunk.
+    pub correct: i32,
+}
+
+/// Result of the Pallas-backed server aggregation call.
+#[derive(Debug, Clone)]
+pub struct AggOutput {
+    /// Mean client update (FedAvg numerator), length d.
+    pub mean: Vec<f32>,
+    /// Per-layer squared norms of the mean update (Eq. 1 numerator^2).
+    pub update_ssq: Vec<f32>,
+    /// Per-layer squared norms of the global params (Eq. 1 denominator^2).
+    pub weight_ssq: Vec<f32>,
+}
+
+/// Cumulative execution statistics (perf instrumentation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub train_calls: u64,
+    pub train_secs: f64,
+    pub eval_calls: u64,
+    pub eval_secs: f64,
+    pub agg_calls: u64,
+    pub agg_secs: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub meta: ModelMeta,
+    train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    agg: PjRtLoadedExecutable,
+    /// Cached d-length zero literal for unused anchors (hot-path reuse).
+    zeros: Literal,
+    stats: RefCell<ExecStats>,
+}
+
+impl Engine {
+    /// Load + compile the model's three artifacts on the PJRT CPU client.
+    pub fn load(meta: ModelMeta) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |file: &str| -> Result<PjRtLoadedExecutable> {
+            let path = meta.artifact_path(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {file}"))
+        };
+        let train = compile(&meta.artifacts.train)?;
+        let eval = compile(&meta.artifacts.eval)?;
+        let agg = compile(&meta.artifacts.agg)?;
+        let zeros = vec_f32_literal(&vec![0.0; meta.dim], &[meta.dim])?;
+        Ok(Engine { client, meta, train, eval, agg, zeros, stats: RefCell::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    fn feat_dims(&self, leading: &[usize]) -> Vec<usize> {
+        let mut dims = leading.to_vec();
+        dims.extend_from_slice(&self.meta.input_shape);
+        dims
+    }
+
+    /// Run the lowered local-training graph:
+    /// (params, anchor_g, anchor_prev, xs[tau,B,...], ys, lr, mu_g,
+    /// mu_prev, wd) -> (delta, mean_loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_round(
+        &self,
+        params: &[f32],
+        anchor_g: Option<&[f32]>,
+        anchor_prev: Option<&[f32]>,
+        feats: &Features,
+        labels: &[i32],
+        lr: f32,
+        mu_g: f32,
+        mu_prev: f32,
+        wd: f32,
+    ) -> Result<TrainOutput> {
+        let t0 = Instant::now();
+        let m = &self.meta;
+        let (tau, batch, d) = (m.tau, m.batch, m.dim);
+        if labels.len() != tau * batch {
+            bail!("labels len {} != tau*batch {}", labels.len(), tau * batch);
+        }
+        let p_lit = vec_f32_literal(params, &[d])?;
+        let ag_lit = match anchor_g {
+            Some(a) => Some(vec_f32_literal(a, &[d])?),
+            None => None,
+        };
+        let ap_lit = match anchor_prev {
+            Some(a) => Some(vec_f32_literal(a, &[d])?),
+            None => None,
+        };
+        let xs = features_literal(feats, &self.feat_dims(&[tau, batch]))?;
+        let ys = i32_literal(labels, &[tau, batch])?;
+        let lr_l = scalar_f32(lr);
+        let mug_l = scalar_f32(mu_g);
+        let mup_l = scalar_f32(mu_prev);
+        let wd_l = scalar_f32(wd);
+        let args: Vec<&Literal> = vec![
+            &p_lit,
+            ag_lit.as_ref().unwrap_or(&self.zeros),
+            ap_lit.as_ref().unwrap_or(&self.zeros),
+            &xs,
+            &ys,
+            &lr_l,
+            &mug_l,
+            &mup_l,
+            &wd_l,
+        ];
+        let result = self.train.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (delta_lit, loss_lit) = result.to_tuple2()?;
+        let delta = delta_lit.to_vec::<f32>()?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        let mut s = self.stats.borrow_mut();
+        s.train_calls += 1;
+        s.train_secs += t0.elapsed().as_secs_f64();
+        Ok(TrainOutput { delta, loss })
+    }
+
+    /// Run the eval graph on one fixed-size chunk.
+    pub fn eval_chunk(&self, params: &[f32], feats: &Features, labels: &[i32]) -> Result<EvalOutput> {
+        let t0 = Instant::now();
+        let m = &self.meta;
+        if labels.len() != m.eval_batch {
+            bail!("labels len {} != eval_batch {}", labels.len(), m.eval_batch);
+        }
+        let p_lit = vec_f32_literal(params, &[m.dim])?;
+        let xs = features_literal(feats, &self.feat_dims(&[m.eval_batch]))?;
+        let ys = i32_literal(labels, &[m.eval_batch])?;
+        let args: Vec<&Literal> = vec![&p_lit, &xs, &ys];
+        let result = self.eval.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss_lit, correct_lit) = result.to_tuple2()?;
+        let out = EvalOutput {
+            loss_sum: loss_lit.to_vec::<f32>()?[0],
+            correct: correct_lit.to_vec::<i32>()?[0],
+        };
+        let mut s = self.stats.borrow_mut();
+        s.eval_calls += 1;
+        s.eval_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Evaluate over the whole test split of a dataset; per-sample
+    /// exactness via the valid-count masking of the final chunk.
+    /// Returns (mean_loss, accuracy).
+    pub fn eval_dataset(&self, params: &[f32], ds: &FedDataset) -> Result<(f64, f64)> {
+        let chunk = self.meta.eval_batch;
+        let total = ds.test_len();
+        let full_chunks = total / chunk;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0i64;
+        for c in 0..full_chunks {
+            let (feats, labels, _) = ds.test_chunk(c * chunk, chunk);
+            let out = self.eval_chunk(params, &feats, &labels)?;
+            loss_sum += out.loss_sum as f64;
+            correct += out.correct as i64;
+        }
+        let tail = total - full_chunks * chunk;
+        let mut counted = full_chunks * chunk;
+        if tail > 0 && full_chunks > 0 {
+            // The eval graph has a fixed batch; shift the final window
+            // back so it is fully in-range. The overlap with the last
+            // full chunk is double-counted, so weight the shifted
+            // window by tail/chunk (samples are iid by construction).
+            let (feats, labels, _) = ds.test_chunk(total - chunk, chunk);
+            let out = self.eval_chunk(params, &feats, &labels)?;
+            let w = tail as f64 / chunk as f64;
+            loss_sum += out.loss_sum as f64 * w;
+            correct += ((out.correct as f64) * w).round() as i64;
+            counted += tail;
+        } else if full_chunks == 0 {
+            // Dataset smaller than one chunk: wrap-padded single chunk,
+            // scaled to the valid fraction.
+            let (feats, labels, valid) = ds.test_chunk(0, chunk);
+            let out = self.eval_chunk(params, &feats, &labels)?;
+            let w = valid as f64 / chunk as f64;
+            loss_sum += out.loss_sum as f64 * w;
+            correct += ((out.correct as f64) * w).round() as i64;
+            counted = valid;
+        }
+        Ok((loss_sum / counted as f64, correct as f64 / counted as f64))
+    }
+
+    /// Run the Pallas-backed aggregation graph. Requires exactly
+    /// `meta.agg_clients` updates (the lowered static shape); callers
+    /// with a different count use the pure-Rust fallback in
+    /// `tensor::mean_rows_par`.
+    pub fn aggregate(&self, updates: &[&[f32]], params: &[f32]) -> Result<AggOutput> {
+        let t0 = Instant::now();
+        let m = &self.meta;
+        let a = m.agg_clients;
+        if updates.len() != a {
+            bail!("agg graph lowered for {} clients, got {}", a, updates.len());
+        }
+        let mut stacked = Vec::with_capacity(a * m.dim);
+        for u in updates {
+            if u.len() != m.dim {
+                bail!("update len {} != dim {}", u.len(), m.dim);
+            }
+            stacked.extend_from_slice(u);
+        }
+        let u_lit = vec_f32_literal(&stacked, &[a, m.dim])?;
+        let p_lit = vec_f32_literal(params, &[m.dim])?;
+        let args: Vec<&Literal> = vec![&u_lit, &p_lit];
+        let result = self.agg.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (mean_lit, ussq_lit, wssq_lit) = result.to_tuple3()?;
+        let out = AggOutput {
+            mean: mean_lit.to_vec::<f32>()?,
+            update_ssq: ussq_lit.to_vec::<f32>()?,
+            weight_ssq: wssq_lit.to_vec::<f32>()?,
+        };
+        let mut s = self.stats.borrow_mut();
+        s.agg_calls += 1;
+        s.agg_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}

@@ -1,0 +1,38 @@
+//! Literal construction helpers: host buffers -> shaped XLA literals.
+
+use crate::data::Features;
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// f32 buffer -> shaped literal; validates the element count.
+pub fn vec_f32_literal(v: &[f32], dims: &[usize]) -> Result<Literal> {
+    let want: usize = dims.iter().product();
+    if v.len() != want {
+        bail!("shape {:?} wants {} elements, got {}", dims, want, v.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(v).reshape(&dims_i64)?)
+}
+
+/// i32 buffer -> shaped literal.
+pub fn i32_literal(v: &[i32], dims: &[usize]) -> Result<Literal> {
+    let want: usize = dims.iter().product();
+    if v.len() != want {
+        bail!("shape {:?} wants {} elements, got {}", dims, want, v.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(v).reshape(&dims_i64)?)
+}
+
+/// Feature buffer (dtype per model) -> shaped literal.
+pub fn features_literal(f: &Features, dims: &[usize]) -> Result<Literal> {
+    match f {
+        Features::F32(v) => vec_f32_literal(v, dims),
+        Features::I32(v) => i32_literal(v, dims),
+    }
+}
+
+/// f32 scalar literal.
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}

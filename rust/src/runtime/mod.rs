@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the request path. This is the only module that touches the `xla`
+//! crate; everything above it sees plain `&[f32]` / `&[i32]` buffers.
+//!
+//! One `Engine` owns the PJRT CPU client and the three compiled
+//! executables per model (train / eval / agg). Compilation happens
+//! once at startup; per-call cost is literal construction + execute +
+//! copy-out, measured in `benches/runtime_exec.rs`.
+
+mod engine;
+mod literal;
+
+pub use engine::{AggOutput, Engine, EvalOutput, TrainOutput};
+pub use literal::{features_literal, i32_literal, scalar_f32, vec_f32_literal};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let lit = vec_f32_literal(&v, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = vec![5i32, -7, 0];
+        let lit = i32_literal(&v, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), v);
+    }
+
+    #[test]
+    fn literal_reshape_checks_count() {
+        assert!(vec_f32_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Flat-tensor substrate: the model crosses the HLO boundary as one
+//! contiguous `f32` vector, and everything layer-wise in FedLUAR is
+//! offset arithmetic over it. These kernels are the L3 hot path
+//! (aggregation fallback, norms, server optimizer updates), written
+//! to auto-vectorize and benchmarked in `benches/aggregation.rs`.
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x (memcpy)
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Sum of squares (single pass, f64 accumulator for stability).
+pub fn ssq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// L2 norm.
+pub fn norm(x: &[f32]) -> f64 {
+    ssq(x).sqrt()
+}
+
+/// Dot product with f64 accumulator.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| (a as f64) * (b as f64)).sum()
+}
+
+/// out = mean over rows of `rows` (each of length d). Scalar fallback
+/// for when the Pallas-backed HLO aggregator can't be used (e.g. the
+/// active-client count differs from the lowered `agg_clients`).
+pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
+    let a = rows.len();
+    assert!(a > 0, "mean over zero rows");
+    let inv = 1.0 / a as f32;
+    out.copy_from_slice(rows[0]);
+    for row in &rows[1..] {
+        axpy(1.0, row, out);
+    }
+    scale(inv, out);
+}
+
+/// Blocked + thread-parallel mean over rows: splits `out` into column
+/// ranges so each thread reduces its range over all rows with
+/// streaming reads (scoped std threads; no external crates offline).
+pub fn mean_rows_par(rows: &[&[f32]], out: &mut [f32]) {
+    let a = rows.len();
+    assert!(a > 0, "mean over zero rows");
+    let d = out.len();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // Small vectors: threading overhead dominates; stay serial.
+    if d < 64 * 1024 || threads < 2 {
+        return mean_rows(rows, out);
+    }
+    let inv = 1.0 / a as f32;
+    let chunk = d.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let rows = &rows;
+            scope.spawn(move || {
+                let start = ci * chunk;
+                let end = start + out_chunk.len();
+                out_chunk.copy_from_slice(&rows[0][start..end]);
+                for row in &rows[1..] {
+                    axpy(1.0, &row[start..end], out_chunk);
+                }
+                scale(inv, out_chunk);
+            });
+        }
+    });
+}
+
+/// Weighted mean: out = sum_i w[i] * rows[i]; w need not sum to 1.
+pub fn weighted_mean_rows(rows: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    assert_eq!(rows.len(), w.len());
+    assert!(!rows.is_empty());
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for (row, &wi) in rows.iter().zip(w) {
+        axpy(wi, row, out);
+    }
+}
+
+/// Cosine similarity; 0 when either vector is ~zero.
+pub fn cosine(x: &[f32], y: &[f32]) -> f64 {
+    let nx = norm(x);
+    let ny = norm(y);
+    if nx < 1e-12 || ny < 1e-12 {
+        return 0.0;
+    }
+    dot(x, y) / (nx * ny)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn ssq_and_norm() {
+        let x = [3.0f32, 4.0];
+        assert!((ssq(&x) - 25.0).abs() < 1e-9);
+        assert!((norm(&x) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_rows_basic() {
+        let r1 = vec![1.0f32; 5];
+        let r2 = vec![3.0f32; 5];
+        let mut out = vec![0.0f32; 5];
+        mean_rows(&[&r1, &r2], &mut out);
+        assert!(out.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn mean_rows_par_matches_serial() {
+        let n = 200_000; // above the parallel threshold
+        let rows: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..n).map(|j| ((i * j) % 13) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        mean_rows(&refs, &mut a);
+        mean_rows_par(&refs, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn weighted_mean_uniform_equals_mean() {
+        let r1 = vec![1.0f32, 5.0];
+        let r2 = vec![3.0f32, 7.0];
+        let mut wm = vec![0.0f32; 2];
+        weighted_mean_rows(&[&r1, &r2], &[0.5, 0.5], &mut wm);
+        assert_eq!(wm, vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let x = [1.0f32, 0.0];
+        let y = [0.0f32, 1.0];
+        assert!(cosine(&x, &x) > 0.999);
+        assert!(cosine(&x, &y).abs() < 1e-9);
+        assert_eq!(cosine(&x, &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mean_of_nothing_panics() {
+        let mut out = vec![0.0f32; 1];
+        mean_rows(&[], &mut out);
+    }
+}

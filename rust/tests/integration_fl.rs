@@ -1,0 +1,290 @@
+//! FL-loop integration: real artifacts + the full Algorithm 2 round
+//! loop, pinning the system-level invariants the paper relies on.
+//! Uses the small MLP benchmark (sub-second rounds); skips when
+//! artifacts are missing.
+
+use fedluar::config::{
+    ClientOptCfg, Method, RecycleMode, RunConfig, SelectionScheme, ServerOptCfg,
+};
+use fedluar::fl::Server;
+use fedluar::model::{artifacts_dir, ModelMeta};
+
+fn have_artifacts() -> bool {
+    if ModelMeta::load(artifacts_dir(), "mlp").is_ok() {
+        true
+    } else {
+        eprintln!("SKIP: run `make artifacts`");
+        false
+    }
+}
+
+fn quick_cfg(method: Method) -> RunConfig {
+    let mut cfg = RunConfig::benchmark("mlp").unwrap();
+    cfg.num_clients = 24;
+    cfg.active_clients = 6;
+    cfg.per_client = 64;
+    cfg.test_size = 256;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.method = method;
+    cfg
+}
+
+#[test]
+fn fedavg_learns_and_counts_full_comm() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = Server::new(quick_cfg(Method::FedAvg)).unwrap();
+    s.run().unwrap();
+    assert!((s.comm.comm_ratio() - 1.0).abs() < 1e-9, "FedAvg comm must be 1.0");
+    assert!(s.history.final_acc() > 0.25, "acc {}", s.history.final_acc());
+    assert_eq!(s.comm.rounds, 8);
+    // every layer uploaded every round
+    assert!(s.comm.layer_frequencies().iter().all(|&f| (f - 1.0).abs() < 1e-9));
+}
+
+#[test]
+fn fedluar_reduces_comm_and_still_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    s.run().unwrap();
+    let ratio = s.comm.comm_ratio();
+    assert!(ratio < 0.95, "LUAR must reduce comm, got {ratio}");
+    assert!(ratio > 0.05, "comm ratio suspiciously low: {ratio}");
+    assert!(s.history.final_acc() > 0.2);
+    // some layer was recycled at least once
+    let freqs = s.comm.layer_frequencies();
+    assert!(freqs.iter().any(|&f| f < 1.0), "no layer ever recycled: {freqs:?}");
+}
+
+#[test]
+fn fedluar_runs_are_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut a = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    a.run().unwrap();
+    let mut b = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    b.run().unwrap();
+    assert_eq!(a.history.records.len(), b.history.records.len());
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.test_acc, rb.test_acc, "round {} acc differs", ra.round);
+        assert_eq!(ra.up_bytes, rb.up_bytes);
+    }
+}
+
+#[test]
+fn kappa_logged_only_for_luar() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut avg = Server::new(quick_cfg(Method::FedAvg)).unwrap();
+    avg.run().unwrap();
+    assert_eq!(avg.history.max_kappa(), 0.0);
+    let mut luar = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    luar.run().unwrap();
+    assert!(luar.history.max_kappa() > 0.0);
+    assert!(luar.history.max_kappa() <= 1.0);
+}
+
+#[test]
+fn drop_mode_has_same_comm_as_recycle() {
+    if !have_artifacts() {
+        return;
+    }
+    let mk = |mode| Method::Luar { delta: 2, scheme: SelectionScheme::Luar, mode, adaptive: false };
+    let mut rec = Server::new(quick_cfg(mk(RecycleMode::Recycle))).unwrap();
+    rec.run().unwrap();
+    let mut drop = Server::new(quick_cfg(mk(RecycleMode::Drop))).unwrap();
+    drop.run().unwrap();
+    // identical seeds -> identical selection -> identical bytes
+    assert_eq!(rec.comm.up_bytes, drop.comm.up_bytes);
+}
+
+#[test]
+fn compressed_baselines_run_and_save_bytes() {
+    if !have_artifacts() {
+        return;
+    }
+    for (method, max_ratio) in [
+        (Method::Quantize { levels: 16 }, 0.2),
+        (Method::Binarize, 0.05),
+        (Method::TopK { keep_ratio: 0.1 }, 0.25),
+        (Method::DropoutAvg { rate: 0.5 }, 0.6),
+    ] {
+        let mut s = Server::new(quick_cfg(method.clone())).unwrap();
+        s.run().unwrap();
+        let r = s.comm.comm_ratio();
+        assert!(r < max_ratio, "{} ratio {r} > {max_ratio}", method.label());
+        assert!(s.history.final_acc() > 0.15, "{} collapsed", method.label());
+    }
+}
+
+#[test]
+fn server_optimizers_run() {
+    if !have_artifacts() {
+        return;
+    }
+    for sopt in [
+        ServerOptCfg::Adam { lr: 0.05 },
+        ServerOptCfg::Acg { lambda: 0.5 },
+        ServerOptCfg::Mut { alpha: 0.5 },
+    ] {
+        let mut cfg = quick_cfg(Method::luar(2));
+        cfg.server_opt = sopt.clone();
+        if matches!(sopt, ServerOptCfg::Acg { .. }) {
+            cfg.client_opt = ClientOptCfg { mu_global: 0.01, mu_prev: 0.0 };
+        }
+        let mut s = Server::new(cfg).unwrap();
+        s.run().unwrap();
+        assert!(
+            s.history.final_acc() > 0.15,
+            "{} collapsed: {}",
+            sopt.label(),
+            s.history.final_acc()
+        );
+    }
+}
+
+#[test]
+fn moon_lite_tracks_prev_local_models() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::FedAvg);
+    cfg.client_opt = ClientOptCfg { mu_global: 0.1, mu_prev: 0.05 };
+    let mut s = Server::new(cfg).unwrap();
+    s.run().unwrap();
+    assert!(s.history.final_acc() > 0.15);
+}
+
+#[test]
+fn luar_compose_with_quantization() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::luar(2));
+    cfg.luar_compress = Some(Method::Quantize { levels: 16 });
+    let mut s = Server::new(cfg).unwrap();
+    s.run().unwrap();
+    // composition must be cheaper than LUAR alone
+    let mut plain = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    plain.run().unwrap();
+    assert!(s.comm.up_bytes < plain.comm.up_bytes);
+    assert!(s.history.final_acc() > 0.15);
+}
+
+#[test]
+fn layer_stats_are_populated() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = Server::new(quick_cfg(Method::FedAvg)).unwrap();
+    s.run().unwrap();
+    let stats = s.layer_stats();
+    assert_eq!(stats.len(), s.meta().num_layers());
+    assert!(stats.iter().all(|(_, g, w, r)| *g > 0.0 && *w > 0.0 && *r > 0.0));
+}
+
+#[test]
+fn memory_footprint_shrinks_for_luar() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    s.run().unwrap();
+    let (avg, luar) = s.memory_footprint();
+    assert!(luar < avg, "LUAR footprint {luar} !< FedAvg {avg}");
+}
+
+#[test]
+fn nonstandard_active_count_uses_rust_fallback() {
+    if !have_artifacts() {
+        return;
+    }
+    // active=6 != agg_clients=32 -> pure-Rust aggregation path.
+    let mut s = Server::new(quick_cfg(Method::FedAvg)).unwrap();
+    s.run().unwrap();
+    assert_eq!(s.engine.stats().agg_calls, 0);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    // straight-through run: 8 rounds
+    let mut full = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    full.run().unwrap();
+    // interrupted run: 4 rounds, checkpoint, fresh server, resume 4 more
+    let mut cfg = quick_cfg(Method::luar(2));
+    cfg.rounds = 4;
+    let mut first = Server::new(cfg).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_test.bin");
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = Server::new(quick_cfg(Method::luar(2))).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 4);
+    resumed.run().unwrap();
+    // terminal state must match the uninterrupted run exactly
+    assert_eq!(resumed.comm.up_bytes, full.comm.up_bytes);
+    assert_eq!(resumed.luar.recycle_set, full.luar.recycle_set);
+    let (xa, ..) = resumed.opt.snapshot();
+    let (xb, ..) = full.opt.snapshot();
+    assert_eq!(xa, xb, "resumed params diverged from straight-through run");
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_config() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::luar(2));
+    cfg.rounds = 2;
+    let mut s = Server::new(cfg).unwrap();
+    s.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_mismatch.bin");
+    s.save_checkpoint(&path).unwrap();
+    // wrong method
+    let mut other = Server::new(quick_cfg(Method::FedAvg)).unwrap();
+    assert!(other.load_checkpoint(&path).is_err());
+}
+
+#[test]
+fn client_failures_thin_the_round() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::FedAvg);
+    cfg.client_failure_rate = 0.5;
+    let mut s = Server::new(cfg).unwrap();
+    s.run().unwrap();
+    assert!(s.failed_clients > 0, "no failures injected");
+    // still learns from survivors
+    assert!(s.history.final_acc() > 0.2, "acc {}", s.history.final_acc());
+}
+
+#[test]
+fn adaptive_delta_respects_theorem_bound() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::luar_auto());
+    cfg.rounds = 12;
+    let mut s = Server::new(cfg).unwrap();
+    s.run().unwrap();
+    let ctl = s.delta_ctl.as_ref().expect("controller present");
+    assert!(ctl.delta >= 1);
+    // comm must be below FedAvg
+    assert!(s.comm.comm_ratio() < 1.0);
+    // the EMA the controller converged to stays near/below the bound
+    assert!(
+        ctl.kappa_ema() < 4.0 * ctl.kappa_bound,
+        "kappa ema {} far above bound",
+        ctl.kappa_ema()
+    );
+}

@@ -1,0 +1,182 @@
+//! Runtime integration: load the real AOT artifacts and pin the whole
+//! bridge — layer table, init params, train/eval/agg graph semantics —
+//! against pure-Rust recomputation where possible.
+//!
+//! Requires `make artifacts` (skips loudly if missing).
+
+use fedluar::data::{FedDataset, Features, SynthSpec};
+use fedluar::model::{artifacts_dir, ModelMeta};
+use fedluar::runtime::Engine;
+use fedluar::tensor;
+
+fn engine(model: &str) -> Option<Engine> {
+    let meta = match ModelMeta::load(artifacts_dir(), model) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP: {e:#} (run `make artifacts`)");
+            return None;
+        }
+    };
+    Some(Engine::load(meta).expect("engine"))
+}
+
+fn dataset(eng: &Engine, difficulty: f32) -> FedDataset {
+    let m = &eng.meta;
+    let spec = if m.is_text() {
+        SynthSpec::text(m.input_shape[0], 256, m.num_classes)
+    } else {
+        let (h, w, c) = match m.input_shape.len() {
+            1 => (m.input_shape[0], 1, 1),
+            _ => (m.input_shape[0], m.input_shape[1], m.input_shape[2]),
+        };
+        SynthSpec::vision(h, w, c, m.num_classes)
+    }
+    .with_difficulty(difficulty);
+    FedDataset::new(spec, 8, 128, 1.0, 512, 99)
+}
+
+#[test]
+fn init_params_match_sha() {
+    let Some(eng) = engine("mlp") else { return };
+    let init = eng.meta.load_init().unwrap();
+    assert_eq!(init.len(), eng.meta.dim);
+    // init must be finite and non-degenerate
+    assert!(init.iter().all(|v| v.is_finite()));
+    assert!(tensor::norm(&init) > 1.0);
+}
+
+#[test]
+fn train_graph_returns_learning_delta() {
+    let Some(eng) = engine("mlp") else { return };
+    let ds = dataset(&eng, 1.0);
+    let params = eng.meta.load_init().unwrap();
+    let (feats, labels) = ds.client_batches(0, 0, eng.meta.tau, eng.meta.batch);
+    let out = eng
+        .train_round(&params, None, None, &feats, &labels, 0.05, 0.0, 0.0, 0.0)
+        .unwrap();
+    assert_eq!(out.delta.len(), eng.meta.dim);
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert!(tensor::norm(&out.delta) > 0.0, "zero delta");
+}
+
+#[test]
+fn zero_lr_zero_delta() {
+    let Some(eng) = engine("mlp") else { return };
+    let ds = dataset(&eng, 1.0);
+    let params = eng.meta.load_init().unwrap();
+    let (feats, labels) = ds.client_batches(1, 0, eng.meta.tau, eng.meta.batch);
+    let out = eng
+        .train_round(&params, None, None, &feats, &labels, 0.0, 0.0, 0.0, 0.0)
+        .unwrap();
+    assert_eq!(tensor::norm(&out.delta), 0.0);
+}
+
+#[test]
+fn repeated_rounds_reduce_loss() {
+    let Some(eng) = engine("mlp") else { return };
+    let ds = dataset(&eng, 1.0);
+    let mut params = eng.meta.load_init().unwrap();
+    let (feats, labels) = ds.client_batches(0, 0, eng.meta.tau, eng.meta.batch);
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let out = eng
+            .train_round(&params, None, None, &feats, &labels, 0.05, 0.0, 0.0, 0.0)
+            .unwrap();
+        tensor::axpy(1.0, &out.delta, &mut params);
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "losses {losses:?}"
+    );
+}
+
+#[test]
+fn prox_pull_is_directionally_correct() {
+    let Some(eng) = engine("mlp") else { return };
+    let ds = dataset(&eng, 1.0);
+    let params = eng.meta.load_init().unwrap();
+    let anchor: Vec<f32> = params.iter().map(|v| v + 1.0).collect();
+    let (feats, labels) = ds.client_batches(0, 0, eng.meta.tau, eng.meta.batch);
+    let d_prox = eng
+        .train_round(&params, Some(&anchor), None, &feats, &labels, 0.01, 5.0, 0.0, 0.0)
+        .unwrap()
+        .delta;
+    let d_none = eng
+        .train_round(&params, Some(&anchor), None, &feats, &labels, 0.01, 0.0, 0.0, 0.0)
+        .unwrap()
+        .delta;
+    let diff: Vec<f32> = d_prox.iter().zip(&d_none).map(|(a, b)| a - b).collect();
+    let mean_diff: f32 = diff.iter().sum::<f32>() / diff.len() as f32;
+    assert!(mean_diff > 0.01, "prox did not pull toward +1 anchor: {mean_diff}");
+}
+
+#[test]
+fn eval_graph_counts_and_bounds() {
+    let Some(eng) = engine("mlp") else { return };
+    let ds = dataset(&eng, 1.0);
+    let params = eng.meta.load_init().unwrap();
+    let (loss, acc) = eng.eval_dataset(&params, &ds).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn agg_graph_matches_rust_mean_and_norms() {
+    let Some(eng) = engine("mlp") else { return };
+    let m_dim = eng.meta.dim;
+    let a = eng.meta.agg_clients;
+    let mut rng = fedluar::rng::Rng::seed_from_u64(5);
+    let updates: Vec<Vec<f32>> = (0..a)
+        .map(|_| (0..m_dim).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+        .collect();
+    let params = eng.meta.load_init().unwrap();
+    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    let out = eng.aggregate(&refs, &params).unwrap();
+    // Pallas kernel vs pure-Rust mean
+    let mut want = vec![0.0f32; m_dim];
+    tensor::mean_rows(&refs, &mut want);
+    let max_err = out
+        .mean
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-5, "pallas mean mismatch {max_err}");
+    // per-layer norms vs rust recomputation
+    assert_eq!(out.update_ssq.len(), eng.meta.num_layers());
+    for l in 0..eng.meta.num_layers() {
+        let lm = &eng.meta.layers[l];
+        let want_ssq = tensor::ssq(&want[lm.offset..lm.offset + lm.size]) as f32;
+        let got = out.update_ssq[l];
+        assert!(
+            (got - want_ssq).abs() <= 1e-3 * want_ssq.max(1e-3),
+            "layer {l}: {got} vs {want_ssq}"
+        );
+        let want_w = tensor::ssq(&params[lm.offset..lm.offset + lm.size]) as f32;
+        assert!((out.weight_ssq[l] - want_w).abs() <= 1e-3 * want_w.max(1e-3));
+    }
+}
+
+#[test]
+fn agg_rejects_wrong_client_count() {
+    let Some(eng) = engine("mlp") else { return };
+    let u = vec![0.0f32; eng.meta.dim];
+    let refs: Vec<&[f32]> = vec![u.as_slice(); 3];
+    let params = vec![0.0f32; eng.meta.dim];
+    assert!(eng.aggregate(&refs, &params).is_err());
+}
+
+#[test]
+fn text_model_roundtrip() {
+    let Some(eng) = engine("transformer") else { return };
+    let ds = dataset(&eng, 1.0);
+    let params = eng.meta.load_init().unwrap();
+    let (feats, labels) = ds.client_batches(0, 0, eng.meta.tau, eng.meta.batch);
+    assert!(matches!(feats, Features::I32(_)));
+    let out = eng
+        .train_round(&params, None, None, &feats, &labels, 0.01, 0.0, 0.0, 0.0)
+        .unwrap();
+    assert!(out.loss.is_finite());
+    assert!(tensor::norm(&out.delta) > 0.0);
+}

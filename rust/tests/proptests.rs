@@ -1,0 +1,253 @@
+//! Property-based tests (in-tree harness; proptest is unavailable in
+//! the offline build). Each property is checked over a seeded sweep of
+//! randomized cases; failures print the offending seed so a case can
+//! be replayed exactly.
+
+use fedluar::comm::CommAccountant;
+use fedluar::config::{RecycleMode, SelectionScheme};
+use fedluar::luar::{select_layers, LuarState};
+use fedluar::model::ModelMeta;
+use fedluar::rng::Rng;
+use fedluar::tensor;
+use std::path::PathBuf;
+
+const CASES: u64 = 200;
+
+fn rand_meta(rng: &mut Rng) -> ModelMeta {
+    let layers = rng.gen_range(1, 12);
+    let mut rows = Vec::new();
+    let mut off = 0usize;
+    for l in 0..layers {
+        let size = rng.gen_range(1, 64);
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{size},"arrays":[]}}"#
+        ));
+        off += size;
+    }
+    let doc = format!(
+        r#"{{"model":"prop","dim":{off},"num_classes":3,
+            "input_shape":[4],"input_dtype":"f32","tau":2,"batch":4,
+            "eval_batch":8,"agg_clients":4,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    let meta = ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap();
+    meta.validate().unwrap();
+    meta
+}
+
+// ---------------------------------------------------------------- sampling
+
+#[test]
+fn prop_weighted_sampling_is_distinct_and_in_range() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = rng.gen_range(1, 30);
+        let k = rng.gen_range(0, n + 1);
+        let w: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let picks = rng.weighted_sample_without_replacement(&w, k);
+        assert_eq!(picks.len(), k.min(n), "seed {seed}");
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), picks.len(), "seed {seed}: duplicates");
+        assert!(picks.iter().all(|&i| i < n), "seed {seed}: out of range");
+    }
+}
+
+#[test]
+fn prop_selection_schemes_return_valid_sets() {
+    let schemes = [
+        SelectionScheme::Luar,
+        SelectionScheme::Random,
+        SelectionScheme::Top,
+        SelectionScheme::Bottom,
+        SelectionScheme::GradNorm,
+        SelectionScheme::Deterministic,
+    ];
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = rng.gen_range(1, 20);
+        let delta = rng.gen_range(0, n + 3); // may exceed n
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-6).collect();
+        let observed: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.8)).collect();
+        let inv_sum: f64 = scores
+            .iter()
+            .zip(&observed)
+            .map(|(&s, &o)| if o { 1.0 / s } else { 0.0 })
+            .sum();
+        let probs: Vec<f64> = scores
+            .iter()
+            .zip(&observed)
+            .map(|(&s, &o)| if o && inv_sum > 0.0 { (1.0 / s) / inv_sum } else { 0.0 })
+            .collect();
+        let grads: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        for scheme in schemes {
+            let sel = select_layers(scheme, delta, &scores, &observed, &probs, &grads, &mut rng);
+            assert!(sel.len() <= delta.min(n), "seed {seed} {scheme:?}");
+            let mut sorted = sel.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), sel.len(), "seed {seed} {scheme:?}: dupes");
+            assert!(sel.iter().all(|&l| l < n), "seed {seed} {scheme:?}");
+            // LUAR/deterministic never pick a never-observed layer
+            if matches!(scheme, SelectionScheme::Luar | SelectionScheme::Deterministic)
+                && observed.iter().any(|&o| o)
+            {
+                assert!(
+                    sel.iter().all(|&l| observed[l]),
+                    "seed {seed} {scheme:?}: picked unobserved layer"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- LUAR state
+
+#[test]
+fn prop_compose_preserves_uploaded_layers_and_buffers_match() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let meta = rand_meta(&mut rng);
+        let n = meta.num_layers();
+        let d = meta.dim;
+        let mut st = LuarState::new(n, d);
+        // round 0: full upload
+        let u0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut buf = u0.clone();
+        st.compose_update(&mut buf, &meta, RecycleMode::Recycle);
+        // round 1: random recycle set
+        let k = rng.gen_range(0, n + 1);
+        st.recycle_set = rng.sample_indices(n, k);
+        let u1: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut buf1 = u1.clone();
+        let kappa = st.compose_update(&mut buf1, &meta, RecycleMode::Recycle);
+        assert!((0.0..=1.0 + 1e-9).contains(&kappa), "seed {seed}: kappa {kappa}");
+        for l in 0..n {
+            let lm = &meta.layers[l];
+            let r = lm.offset..lm.offset + lm.size;
+            if st.staleness[l] > 0 {
+                assert_eq!(&buf1[r.clone()], &u0[r], "seed {seed}: recycled layer {l} wrong");
+            } else {
+                assert_eq!(&buf1[r.clone()], &u1[r], "seed {seed}: uploaded layer {l} mangled");
+            }
+        }
+        // buffer now holds the composed update exactly
+        assert_eq!(st.prev_update, buf1, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_probabilities_are_distribution() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let n = rng.gen_range(1, 30);
+        let mut st = LuarState::new(n, 8);
+        let u: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-4).collect();
+        let w: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-4).collect();
+        st.update_scores(&u, &w);
+        let p = st.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9, "seed {seed}");
+        assert!(p.iter().all(|&x| x >= 0.0), "seed {seed}");
+        // lower score -> higher probability (monotone check on a pair)
+        if n >= 2 {
+            let (i, j) = (0, 1);
+            let si = st.scores[i];
+            let sj = st.scores[j];
+            if si < sj {
+                assert!(p[i] >= p[j], "seed {seed}: p not inverse-monotone");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- tensor
+
+#[test]
+fn prop_mean_rows_par_equals_serial() {
+    for seed in 0..40 {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let a = rng.gen_range(1, 8);
+        let d = rng.gen_range(1, 80_000);
+        let rows: Vec<Vec<f32>> =
+            (0..a).map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut s = vec![0.0f32; d];
+        let mut p = vec![0.0f32; d];
+        tensor::mean_rows(&refs, &mut s);
+        tensor::mean_rows_par(&refs, &mut p);
+        for (i, (x, y)) in s.iter().zip(&p).enumerate() {
+            assert!((x - y).abs() < 1e-5, "seed {seed} idx {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn prop_ssq_additive_over_partition() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let d = rng.gen_range(1, 500);
+        let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cut = rng.gen_range(0, d + 1);
+        let total = tensor::ssq(&v);
+        let parts = tensor::ssq(&v[..cut]) + tensor::ssq(&v[cut..]);
+        assert!((total - parts).abs() < 1e-6 * total.max(1.0), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------- comm
+
+#[test]
+fn prop_comm_ratio_bounded_by_upload_fraction() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(5000 + seed);
+        let layers = rng.gen_range(1, 10);
+        let sizes: Vec<u64> = (0..layers).map(|_| rng.gen_range(1, 100) as u64 * 4).collect();
+        let full: u64 = sizes.iter().sum();
+        let mut acc = CommAccountant::new(layers);
+        let rounds = rng.gen_range(1, 20);
+        for r in 0..rounds {
+            let uploaded: Vec<(usize, u64)> = (0..layers)
+                .filter(|_| rng.gen_bool(0.7))
+                .map(|l| (l, sizes[l]))
+                .collect();
+            acc.record_round(4, &uploaded, full, full);
+            let _ = r;
+        }
+        let ratio = acc.comm_ratio();
+        assert!((0.0..=1.0 + 1e-12).contains(&ratio), "seed {seed}: ratio {ratio}");
+        // frequencies in [0,1]
+        assert!(acc
+            .layer_frequencies()
+            .iter()
+            .all(|&f| (0.0..=1.0 + 1e-12).contains(&f)));
+    }
+}
+
+#[test]
+fn prop_staleness_counts_consecutive_recycles() {
+    for seed in 0..60 {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let meta = rand_meta(&mut rng);
+        let n = meta.num_layers();
+        let mut st = LuarState::new(n, meta.dim);
+        let mut expected = vec![0u32; n];
+        for _ in 0..10 {
+            let k = rng.gen_range(0, n + 1);
+            st.recycle_set = rng.sample_indices(n, k);
+            for l in 0..n {
+                if st.recycle_set.contains(&l) {
+                    expected[l] += 1;
+                } else {
+                    expected[l] = 0;
+                }
+            }
+            let mut buf: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            st.compose_update(&mut buf, &meta, RecycleMode::Recycle);
+            assert_eq!(st.staleness, expected, "seed {seed}");
+        }
+    }
+}
