@@ -2,6 +2,12 @@
 //!
 //! Supports `--key value`, `--key=value`, bare flags, and positional
 //! arguments, with typed getters and an unknown-flag check.
+//!
+//! The `run` subcommand's network flags (`--link-dist`, `--round-mode`,
+//! `--compute-s`) configure the `net:` simulation block — see the
+//! USAGE/NET SIMULATION section of `main.rs`'s HELP string and
+//! `net::NetCfg` for the spec grammar (`uniform | lognormal | bimodal`
+//! fleets; `sync | deadline:s=F | buffered:k=N` round modes).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;

@@ -1,12 +1,16 @@
-//! Communication accounting + a simple bandwidth model.
+//! Communication accounting + the legacy global bandwidth model.
 //!
 //! The paper's headline metric is "Comm": upload bytes relative to
 //! FedAvg (clients skip uploading recycled layers; the download side
 //! is the full model either way, plus the delta layer-id list).
 //! `CommAccountant` tracks exact bytes per direction and per layer so
 //! Figure 3 (per-layer aggregation counts) and every Comm column fall
-//! out of the same ledger. `BandwidthModel` converts bytes into
-//! simulated wall-clock for the learning-curve x-axes.
+//! out of the same ledger. The round loop now measures serialized
+//! `net::wire` frames and records them via `record_wire_round`; the
+//! analytic `record_round`/`record_compressed_round` entry points
+//! remain for estimate-style callers. `BandwidthModel` is the legacy
+//! homogeneous link model, superseded by `net::links::LinkFleet` for
+//! simulated wall-clock.
 
 
 #[derive(Debug, Clone)]
@@ -69,6 +73,30 @@ impl CommAccountant {
         self.up_bytes += total_up_bytes;
         for c in self.layer_upload_rounds.iter_mut() {
             *c += 1;
+        }
+    }
+
+    /// Record one round from *measured* wire frames: `up_bytes_total`
+    /// is the sum of serialized uplink frame lengths over all active
+    /// clients (headers, layer-id lists, and index overheads included),
+    /// `fedavg_bytes_per_client` the measured dense-frame length that
+    /// normalizes the Comm column, `down_bytes_total` the summed
+    /// broadcast frame lengths. `uploaded_layers` feeds Figure 3's
+    /// per-layer aggregation counts.
+    pub fn record_wire_round(
+        &mut self,
+        active_clients: u64,
+        uploaded_layers: &[usize],
+        up_bytes_total: u64,
+        fedavg_bytes_per_client: u64,
+        down_bytes_total: u64,
+    ) {
+        self.rounds += 1;
+        self.down_bytes += down_bytes_total;
+        self.fedavg_up_bytes += active_clients * fedavg_bytes_per_client;
+        self.up_bytes += up_bytes_total;
+        for &l in uploaded_layers {
+            self.layer_upload_rounds[l] += 1;
         }
     }
 
@@ -154,6 +182,19 @@ mod tests {
         acc.record_round(3, &[(0, 10)], 10, 50);
         assert_eq!(acc.down_bytes, 150);
         assert_eq!(acc.up_bytes, 30);
+    }
+
+    #[test]
+    fn wire_round_sums_measured_frames() {
+        let mut acc = CommAccountant::new(3);
+        // 4 clients, frames of 90/95/100/80 bytes, dense baseline 100,
+        // broadcast 120 per client; layer 2 recycled.
+        acc.record_wire_round(4, &[0, 1], 90 + 95 + 100 + 80, 100, 4 * 120);
+        assert_eq!(acc.up_bytes, 365);
+        assert_eq!(acc.fedavg_up_bytes, 400);
+        assert_eq!(acc.down_bytes, 480);
+        assert_eq!(acc.layer_upload_rounds, vec![1, 1, 0]);
+        assert!((acc.comm_ratio() - 365.0 / 400.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 use std::collections::HashMap;
 
@@ -61,6 +62,11 @@ impl UpdateCompressor for Binarize {
         }
         // 1 bit per element + one f32 scale per layer
         ((update.len() as u64) + 7) / 8 + (meta.layers.len() as u64) * 4
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        // ±alpha per layer: the codec recovers alpha as max |v|.
+        WireHint::SignBits
     }
 
     fn label(&self) -> &'static str {

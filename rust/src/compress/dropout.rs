@@ -13,16 +13,20 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 pub struct DropoutAvg {
     rate: f32,
+    /// Mask seed of the most recent `compress` call (wire flavor: the
+    /// server regenerates the mask, no indices transmitted).
+    last_seed: u64,
 }
 
 impl DropoutAvg {
     pub fn new(rate: f32) -> Self {
         assert!((0.0..1.0).contains(&rate), "dropout rate must be in [0,1)");
-        DropoutAvg { rate }
+        DropoutAvg { rate, last_seed: 0 }
     }
 }
 
@@ -36,8 +40,9 @@ impl UpdateCompressor for DropoutAvg {
         _rng: &mut Rng,
     ) -> u64 {
         // Seeded mask: reproducible for (client, round)
-        let mut mask_rng =
-            Rng::seed_from_u64(0xd20_0000 ^ ((client as u64) << 32) ^ round as u64);
+        let seed = 0xd20_0000 ^ ((client as u64) << 32) ^ round as u64;
+        self.last_seed = seed;
+        let mut mask_rng = Rng::seed_from_u64(seed);
         let keep_scale = 1.0 / (1.0 - self.rate);
         let mut kept = 0u64;
         for v in update.iter_mut() {
@@ -49,6 +54,10 @@ impl UpdateCompressor for DropoutAvg {
             }
         }
         kept * 4
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        WireHint::SeededMask { seed: self.last_seed, rate: self.rate }
     }
 
     fn label(&self) -> &'static str {

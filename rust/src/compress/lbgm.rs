@@ -13,6 +13,7 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 use crate::tensor;
 use std::collections::HashMap;
@@ -23,12 +24,21 @@ pub struct Lbgm {
     anchors: HashMap<usize, Vec<f32>>,
     pub scalar_rounds: u64,
     pub full_rounds: u64,
+    /// The look-back coefficient of the most recent `compress` call,
+    /// when it took the scalar path (drives the wire flavor).
+    last_scalar: Option<f32>,
 }
 
 impl Lbgm {
     pub fn new(threshold: f32) -> Self {
         assert!((0.0..=1.0).contains(&threshold));
-        Lbgm { threshold, anchors: HashMap::new(), scalar_rounds: 0, full_rounds: 0 }
+        Lbgm {
+            threshold,
+            anchors: HashMap::new(),
+            scalar_rounds: 0,
+            full_rounds: 0,
+            last_scalar: None,
+        }
     }
 }
 
@@ -54,13 +64,24 @@ impl UpdateCompressor for Lbgm {
                         *u = coef * a;
                     }
                     self.scalar_rounds += 1;
+                    self.last_scalar = Some(coef);
                     return 4;
                 }
             }
         }
         self.anchors.insert(client, update.to_vec());
         self.full_rounds += 1;
+        self.last_scalar = None;
         (update.len() as u64) * 4
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        // Scalar frames carry only the coefficient; the server-side
+        // anchor (mirrored per client) reconstructs the vector.
+        match self.last_scalar {
+            Some(coef) => WireHint::Scalar { coef },
+            None => WireHint::Dense,
+        }
     }
 
     fn label(&self) -> &'static str {

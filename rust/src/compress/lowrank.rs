@@ -11,6 +11,7 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 pub struct LowRank {
@@ -57,11 +58,18 @@ fn orthonormalize(y: &mut [f32], m: usize, r: usize) {
     }
 }
 
-/// Rank-r approximation of `mat` (m x n, row-major) in place.
-fn lowrank_approx(mat: &mut [f32], m: usize, n: usize, r: usize, rng: &mut Rng) {
-    if r >= m.min(n) {
-        return;
-    }
+/// Rank-r rangefinder factorization of `mat` (m x n, row-major):
+/// returns (Q: m x r with orthonormal columns, B = Qᵀ M: r x n), so
+/// Q B approximates M (exactly, up to float rounding, when M already
+/// has rank <= r). Shared with the wire codec, which re-factorizes the
+/// client's reconstructed matrix to put genuine factors on the wire.
+pub(crate) fn lowrank_factor(
+    mat: &[f32],
+    m: usize,
+    n: usize,
+    r: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<f32>) {
     // Y = M G, G ~ N(0,1) n x r
     let g: Vec<f32> = (0..n * r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let mut y = vec![0.0f32; m * r];
@@ -90,12 +98,21 @@ fn lowrank_approx(mat: &mut [f32], m: usize, n: usize, r: usize, rng: &mut Rng) 
             }
         }
     }
+    (y, b)
+}
+
+/// Rank-r approximation of `mat` (m x n, row-major) in place.
+fn lowrank_approx(mat: &mut [f32], m: usize, n: usize, r: usize, rng: &mut Rng) {
+    if r >= m.min(n) {
+        return;
+    }
+    let (q, b) = lowrank_factor(mat, m, n, r, rng);
     // M <- Q B
     for i in 0..m {
         for k in 0..n {
             let mut acc = 0.0f32;
             for j in 0..r {
-                acc += y[i * r + j] * b[j * n + k];
+                acc += q[i * r + j] * b[j * n + k];
             }
             mat[i * n + k] = acc;
         }
@@ -104,11 +121,29 @@ fn lowrank_approx(mat: &mut [f32], m: usize, n: usize, r: usize, rng: &mut Rng) 
 
 /// View an array's shape as a matrix: dense (m,n) stays; conv
 /// (kh,kw,ci,co) folds to (kh*kw*ci, co); vectors return None.
-fn matrix_shape(shape: &[usize]) -> Option<(usize, usize)> {
+pub(crate) fn lowrank_matrix_shape(shape: &[usize]) -> Option<(usize, usize)> {
     match shape.len() {
         2 => Some((shape[0], shape[1])),
         4 => Some((shape[0] * shape[1] * shape[2], shape[3])),
         _ => None,
+    }
+}
+
+/// The compressor's (and codec's) shared decision: factor an array of
+/// this shape at `rank_ratio`? `Some((m, n, r))` means "transmit rank-r
+/// factors"; `None` means dense passthrough (vectors, tiny matrices,
+/// or a requested rank that is already full).
+pub(crate) fn lowrank_plan(shape: &[usize], rank_ratio: f32) -> Option<(usize, usize, usize)> {
+    let (m, n) = lowrank_matrix_shape(shape)?;
+    if m.min(n) <= 1 {
+        return None;
+    }
+    let full_rank = m.min(n);
+    let r = (((full_rank as f32) * rank_ratio).round() as usize).clamp(1, full_rank);
+    if r < full_rank {
+        Some((m, n, r))
+    } else {
+        None
     }
 }
 
@@ -125,29 +160,26 @@ impl UpdateCompressor for LowRank {
         for lm in &meta.layers {
             for am in &lm.arrays {
                 let sl = &mut update[am.offset..am.offset + am.size];
-                match matrix_shape(&am.shape) {
-                    Some((m, n)) if m.min(n) > 1 => {
-                        let full_rank = m.min(n);
-                        let r = (((full_rank as f32) * self.rank_ratio).round() as usize)
-                            .clamp(1, full_rank);
-                        if r < full_rank {
-                            // projection seed shared with server
-                            let mut prng = Rng::seed_from_u64(
-                                0x10_a11c ^ ((client as u64) << 32) ^ ((round as u64) << 8),
-                            );
-                            lowrank_approx(sl, m, n, r, &mut prng);
-                            bytes += (r * (m + n)) as u64 * 4;
-                        } else {
-                            bytes += (am.size as u64) * 4;
-                        }
+                match lowrank_plan(&am.shape, self.rank_ratio) {
+                    Some((m, n, r)) => {
+                        // projection seed shared with server
+                        let mut prng = Rng::seed_from_u64(
+                            0x10_a11c ^ ((client as u64) << 32) ^ ((round as u64) << 8),
+                        );
+                        lowrank_approx(sl, m, n, r, &mut prng);
+                        bytes += (r * (m + n)) as u64 * 4;
                     }
-                    _ => {
+                    None => {
                         bytes += (am.size as u64) * 4;
                     }
                 }
             }
         }
         bytes
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        WireHint::LowRank { rank_ratio: self.rank_ratio }
     }
 
     fn label(&self) -> &'static str {

@@ -21,18 +21,22 @@ pub use binarize::Binarize;
 pub use dropout::DropoutAvg;
 pub use lbgm::Lbgm;
 pub use lowrank::LowRank;
+pub(crate) use lowrank::{lowrank_factor, lowrank_matrix_shape, lowrank_plan};
 pub use prune::Prune;
 pub use quantize::Quantize;
 pub use topk::TopK;
 
 use crate::config::Method;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 /// One client-update compressor. Implementations may keep per-client
 /// state (error feedback, look-back anchors) keyed by `client_id`.
 pub trait UpdateCompressor {
     /// Compress `update` in place; return upload bytes for this client.
+    /// (The returned analytic estimate predates the wire codecs; the
+    /// round loop now measures `net::wire` frame lengths instead.)
     fn compress(
         &mut self,
         client_id: usize,
@@ -41,6 +45,13 @@ pub trait UpdateCompressor {
         round: usize,
         rng: &mut Rng,
     ) -> u64;
+
+    /// How the *most recent* `compress` output should be framed on the
+    /// wire (`net::wire::encode_update`). Queried immediately after
+    /// `compress`, before the next client's call.
+    fn wire_hint(&self) -> WireHint {
+        WireHint::Dense
+    }
 
     fn label(&self) -> &'static str;
 }

@@ -10,6 +10,7 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 pub struct Prune {
@@ -91,6 +92,12 @@ impl UpdateCompressor for Prune {
             }
         }
         kept * 4
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        // The shared mask travels as an explicit bitmap (PruneFL's
+        // reconfiguration broadcast, amortized onto every frame).
+        WireHint::Bitmap
     }
 
     fn label(&self) -> &'static str {

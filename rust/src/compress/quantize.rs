@@ -8,16 +8,21 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 pub struct Quantize {
     levels: u32,
+    /// Per-layer (lo, step) of the most recent `compress` call, in
+    /// model-layer order; step 0 marks a degenerate/constant layer.
+    /// This is what the wire codec needs to transmit the grid exactly.
+    last_ranges: Vec<(f32, f32)>,
 }
 
 impl Quantize {
     pub fn new(levels: u32) -> Self {
         assert!(levels >= 2, "need at least 2 quantization levels");
-        Quantize { levels }
+        Quantize { levels, last_ranges: Vec::new() }
     }
 
     pub fn bits_per_element(&self) -> u32 {
@@ -35,6 +40,7 @@ impl UpdateCompressor for Quantize {
         rng: &mut Rng,
     ) -> u64 {
         let mut bits: u64 = 0;
+        self.last_ranges.clear();
         for lm in &meta.layers {
             let sl = &mut update[lm.offset..lm.offset + lm.size];
             let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
@@ -43,10 +49,13 @@ impl UpdateCompressor for Quantize {
                 hi = hi.max(v);
             }
             if !lo.is_finite() || hi <= lo {
+                // constant layer: the wire grid degenerates to `lo`
+                self.last_ranges.push((if lo.is_finite() { lo } else { 0.0 }, 0.0));
                 bits += 2 * 32;
                 continue;
             }
             let step = (hi - lo) / (self.levels - 1) as f32;
+            self.last_ranges.push((lo, step));
             for v in sl.iter_mut() {
                 let t = (*v - lo) / step;
                 let floor = t.floor();
@@ -58,6 +67,10 @@ impl UpdateCompressor for Quantize {
             bits += (lm.size as u64) * self.bits_per_element() as u64 + 2 * 32;
         }
         bits.div_ceil(8)
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        WireHint::Quantized { levels: self.levels, ranges: self.last_ranges.clone() }
     }
 
     fn label(&self) -> &'static str {

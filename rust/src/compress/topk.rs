@@ -4,6 +4,7 @@
 
 use super::UpdateCompressor;
 use crate::model::ModelMeta;
+use crate::net::wire::WireHint;
 use crate::rng::Rng;
 
 pub struct TopK {
@@ -44,6 +45,10 @@ impl UpdateCompressor for TopK {
             }
         }
         (kept as u64) * 8
+    }
+
+    fn wire_hint(&self) -> WireHint {
+        WireHint::Sparse
     }
 
     fn label(&self) -> &'static str {

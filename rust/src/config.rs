@@ -8,6 +8,7 @@
 //! method/optimizer specs use compact strings like `luar:delta=2`.
 
 use crate::data::{SynthKind, SynthSpec};
+use crate::net::{LinkDist, NetCfg, RoundMode};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -295,6 +296,10 @@ pub struct RunConfig {
     /// uploading (straggler/failure injection; server aggregates over
     /// survivors).
     pub client_failure_rate: f64,
+    /// Network simulation block: link fleet distribution, round-closing
+    /// policy, local-compute time (`link_dist`, `round_mode`,
+    /// `deadline_s`, `buffer_k`, `compute_s` config keys).
+    pub net: NetCfg,
 }
 
 impl RunConfig {
@@ -326,6 +331,7 @@ impl RunConfig {
             eval_every: 5,
             difficulty,
             client_failure_rate: 0.0,
+            net: NetCfg::default(),
         })
     }
 
@@ -391,7 +397,7 @@ impl RunConfig {
              alpha = {}\nper_client = {}\ntest_size = {}\nlr = {}\nweight_decay = {}\n\
              lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
              mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
-             client_failure_rate = {}\n",
+             client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n",
             self.model,
             self.rounds,
             self.num_clients,
@@ -416,6 +422,9 @@ impl RunConfig {
             self.eval_every,
             self.difficulty,
             self.client_failure_rate,
+            self.net.link_dist.spec_string(),
+            self.net.round_mode.spec_string(),
+            self.net.compute_s,
         )
     }
 
@@ -479,6 +488,25 @@ impl RunConfig {
         if let Some(v) = kv.get("client_failure_rate") {
             cfg.client_failure_rate = v.parse().context("bad client_failure_rate")?;
         }
+        // net: block (flat keys). `deadline_s` / `buffer_k` are
+        // alternative spellings that override the round_mode params.
+        if let Some(v) = kv.get("link_dist") {
+            cfg.net.link_dist = LinkDist::parse(v)?;
+        }
+        if let Some(v) = kv.get("round_mode") {
+            cfg.net.round_mode = RoundMode::parse(v)?;
+        }
+        if let Some(v) = kv.get("deadline_s") {
+            let s: f64 = v.parse().context("bad deadline_s")?;
+            cfg.net.round_mode = RoundMode::Deadline { deadline_s: s };
+        }
+        if let Some(v) = kv.get("buffer_k") {
+            let k: usize = v.parse().context("bad buffer_k")?;
+            cfg.net.round_mode = RoundMode::Buffered { k };
+        }
+        if let Some(v) = kv.get("compute_s") {
+            cfg.net.compute_s = v.parse().context("bad compute_s")?;
+        }
         Ok(cfg)
     }
 
@@ -506,12 +534,36 @@ mod tests {
         cfg.lr_decay_rounds = vec![30, 45];
         cfg.server_opt = ServerOptCfg::Adam { lr: 0.9 };
         cfg.client_opt.mu_global = 0.001;
+        cfg.net.link_dist = LinkDist::LogNormal {
+            up_mbps: 10.0,
+            down_mbps: 50.0,
+            sigma: 0.75,
+            rtt_s: 0.05,
+        };
+        cfg.net.round_mode = RoundMode::Deadline { deadline_s: 2.5 };
+        cfg.net.compute_s = 0.5;
         let text = cfg.save_kv();
         let back = RunConfig::load_kv(&text).unwrap();
         assert_eq!(back.method, cfg.method);
         assert_eq!(back.server_opt, cfg.server_opt);
         assert_eq!(back.lr_decay_rounds, cfg.lr_decay_rounds);
         assert_eq!(back.client_opt.mu_global, 0.001);
+        assert_eq!(back.net, cfg.net);
+    }
+
+    #[test]
+    fn net_block_alternative_keys() {
+        let base = RunConfig::benchmark("mlp").unwrap().save_kv();
+        let cfg = RunConfig::load_kv(&format!("{base}deadline_s = 3.5\n")).unwrap();
+        assert_eq!(cfg.net.round_mode, RoundMode::Deadline { deadline_s: 3.5 });
+        let cfg = RunConfig::load_kv(&format!("{base}buffer_k = 4\n")).unwrap();
+        assert_eq!(cfg.net.round_mode, RoundMode::Buffered { k: 4 });
+        let cfg = RunConfig::load_kv(&format!(
+            "{base}link_dist = bimodal:fast_frac=0.9,fast_up=80,slow_up=1,down=100,rtt=0.02\n"
+        ))
+        .unwrap();
+        assert!(matches!(cfg.net.link_dist, LinkDist::Bimodal { .. }));
+        assert!(RunConfig::load_kv(&format!("{base}round_mode = warp\n")).is_err());
     }
 
     #[test]

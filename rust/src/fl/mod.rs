@@ -7,24 +7,32 @@
 //! 3. each client runs tau local SGD steps through the AOT train
 //!    graph and returns Delta_t^i; layers in R_t are not uploaded
 //!    (LUAR) or the update is lossily compressed (baselines);
-//! 4. aggregate via the Pallas-backed agg graph (exactly FedAvg's
-//!    mean) which also returns the Eq. 1 norms for free;
-//! 5. LUAR composes \hat{Delta}_t (Alg. 1), measures kappa, resamples
+//! 4. every upload is serialized through `net::wire` (byte-exact
+//!    frames), pushed over the client's own link (`net::links`), and
+//!    lands on the server's event queue (`net::sched`); the round mode
+//!    decides who makes the aggregate (sync / deadline / buffered);
+//! 5. the server decodes the frames and aggregates the survivors via
+//!    the Pallas-backed agg graph (exactly FedAvg's mean) which also
+//!    returns the Eq. 1 norms for free — or the weighted fallback when
+//!    staleness discounts or drop-outs apply;
+//! 6. LUAR composes \hat{Delta}_t (Alg. 1), measures kappa, resamples
 //!    R_{t+1};
-//! 6. the server optimizer applies \hat{Delta}_t;
-//! 7. communication + simulated wall-clock are recorded.
+//! 7. the server optimizer applies \hat{Delta}_t;
+//! 8. the comm ledger records measured frame bytes; the scheduler's
+//!    round time (slowest-survivor semantics) advances sim wall-clock.
 //!
 //! `checkpoint.rs` adds save/resume of the full server state.
 
 mod checkpoint;
 
-use crate::comm::{BandwidthModel, CommAccountant};
+use crate::comm::CommAccountant;
 use crate::compress::{self, UpdateCompressor};
 use crate::config::{Method, RunConfig};
 use crate::data::FedDataset;
 use crate::luar::{DeltaController, LuarState};
 use crate::metrics::{History, RoundRecord};
 use crate::model::{artifacts_dir, ModelMeta};
+use crate::net::{wire, NetSim};
 use crate::optim::ServerOpt;
 use crate::rng::Rng;
 use crate::runtime::Engine;
@@ -40,7 +48,8 @@ pub struct Server {
     pub luar: LuarState,
     compressor: Box<dyn UpdateCompressor>,
     pub comm: CommAccountant,
-    pub bw: BandwidthModel,
+    /// Per-client links + round-closing policy (the net: block).
+    pub net: NetSim,
     pub history: History,
     /// Per-client previous local model (MOON-lite), populated lazily.
     prev_local: Vec<Option<Vec<f32>>>,
@@ -55,6 +64,12 @@ pub struct Server {
     pub delta_ctl: Option<DeltaController>,
     /// Clients that failed before upload (failure injection), total.
     pub failed_clients: u64,
+    /// Uplink frame lengths of the most recent round, per active slot
+    /// (tests assert ledger == the sum of these).
+    pub last_frame_lens: Vec<u64>,
+    /// Uploads that transmitted but missed the round close (deadline
+    /// mode drops), total.
+    pub dropped_stragglers: u64,
 }
 
 impl Server {
@@ -92,6 +107,7 @@ impl Server {
         };
         let prev_local = vec![None; cfg.num_clients];
         let rng = Rng::seed_from_u64(cfg.seed ^ 0xf1_f1f1);
+        let net = NetSim::new(cfg.net.clone(), cfg.num_clients, cfg.seed);
         Ok(Server {
             engine,
             ds,
@@ -99,7 +115,7 @@ impl Server {
             luar,
             compressor,
             comm,
-            bw: BandwidthModel::default(),
+            net,
             history: History::default(),
             prev_local,
             rng,
@@ -110,6 +126,8 @@ impl Server {
             last_weight_ssq: vec![0.0; num_layers],
             delta_ctl,
             failed_clients: 0,
+            last_frame_lens: Vec::new(),
+            dropped_stragglers: 0,
             cfg,
         })
     }
@@ -161,8 +179,31 @@ impl Server {
         let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
         let shared_broadcast =
             if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
+        // Layers on the wire this round: R_t's complement for LUAR,
+        // everything otherwise. Captured now because select_next will
+        // overwrite recycle_set with R_{t+1} below.
+        let upload_layers: Vec<usize> = if is_luar {
+            self.luar.upload_set(meta.num_layers())
+        } else {
+            (0..meta.num_layers()).collect()
+        };
+        // Downlink frame: broadcast params + the R_t layer-id list.
+        // FedMut's per-client mutations have identical length, so one
+        // encode measures every client's download.
+        let bcast_frame = {
+            let tmp;
+            let params: &[f32] = match &shared_broadcast {
+                Some(b) => b,
+                None => {
+                    tmp = self.opt.broadcast(0);
+                    &tmp
+                }
+            };
+            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+        };
 
         let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
+        let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
         let mut loss_sum = 0.0f64;
         let mut up_bytes_total = 0u64;
         for (slot, &client) in actives.iter().enumerate() {
@@ -189,45 +230,78 @@ impl Server {
                 tensor::axpy(1.0, &delta, &mut local);
                 self.prev_local[client] = Some(local);
             }
+            let hint;
             if is_luar {
                 // Clients omit R_t layers from the upload (Alg. 1 line 2).
                 for &l in &self.luar.recycle_set {
                     let lm = &meta.layers[l];
                     delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
                 }
-                let uploaded_bytes = meta.layer_bytes(&self.luar.upload_set(meta.num_layers()));
                 if cfg.luar_compress.is_some() {
                     // Table 3 composition: baseline compression on the
-                    // uploaded layers. The compressor reports whole-vector
-                    // bytes; scale to the uploaded fraction.
-                    let b = self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
+                    // uploaded layers.
+                    self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
                     // re-zero recycled layers (compressors like binarize
                     // may have produced nonzeros there)
                     for &l in &self.luar.recycle_set {
                         let lm = &meta.layers[l];
                         delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
                     }
-                    up_bytes_total +=
-                        (b as f64 * uploaded_bytes as f64 / meta.full_bytes() as f64) as u64;
+                    hint = self.compressor.wire_hint();
                 } else {
-                    up_bytes_total += uploaded_bytes;
+                    hint = wire::WireHint::Dense;
                 }
             } else {
-                up_bytes_total +=
-                    self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
+                self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
+                hint = self.compressor.wire_hint();
             }
-            deltas.push(delta);
+            // Serialize exactly what crosses the wire, then decode it
+            // server-side: the ledger counts frame.len() (headers,
+            // layer-id lists, and index overheads included — no more
+            // analytic estimates or per-client truncating casts), and
+            // the aggregate consumes the decoded bytes.
+            let frame = wire::encode_update(&delta, &meta, &upload_layers, &hint)?;
+            let delta_srv = match wire::decode_update(frame.as_bytes(), &meta)? {
+                wire::Decoded::Vector(v) => v,
+                // LBGM scalar: the server's per-client anchor times the
+                // coefficient — which is the in-place reconstruction.
+                wire::Decoded::Scalar(_) => delta,
+            };
+            up_bytes_total += frame.len() as u64;
+            frame_lens.push(frame.len() as u64);
+            deltas.push(delta_srv);
         }
+        // --- network simulation: who makes this round's aggregate? ---------
+        let outcome = self.net.round(&actives, bcast_frame.len() as u64, &frame_lens);
+        self.last_frame_lens = frame_lens;
+        self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
 
-        // --- aggregation (Pallas graph when shapes match) ------------------
-        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
-        let (mut mean, u_ssq, w_ssq) = if refs.len() == meta.agg_clients {
+        // --- aggregation over the round's survivors ------------------------
+        // (Pallas graph when every upload arrived with unit weight and
+        // the count matches the lowered shape; weighted pure-Rust
+        // fallback for deadline drops and buffered staleness discounts.)
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(outcome.aggregated);
+        let mut agg_weights: Vec<f32> = Vec::with_capacity(outcome.aggregated);
+        for (slot, d) in deltas.iter().enumerate() {
+            if outcome.included[slot] {
+                refs.push(d.as_slice());
+                agg_weights.push(outcome.weights[slot]);
+            }
+        }
+        let uniform = agg_weights.iter().all(|&w| w == 1.0);
+        let (mut mean, u_ssq, w_ssq) = if uniform && refs.len() == meta.agg_clients {
             let out = self.engine.aggregate(&refs, self.opt.params())?;
             (out.mean, out.update_ssq, out.weight_ssq)
         } else {
-            // fallback for non-standard client counts
+            // fallback for non-standard client counts / weighted rounds
             let mut mean = vec![0.0f32; meta.dim];
-            tensor::mean_rows_par(&refs, &mut mean);
+            if uniform {
+                tensor::mean_rows_par(&refs, &mut mean);
+            } else {
+                let wsum: f32 = agg_weights.iter().sum();
+                let norm: Vec<f32> = agg_weights.iter().map(|w| w / wsum).collect();
+                tensor::weighted_mean_rows(&refs, &norm, &mut mean);
+            }
             let params = self.opt.params();
             let mut u_ssq = Vec::with_capacity(meta.num_layers());
             let mut w_ssq = Vec::with_capacity(meta.num_layers());
@@ -259,24 +333,24 @@ impl Server {
         self.opt.apply(&mean);
 
         // --- accounting ------------------------------------------------------
-        let full = meta.full_bytes();
-        // Broadcast: full model + the delta layer-id list (paper §3.2).
-        let down = full + (self.luar.recycle_set.len() as u64) * 4;
-        if is_luar {
-            // R_t was consumed this round and select_next already wrote
-            // R_{t+1} into recycle_set, so identify this round's
-            // uploads via staleness (reset to 0 on upload by
-            // compose_update, incremented when recycled).
-            let uploaded_now: Vec<(usize, u64)> = (0..meta.num_layers())
-                .filter(|l| !self.luar_recycled_this_round(*l))
-                .map(|l| (l, (meta.layers[l].size as u64) * 4))
-                .collect();
-            self.comm.record_round(actives.len() as u64, &uploaded_now, full, down);
-        } else {
-            self.comm.record_compressed_round(actives.len() as u64, up_bytes_total, full, down);
-        }
-        self.sim_seconds +=
-            self.bw.round_seconds(up_bytes_total / actives.len().max(1) as u64, down);
+        // Everything measured: the Comm numerator sums uplink frame
+        // lengths (dropped stragglers still transmitted — their bytes
+        // crossed the wire), the denominator is the measured dense
+        // FedAvg frame, and the downlink is the broadcast frame
+        // (params + R_t layer-id list) per active client.
+        let fedavg_frame = wire::dense_frame_len(&meta);
+        let down_total = (actives.len() as u64) * bcast_frame.len() as u64;
+        self.comm.record_wire_round(
+            actives.len() as u64,
+            &upload_layers,
+            up_bytes_total,
+            fedavg_frame,
+            down_total,
+        );
+        // Sync rounds are bound by the slowest active client (the old
+        // mean-upload shortcut is gone); deadline/buffered rounds close
+        // by their own policy.
+        self.sim_seconds += outcome.round_secs;
 
         let train_loss = loss_sum / actives.len().max(1) as f64;
         self.train_loss_ema = if self.train_loss_ema.is_nan() {
@@ -298,16 +372,12 @@ impl Server {
                 comm_ratio: self.comm.comm_ratio(),
                 kappa,
                 sim_seconds: self.sim_seconds,
+                wire_bytes: up_bytes_total,
+                tail_s: outcome.straggler_tail_s,
+                arrivals: outcome.aggregated,
             });
         }
         Ok(())
-    }
-
-    /// Whether layer `l` was in R_t for the round that just ran.
-    /// (select_next already produced R_{t+1}, so this uses staleness:
-    /// a layer recycled this round has staleness >= 1.)
-    fn luar_recycled_this_round(&self, l: usize) -> bool {
-        self.luar.staleness[l] >= 1
     }
 
     /// Figure 1 diagnostics: per-layer (name, ||Delta||, ||x||, ratio).

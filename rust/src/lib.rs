@@ -22,6 +22,7 @@ pub mod json;
 pub mod luar;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod rng;
 pub mod runtime;

@@ -17,6 +17,7 @@ use fedluar::config::{ClientOptCfg, Method, RunConfig, ServerOptCfg};
 use fedluar::exp;
 use fedluar::fl::Server;
 use fedluar::model::{artifacts_dir, ModelMeta};
+use fedluar::net::{LinkDist, RoundMode};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -48,6 +49,7 @@ USAGE:
                [--rounds N] [--clients N] [--active N] [--alpha F]
                [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
                [--mu-prev F] [--eval-every N] [--out results/run.csv]
+               [--link-dist SPEC] [--round-mode SPEC] [--compute-s F]
                [--config FILE]
   fedluar info --model <name>
   fedluar exp  <table1|table2|table3|table4|table5|delta-sweep|alpha-sweep|
@@ -60,6 +62,18 @@ METHOD SPECS:
 
 SERVER OPT SPECS:
   sgd | adam:lr=0.9 | acg:lambda=0.7 | mut:alpha=0.5
+
+NET SIMULATION (the net: config block; uploads are serialized wire
+frames, so the Comm column measures real bytes):
+  --link-dist   uniform:up=20,down=100,rtt=0.05
+              | lognormal:up=10,down=50,sigma=0.75,rtt=0.05
+              | bimodal:fast_frac=0.8,fast_up=50,slow_up=2,down=100,rtt=0.05
+  --round-mode  sync                sync FL: slowest active client bounds the round
+              | deadline:s=2.5      close at a time budget, aggregate arrivals
+              | buffered:k=8        FedBuff-style: flush every k arrivals,
+                                    staleness-discounted
+  --compute-s   mean local-compute seconds per client per round
+  (config files also accept deadline_s = F and buffer_k = N)
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -89,10 +103,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         mu_global: args.get_f64("mu-global", cfg.client_opt.mu_global as f64)? as f32,
         mu_prev: args.get_f64("mu-prev", cfg.client_opt.mu_prev as f64)? as f32,
     };
+    if let Some(spec) = args.get("link-dist") {
+        cfg.net.link_dist = LinkDist::parse(spec)?;
+    }
+    if let Some(spec) = args.get("round-mode") {
+        cfg.net.round_mode = RoundMode::parse(spec)?;
+    }
+    cfg.net.compute_s = args.get_f64("compute-s", cfg.net.compute_s)?;
     let out = args.get_or("out", "results/run.csv").to_string();
     args.check_unused()?;
 
-    println!("# fedluar run: {} / {} / {}", cfg.model, cfg.method.label(), cfg.server_opt.label());
+    println!(
+        "# fedluar run: {} / {} / {} / net {} over {}",
+        cfg.model,
+        cfg.method.label(),
+        cfg.server_opt.label(),
+        cfg.net.round_mode.spec_string(),
+        cfg.net.link_dist.spec_string()
+    );
     let mut server = Server::new(cfg)?;
     let t0 = std::time::Instant::now();
     for _ in 0..server.cfg.rounds {
@@ -127,6 +155,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         server.history.final_acc() * 100.0,
         server.history.final_comm_ratio(),
         server.history.max_kappa()
+    );
+    println!(
+        "# net: {} wire bytes up, {} stragglers dropped, sim wall-clock from slowest survivors",
+        server.comm.up_bytes, server.dropped_stragglers
     );
     println!("# history -> {out}");
     Ok(())

@@ -17,8 +17,14 @@ pub struct RoundRecord {
     /// kappa_t = ||recycled-layer update||^2 / ||full update||^2
     /// (Theorem 2 requires < 1/16 for convergence).
     pub kappa: f64,
-    /// Simulated communication wall-clock so far (bandwidth model).
+    /// Simulated communication wall-clock so far (net scheduler).
     pub sim_seconds: f64,
+    /// Measured uplink wire bytes this round (sum of frame lengths).
+    pub wire_bytes: u64,
+    /// Straggler tail this round: slowest arrival minus the median.
+    pub tail_s: f64,
+    /// Uploads aggregated this round (survivors under deadline/buffered).
+    pub arrivals: usize,
 }
 
 /// Full history of a run plus its terminal summary.
@@ -68,12 +74,13 @@ impl History {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds"
+            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds,\
+             wire_bytes,tail_s,arrivals"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.3}",
+                "{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.3},{},{:.3},{}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -81,7 +88,10 @@ impl History {
                 r.up_bytes,
                 r.comm_ratio,
                 r.kappa,
-                r.sim_seconds
+                r.sim_seconds,
+                r.wire_bytes,
+                r.tail_s,
+                r.arrivals
             )?;
         }
         Ok(())
@@ -95,7 +105,8 @@ impl History {
         let mut h = History::default();
         for line in text.lines().skip(1) {
             let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 8 {
+            // 8 columns = pre-net CSVs, 11 = current format
+            if f.len() != 8 && f.len() != 11 {
                 continue;
             }
             let p = |s: &str| s.parse::<f64>().unwrap_or(f64::NAN);
@@ -108,6 +119,9 @@ impl History {
                 comm_ratio: p(f[5]),
                 kappa: p(f[6]),
                 sim_seconds: p(f[7]),
+                wire_bytes: if f.len() == 11 { f[8].parse().unwrap_or(0) } else { 0 },
+                tail_s: if f.len() == 11 { p(f[9]) } else { 0.0 },
+                arrivals: if f.len() == 11 { f[10].parse().unwrap_or(0) } else { 0 },
             });
         }
         Ok(h)
@@ -143,6 +157,9 @@ mod tests {
             comm_ratio: 0.5,
             kappa: 0.01,
             sim_seconds: 1.0,
+            wire_bytes: 10,
+            tail_s: 0.2,
+            arrivals: 4,
         }
     }
 
@@ -175,7 +192,30 @@ mod tests {
         h.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,"));
+        assert!(text.lines().next().unwrap().ends_with("wire_bytes,tail_s,arrivals"));
         assert_eq!(text.lines().count(), 2);
+        let back = History::read_csv(&path).unwrap();
+        assert_eq!(back.records.len(), 1);
+        assert_eq!(back.records[0].wire_bytes, 10);
+        assert_eq!(back.records[0].arrivals, 4);
+        assert!((back.records[0].tail_s - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_csv_accepts_pre_net_format() {
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.csv");
+        std::fs::write(
+            &path,
+            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds\n\
+             3,1.0,1.1,0.5,42,0.5,0.01,2.5\n",
+        )
+        .unwrap();
+        let h = History::read_csv(&path).unwrap();
+        assert_eq!(h.records.len(), 1);
+        assert_eq!(h.records[0].up_bytes, 42);
+        assert_eq!(h.records[0].wire_bytes, 0, "legacy rows default the net columns");
     }
 
     #[test]

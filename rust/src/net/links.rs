@@ -1,0 +1,278 @@
+//! Heterogeneous per-client link models.
+//!
+//! Replaces the single global `BandwidthModel`: each client gets its
+//! own up/down bandwidth, RTT, and a compute-speed multiplier, drawn
+//! deterministically from a configurable fleet distribution. The three
+//! families cover the regimes the communication-efficiency literature
+//! (Konečný et al.; Le et al.) studies:
+//!
+//! * `uniform`   — every client identical (the legacy model; with the
+//!   default parameters, sync-round timing matches the old
+//!   `BandwidthModel` exactly when uploads are homogeneous);
+//! * `lognormal` — heavy-tailed edge fleet: bandwidth medians with a
+//!   log-scale sigma, compute multiplier drawn with sigma/2;
+//! * `bimodal`   — a fast cohort and a slow cohort (wifi vs cellular),
+//!   slow clients also compute 2x slower.
+//!
+//! Specs parse from compact strings, e.g.
+//! `uniform:up=20,down=100,rtt=0.05`,
+//! `lognormal:up=10,down=50,sigma=0.75,rtt=0.05`,
+//! `bimodal:fast_frac=0.8,fast_up=50,slow_up=2,down=100,rtt=0.05`.
+
+use super::parse_kv;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Fleet-level distribution the per-client links are drawn from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinkDist {
+    Uniform { up_mbps: f64, down_mbps: f64, rtt_s: f64 },
+    LogNormal { up_mbps: f64, down_mbps: f64, sigma: f64, rtt_s: f64 },
+    Bimodal { fast_frac: f64, fast_up_mbps: f64, slow_up_mbps: f64, down_mbps: f64, rtt_s: f64 },
+}
+
+impl Default for LinkDist {
+    fn default() -> Self {
+        // The legacy BandwidthModel's modest edge uplink.
+        LinkDist::Uniform { up_mbps: 20.0, down_mbps: 100.0, rtt_s: 0.05 }
+    }
+}
+
+impl LinkDist {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, parse_kv(a)?),
+            None => (spec, Default::default()),
+        };
+        let getf = |k: &str, d: f64| -> Result<f64> {
+            match args.get(k) {
+                Some(v) => match v.parse::<f64>() {
+                    Ok(x) => Ok(x),
+                    Err(e) => bail!("link_dist {k}={v}: {e}"),
+                },
+                None => Ok(d),
+            }
+        };
+        let dist = match name {
+            "uniform" => LinkDist::Uniform {
+                up_mbps: getf("up", 20.0)?,
+                down_mbps: getf("down", 100.0)?,
+                rtt_s: getf("rtt", 0.05)?,
+            },
+            "lognormal" => LinkDist::LogNormal {
+                up_mbps: getf("up", 10.0)?,
+                down_mbps: getf("down", 50.0)?,
+                sigma: getf("sigma", 0.75)?,
+                rtt_s: getf("rtt", 0.05)?,
+            },
+            "bimodal" => LinkDist::Bimodal {
+                fast_frac: getf("fast_frac", 0.8)?,
+                fast_up_mbps: getf("fast_up", 50.0)?,
+                slow_up_mbps: getf("slow_up", 2.0)?,
+                down_mbps: getf("down", 100.0)?,
+                rtt_s: getf("rtt", 0.05)?,
+            },
+            other => bail!("unknown link distribution {other}"),
+        };
+        dist.validate()?;
+        Ok(dist)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let ok = match self {
+            LinkDist::Uniform { up_mbps, down_mbps, rtt_s } => {
+                *up_mbps > 0.0 && *down_mbps > 0.0 && *rtt_s >= 0.0
+            }
+            LinkDist::LogNormal { up_mbps, down_mbps, sigma, rtt_s } => {
+                *up_mbps > 0.0 && *down_mbps > 0.0 && *sigma >= 0.0 && *rtt_s >= 0.0
+            }
+            LinkDist::Bimodal { fast_frac, fast_up_mbps, slow_up_mbps, down_mbps, rtt_s } => {
+                (0.0..=1.0).contains(fast_frac)
+                    && *fast_up_mbps > 0.0
+                    && *slow_up_mbps > 0.0
+                    && *down_mbps > 0.0
+                    && *rtt_s >= 0.0
+            }
+        };
+        if !ok {
+            bail!("invalid link distribution parameters: {self:?}");
+        }
+        Ok(())
+    }
+
+    pub fn spec_string(&self) -> String {
+        match self {
+            LinkDist::Uniform { up_mbps, down_mbps, rtt_s } => {
+                format!("uniform:up={up_mbps},down={down_mbps},rtt={rtt_s}")
+            }
+            LinkDist::LogNormal { up_mbps, down_mbps, sigma, rtt_s } => {
+                format!("lognormal:up={up_mbps},down={down_mbps},sigma={sigma},rtt={rtt_s}")
+            }
+            LinkDist::Bimodal { fast_frac, fast_up_mbps, slow_up_mbps, down_mbps, rtt_s } => {
+                format!(
+                    "bimodal:fast_frac={fast_frac},fast_up={fast_up_mbps},slow_up={slow_up_mbps},down={down_mbps},rtt={rtt_s}"
+                )
+            }
+        }
+    }
+}
+
+/// One client's link: fixed for the whole run (heterogeneity is
+/// per-device, not per-round).
+#[derive(Debug, Clone, Copy)]
+pub struct ClientLink {
+    pub up_bps: f64,
+    pub down_bps: f64,
+    pub rtt_s: f64,
+    /// Multiplier on the configured local-compute time.
+    pub compute_mult: f64,
+}
+
+impl ClientLink {
+    /// Seconds to push `bytes` upstream (half the RTT charged per
+    /// direction so a full round pays one RTT, like the legacy model).
+    pub fn upload_secs(&self, bytes: u64) -> f64 {
+        self.rtt_s * 0.5 + (bytes as f64 * 8.0) / self.up_bps
+    }
+
+    pub fn download_secs(&self, bytes: u64) -> f64 {
+        self.rtt_s * 0.5 + (bytes as f64 * 8.0) / self.down_bps
+    }
+}
+
+/// All clients' links, drawn once per run from the fleet distribution.
+#[derive(Debug, Clone)]
+pub struct LinkFleet {
+    links: Vec<ClientLink>,
+}
+
+impl LinkFleet {
+    pub fn new(dist: &LinkDist, num_clients: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x11f1_ee7);
+        let links = (0..num_clients)
+            .map(|_| match *dist {
+                LinkDist::Uniform { up_mbps, down_mbps, rtt_s } => ClientLink {
+                    up_bps: up_mbps * 1e6,
+                    down_bps: down_mbps * 1e6,
+                    rtt_s,
+                    compute_mult: 1.0,
+                },
+                LinkDist::LogNormal { up_mbps, down_mbps, sigma, rtt_s } => ClientLink {
+                    up_bps: up_mbps * 1e6 * (sigma * rng.normal()).exp(),
+                    down_bps: down_mbps * 1e6 * (sigma * rng.normal()).exp(),
+                    rtt_s,
+                    compute_mult: (0.5 * sigma * rng.normal()).exp(),
+                },
+                LinkDist::Bimodal {
+                    fast_frac,
+                    fast_up_mbps,
+                    slow_up_mbps,
+                    down_mbps,
+                    rtt_s,
+                } => {
+                    let fast = rng.gen_bool(fast_frac);
+                    ClientLink {
+                        up_bps: if fast { fast_up_mbps } else { slow_up_mbps } * 1e6,
+                        down_bps: down_mbps * 1e6,
+                        rtt_s,
+                        compute_mult: if fast { 1.0 } else { 2.0 },
+                    }
+                }
+            })
+            .collect();
+        LinkFleet { links }
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    pub fn link(&self, client: usize) -> &ClientLink {
+        &self.links[client]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_fleet_is_identical_and_matches_legacy_timing() {
+        let fleet = LinkFleet::new(&LinkDist::default(), 8, 42);
+        let l0 = fleet.link(0);
+        for c in 1..8 {
+            let l = fleet.link(c);
+            assert_eq!(l.up_bps, l0.up_bps);
+            assert_eq!(l.compute_mult, 1.0);
+        }
+        // legacy BandwidthModel::round_seconds(up, down) = up/2.5MBps + down/12.5MBps + rtt
+        let legacy = (1_000_000.0 * 8.0) / 20e6 + (2_000_000.0 * 8.0) / 100e6 + 0.05;
+        let now = l0.upload_secs(1_000_000) + l0.download_secs(2_000_000);
+        assert!((legacy - now).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleets_are_deterministic_per_seed() {
+        let d = LinkDist::LogNormal { up_mbps: 10.0, down_mbps: 50.0, sigma: 0.75, rtt_s: 0.05 };
+        let a = LinkFleet::new(&d, 16, 7);
+        let b = LinkFleet::new(&d, 16, 7);
+        let c = LinkFleet::new(&d, 16, 8);
+        for i in 0..16 {
+            assert_eq!(a.link(i).up_bps, b.link(i).up_bps);
+        }
+        assert!((0..16).any(|i| a.link(i).up_bps != c.link(i).up_bps));
+    }
+
+    #[test]
+    fn lognormal_spreads_around_median() {
+        let d = LinkDist::LogNormal { up_mbps: 10.0, down_mbps: 50.0, sigma: 0.75, rtt_s: 0.0 };
+        let fleet = LinkFleet::new(&d, 512, 3);
+        let ups: Vec<f64> = (0..512).map(|i| fleet.link(i).up_bps).collect();
+        let above = ups.iter().filter(|&&u| u > 10e6).count();
+        // median ~ half above, half below
+        assert!((150..=362).contains(&above), "above-median count {above}");
+        let spread = ups.iter().cloned().fold(0.0f64, f64::max)
+            / ups.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 3.0, "lognormal fleet too homogeneous: {spread}");
+    }
+
+    #[test]
+    fn bimodal_has_two_cohorts() {
+        let d = LinkDist::Bimodal {
+            fast_frac: 0.5,
+            fast_up_mbps: 50.0,
+            slow_up_mbps: 2.0,
+            down_mbps: 100.0,
+            rtt_s: 0.0,
+        };
+        let fleet = LinkFleet::new(&d, 256, 5);
+        let fast = (0..256).filter(|&i| fleet.link(i).up_bps == 50e6).count();
+        let slow = (0..256).filter(|&i| fleet.link(i).up_bps == 2e6).count();
+        assert_eq!(fast + slow, 256);
+        assert!(fast > 64 && slow > 64, "cohorts {fast}/{slow}");
+        // slow cohort also computes slower
+        let i = (0..256).find(|&i| fleet.link(i).up_bps == 2e6).unwrap();
+        assert_eq!(fleet.link(i).compute_mult, 2.0);
+    }
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        for spec in [
+            "uniform:up=20,down=100,rtt=0.05",
+            "lognormal:up=10,down=50,sigma=0.75,rtt=0.05",
+            "bimodal:fast_frac=0.8,fast_up=50,slow_up=2,down=100,rtt=0.05",
+        ] {
+            let d = LinkDist::parse(spec).unwrap();
+            let again = LinkDist::parse(&d.spec_string()).unwrap();
+            assert_eq!(d, again, "{spec}");
+        }
+        assert_eq!(LinkDist::parse("uniform").unwrap(), LinkDist::default());
+        assert!(LinkDist::parse("warp").is_err());
+        assert!(LinkDist::parse("uniform:up=0").is_err());
+        assert!(LinkDist::parse("uniform:up=abc").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Network simulation subsystem: wire transport, heterogeneous links,
+//! and the event-driven round scheduler.
+//!
+//! * `wire`  — framed, byte-exact codecs for every upload flavor; the
+//!   comm ledger records `frame.len()`, not analytic estimates.
+//! * `links` — per-client up/down bandwidth + RTT + compute speed,
+//!   drawn from configurable fleet distributions.
+//! * `sched` — binary-heap event queue simulating broadcast → local
+//!   compute → upload per client, with `sync` / `deadline` /
+//!   `buffered` round-closing policies.
+//!
+//! `NetCfg` is the `net:` block of a run config (flat keys
+//! `link_dist`, `round_mode`, `deadline_s`, `buffer_k`, `compute_s`);
+//! `NetSim` is the per-run instance the FL server drives each round.
+
+pub mod links;
+pub mod sched;
+pub mod wire;
+
+pub use links::{ClientLink, LinkDist, LinkFleet};
+pub use sched::{Arrival, RoundMode, RoundOutcome};
+pub use wire::{Decoded, WireFrame, WireHint};
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Parse `k=v,k=v` argument lists for the net spec strings.
+pub(crate) fn parse_kv(s: &str) -> Result<BTreeMap<String, String>> {
+    let mut m = BTreeMap::new();
+    for part in s.split(',') {
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once('=').with_context(|| format!("bad net arg {part:?}"))?;
+        m.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(m)
+}
+
+/// The `net:` configuration block of one FL run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetCfg {
+    pub link_dist: LinkDist,
+    pub round_mode: RoundMode,
+    /// Mean local-compute seconds per client per round (scaled by each
+    /// client's `compute_mult`); 0 models communication-bound rounds.
+    pub compute_s: f64,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg {
+            link_dist: LinkDist::default(),
+            round_mode: RoundMode::Sync,
+            compute_s: 0.0,
+        }
+    }
+}
+
+/// Per-run network simulator: a fixed link fleet plus the round policy.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    pub cfg: NetCfg,
+    pub fleet: LinkFleet,
+}
+
+impl NetSim {
+    pub fn new(cfg: NetCfg, num_clients: usize, seed: u64) -> Self {
+        let fleet = LinkFleet::new(&cfg.link_dist, num_clients, seed);
+        NetSim { cfg, fleet }
+    }
+
+    /// Per-slot completion time: download the broadcast, compute, push
+    /// the upload frame.
+    pub fn client_secs(&self, client: usize, bcast_bytes: u64, frame_bytes: u64) -> f64 {
+        let l = self.fleet.link(client);
+        l.download_secs(bcast_bytes)
+            + self.cfg.compute_s * l.compute_mult
+            + l.upload_secs(frame_bytes)
+    }
+
+    /// Simulate one round for `actives[i]` uploading `frame_bytes[i]`
+    /// after a `bcast_bytes` broadcast.
+    pub fn round(&self, actives: &[usize], bcast_bytes: u64, frame_bytes: &[u64]) -> RoundOutcome {
+        assert_eq!(actives.len(), frame_bytes.len());
+        let times: Vec<f64> = actives
+            .iter()
+            .zip(frame_bytes)
+            .map(|(&c, &fb)| self.client_secs(c, bcast_bytes, fb))
+            .collect();
+        sched::simulate_round(&self.cfg.round_mode, &times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cfg_matches_legacy_semantics() {
+        let cfg = NetCfg::default();
+        assert_eq!(cfg.round_mode, RoundMode::Sync);
+        assert_eq!(cfg.link_dist, LinkDist::default());
+        assert_eq!(cfg.compute_s, 0.0);
+    }
+
+    #[test]
+    fn sim_round_uses_per_client_links() {
+        // fast_frac 0.75 keeps the median inside the fast cohort with
+        // overwhelming probability, so the straggler tail is visible.
+        let cfg = NetCfg {
+            link_dist: LinkDist::Bimodal {
+                fast_frac: 0.75,
+                fast_up_mbps: 80.0,
+                slow_up_mbps: 1.0,
+                down_mbps: 100.0,
+                rtt_s: 0.0,
+            },
+            round_mode: RoundMode::Sync,
+            compute_s: 0.0,
+        };
+        let sim = NetSim::new(cfg, 64, 9);
+        let actives: Vec<usize> = (0..64).collect();
+        let frames = vec![1_000_000u64; 64];
+        let out = sim.round(&actives, 500_000, &frames);
+        // slowest = a slow-cohort client: 8Mb / 1Mbps = 8s upload
+        let slowest = actives
+            .iter()
+            .map(|&c| sim.client_secs(c, 500_000, 1_000_000))
+            .fold(0.0f64, f64::max);
+        assert_eq!(out.round_secs, slowest);
+        assert!(out.straggler_tail_s > 0.0, "bimodal fleet must show a tail");
+    }
+
+    #[test]
+    fn compute_time_scales_with_multiplier() {
+        let cfg = NetCfg {
+            link_dist: LinkDist::default(),
+            round_mode: RoundMode::Sync,
+            compute_s: 2.0,
+        };
+        let sim = NetSim::new(cfg, 4, 1);
+        let with = sim.client_secs(0, 0, 0);
+        assert!((with - (2.0 + 0.05)).abs() < 1e-12); // compute + rtt
+    }
+}

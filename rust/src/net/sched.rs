@@ -1,0 +1,323 @@
+//! Event-driven round scheduler.
+//!
+//! Each active client runs broadcast-download → local compute → upload
+//! on its own link; the per-client completion times feed a binary-heap
+//! event queue, and the round mode decides when the server aggregates:
+//!
+//! * `sync`     — the server waits for every active client, so the
+//!   slowest one bounds the round (the semantics the old
+//!   `BandwidthModel` documented but did not implement — it charged
+//!   the *mean* upload; the regression is pinned here and in
+//!   `tests/integration_net.rs`);
+//! * `deadline` — the server closes the round at a wall-clock budget
+//!   and aggregates whatever arrived (LUAR's survivor path); if
+//!   nothing arrived it waits for the first upload;
+//! * `buffered` — FedBuff-style semi-async: the server flushes its
+//!   buffer every K arrivals and the round closes at the *last full
+//!   flush*, so stragglers past the final k-boundary spill out of the
+//!   round (their bytes were still paid; in a real deployment they
+//!   land in the next buffer) and the wall-clock decouples from the
+//!   slowest client. A client whose upload lands after `s` completed
+//!   flushes is discounted by 1/sqrt(1+s) (the staleness weight
+//!   FedBuff suggests).
+//!
+//! Specs: `sync`, `deadline:s=2.5`, `buffered:k=8`. The event queue
+//! is a min-heap over upload-completion events; today each round
+//! drains it once (no mid-round insertions yet — re-broadcasts and
+//! retries are the natural extension point).
+
+use super::parse_kv;
+use anyhow::{bail, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// When the server closes a round over the arrival stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundMode {
+    Sync,
+    Deadline { deadline_s: f64 },
+    Buffered { k: usize },
+}
+
+impl Default for RoundMode {
+    fn default() -> Self {
+        RoundMode::Sync
+    }
+}
+
+impl RoundMode {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, parse_kv(a)?),
+            None => (spec, Default::default()),
+        };
+        Ok(match name {
+            "sync" => RoundMode::Sync,
+            "deadline" => {
+                let s = match args.get("s") {
+                    Some(v) => match v.parse::<f64>() {
+                        Ok(x) if x > 0.0 => x,
+                        _ => bail!("deadline:s={v} must be a positive number"),
+                    },
+                    None => 5.0,
+                };
+                RoundMode::Deadline { deadline_s: s }
+            }
+            "buffered" => {
+                let k = match args.get("k") {
+                    Some(v) => match v.parse::<usize>() {
+                        Ok(x) if x > 0 => x,
+                        _ => bail!("buffered:k={v} must be a positive integer"),
+                    },
+                    None => 8,
+                };
+                RoundMode::Buffered { k }
+            }
+            other => bail!("unknown round mode {other}"),
+        })
+    }
+
+    pub fn spec_string(&self) -> String {
+        match self {
+            RoundMode::Sync => "sync".into(),
+            RoundMode::Deadline { deadline_s } => format!("deadline:s={deadline_s}"),
+            RoundMode::Buffered { k } => format!("buffered:k={k}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundMode::Sync => "sync",
+            RoundMode::Deadline { .. } => "deadline",
+            RoundMode::Buffered { .. } => "buffered",
+        }
+    }
+}
+
+/// One upload landing at the server.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Index into the round's active-client list.
+    pub slot: usize,
+    pub t: f64,
+}
+
+/// What one simulated round did, per active slot.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Wall-clock until the server's aggregation is complete.
+    pub round_secs: f64,
+    /// Straggler tail: slowest arrival minus the median arrival.
+    pub straggler_tail_s: f64,
+    /// Per slot: did this upload make it into the aggregate?
+    pub included: Vec<bool>,
+    /// Per slot: aggregation weight (1.0 unless staleness-discounted).
+    pub weights: Vec<f32>,
+    /// Arrivals in event order (the server's actual receive sequence).
+    pub arrivals: Vec<Arrival>,
+    /// Number of uploads aggregated this round.
+    pub aggregated: usize,
+}
+
+/// Min-heap key: arrival time then slot (total order over f64 via
+/// `total_cmp`; times are finite by construction).
+#[derive(Debug, PartialEq)]
+struct Ev(f64, usize);
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// Run one round's event loop over per-slot completion times.
+pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
+    let n = times.len();
+    assert!(n > 0, "round with no active clients");
+    let mut heap: BinaryHeap<Reverse<Ev>> = times
+        .iter()
+        .enumerate()
+        .map(|(slot, &t)| Reverse(Ev(t, slot)))
+        .collect();
+    let mut arrivals = Vec::with_capacity(n);
+    while let Some(Reverse(Ev(t, slot))) = heap.pop() {
+        arrivals.push(Arrival { slot, t });
+    }
+    let t_max = arrivals.last().map(|a| a.t).unwrap_or(0.0);
+    let mut included = vec![false; n];
+    let mut weights = vec![0.0f32; n];
+
+    let round_secs = match *mode {
+        RoundMode::Sync => {
+            for a in &arrivals {
+                included[a.slot] = true;
+                weights[a.slot] = 1.0;
+            }
+            t_max
+        }
+        RoundMode::Deadline { deadline_s } => {
+            let mut any = false;
+            for a in &arrivals {
+                if a.t <= deadline_s {
+                    included[a.slot] = true;
+                    weights[a.slot] = 1.0;
+                    any = true;
+                }
+            }
+            if any {
+                // close early if everyone made it, else at the deadline
+                if t_max <= deadline_s {
+                    t_max
+                } else {
+                    deadline_s
+                }
+            } else {
+                // nothing arrived in budget: wait for the first upload
+                let first = arrivals[0];
+                included[first.slot] = true;
+                weights[first.slot] = 1.0;
+                first.t
+            }
+        }
+        RoundMode::Buffered { k } => {
+            let k = k.clamp(1, n);
+            // The round ends at the last full k-flush; the partial
+            // buffer past it spills into the next round (those uploads
+            // are not aggregated here, though their bytes were paid).
+            let n_flushed = (n / k) * k;
+            let mut flushes = 0usize;
+            for (i, a) in arrivals.iter().enumerate().take(n_flushed) {
+                // staleness = completed buffer flushes since this client
+                // pulled the model at t=0
+                included[a.slot] = true;
+                weights[a.slot] = (1.0 / (1.0 + flushes as f64).sqrt()) as f32;
+                if (i + 1) % k == 0 {
+                    flushes += 1;
+                }
+            }
+            arrivals[n_flushed - 1].t
+        }
+    };
+
+    let median = {
+        let mut ts: Vec<f64> = times.to_vec();
+        ts.sort_by(f64::total_cmp);
+        ts[n / 2]
+    };
+    let aggregated = included.iter().filter(|&&b| b).count();
+    RoundOutcome {
+        round_secs,
+        straggler_tail_s: (t_max - median).max(0.0),
+        included,
+        weights,
+        arrivals,
+        aggregated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_round_is_bounded_by_slowest_client() {
+        // Regression for the mean-vs-max timing bug: the old
+        // BandwidthModel charged the mean upload; sync semantics
+        // require the max.
+        let times = [0.4, 2.0, 0.6, 0.5];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let out = simulate_round(&RoundMode::Sync, &times);
+        assert_eq!(out.round_secs, 2.0, "sync must wait for the slowest client");
+        assert!(out.round_secs > mean, "regression: mean-upload timing resurfaced");
+        assert_eq!(out.aggregated, 4);
+        assert!(out.included.iter().all(|&b| b));
+        assert!(out.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn arrivals_pop_in_time_order() {
+        let out = simulate_round(&RoundMode::Sync, &[0.9, 0.1, 0.5]);
+        let order: Vec<usize> = out.arrivals.iter().map(|a| a.slot).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        assert!((out.straggler_tail_s - 0.4).abs() < 1e-12); // 0.9 - median 0.5
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_closes_at_budget() {
+        let out = simulate_round(&RoundMode::Deadline { deadline_s: 1.0 }, &[0.5, 3.0, 0.8]);
+        assert_eq!(out.round_secs, 1.0);
+        assert_eq!(out.included, vec![true, false, true]);
+        assert_eq!(out.aggregated, 2);
+    }
+
+    #[test]
+    fn deadline_closes_early_when_all_arrive() {
+        let out = simulate_round(&RoundMode::Deadline { deadline_s: 10.0 }, &[0.5, 0.7]);
+        assert_eq!(out.round_secs, 0.7);
+        assert_eq!(out.aggregated, 2);
+    }
+
+    #[test]
+    fn deadline_never_aggregates_zero_clients() {
+        let out = simulate_round(&RoundMode::Deadline { deadline_s: 0.1 }, &[2.0, 5.0]);
+        assert_eq!(out.aggregated, 1);
+        assert_eq!(out.included, vec![true, false]);
+        assert_eq!(out.round_secs, 2.0, "server waits for the first upload");
+    }
+
+    #[test]
+    fn buffered_discounts_stale_arrivals_and_closes_at_last_flush() {
+        // k=2 over 5 clients: flushes complete after arrivals 2 and 4;
+        // the 5th upload spills to the next round's buffer.
+        let times = [0.1, 0.2, 0.3, 0.4, 0.5];
+        let out = simulate_round(&RoundMode::Buffered { k: 2 }, &times);
+        assert_eq!(out.round_secs, 0.4, "round closes at the last full flush, not t_max");
+        assert_eq!(out.aggregated, 4);
+        assert!(!out.included[4], "partial-buffer straggler spills out of the round");
+        assert_eq!(out.weights[0], 1.0);
+        assert_eq!(out.weights[1], 1.0);
+        let w2 = 1.0 / (2.0f64).sqrt();
+        assert!((out.weights[2] as f64 - w2).abs() < 1e-6);
+        assert!((out.weights[3] as f64 - w2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn buffered_decouples_round_time_from_stragglers() {
+        // The whole point of FedBuff: one 100s straggler must not
+        // bound the round (it would under sync).
+        let times = [0.1, 0.2, 0.3, 100.0];
+        let out = simulate_round(&RoundMode::Buffered { k: 3 }, &times);
+        assert_eq!(out.round_secs, 0.3);
+        assert_eq!(out.aggregated, 3);
+        assert_eq!(simulate_round(&RoundMode::Sync, &times).round_secs, 100.0);
+    }
+
+    #[test]
+    fn buffered_k_clamped_to_fleet() {
+        let out = simulate_round(&RoundMode::Buffered { k: 100 }, &[0.1, 0.2]);
+        assert!(out.weights.iter().all(|&w| w == 1.0), "k > n degrades to sync weights");
+        assert_eq!(out.aggregated, 2);
+        assert_eq!(out.round_secs, 0.2);
+    }
+
+    #[test]
+    fn mode_specs_roundtrip() {
+        for spec in ["sync", "deadline:s=2.5", "buffered:k=8"] {
+            let m = RoundMode::parse(spec).unwrap();
+            assert_eq!(RoundMode::parse(&m.spec_string()).unwrap(), m, "{spec}");
+        }
+        assert_eq!(RoundMode::parse("deadline").unwrap(), RoundMode::Deadline { deadline_s: 5.0 });
+        assert_eq!(RoundMode::parse("buffered").unwrap(), RoundMode::Buffered { k: 8 });
+        assert!(RoundMode::parse("async").is_err());
+        assert!(RoundMode::parse("deadline:s=-1").is_err());
+        assert!(RoundMode::parse("buffered:k=0").is_err());
+    }
+}

@@ -1,0 +1,860 @@
+//! Framed wire codecs: byte-exact encode/decode for every upload
+//! flavor the repo produces. The Comm column stops being an analytic
+//! estimate — `CommAccountant` records `frame.len()`, so headers,
+//! layer-id lists, sparse indices, range scalars, and factor shapes
+//! all count.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! magic       u16  0xFED1
+//! version     u8   1
+//! flavor      u8   Flavor discriminant
+//! dim         u32  full flat-model length (sanity check on decode)
+//! n_layers    u16  number of layer ids that follow
+//! reserved    u16  0
+//! payload_len u32  bytes after the layer-id list
+//! layer_ids   n_layers x u16
+//! payload     flavor-specific, payload_len bytes
+//! ```
+//!
+//! Flavor payloads (all operating on the *listed* layers only, which
+//! is how LUAR's partial uploads and the Table 3 compositions get
+//! exact byte counts with no scaling heuristics):
+//!
+//! * `Dense`     — raw f32 slice per listed layer.
+//! * `Sparse`    — u32 nnz, then nnz x (u32 global index, f32 value);
+//!   lossless for top-k / pruned / dropped-out updates.
+//! * `Quantized` — u32 levels, then per layer (f32 lo, f32 step,
+//!   bit-packed level indices); reproduces FedPAQ grid points exactly.
+//! * `SignBits`  — per layer (f32 alpha, 1 sign bit per element);
+//!   exact for the binarizer's ±alpha outputs.
+//! * `LowRank`   — per array: dense passthrough or (u16 r, Q m x r,
+//!   B r x n) factors; decode reconstructs QB (float-tolerance lossy,
+//!   bounded in tests).
+//! * `Scalar`    — one f32 look-back coefficient (LBGM); the server
+//!   reconstructs from its per-client anchor, which in this simulator
+//!   is the client's in-place reconstruction.
+//! * `SeededMask`— FedDropoutAvg: u64 mask seed + f32 rate + kept
+//!   values in position order; the decoder regenerates the dropout
+//!   mask from the shared seed, so no indices cross the wire.
+//! * `Bitmap`    — PruneFL: a 1-bit-per-parameter mask bitmap plus the
+//!   kept values (the bitmap stands in for PruneFL's periodic mask
+//!   reconfiguration broadcast).
+//! * `Broadcast` — downlink frame: full f32 params, with the delta
+//!   layer-id list (R_t) riding in the header's layer-id slot — the
+//!   bytes the paper's §3.2 broadcast actually pays.
+
+use crate::model::ModelMeta;
+use anyhow::{bail, Result};
+
+pub const MAGIC: u16 = 0xFED1;
+pub const VERSION: u8 = 1;
+/// Fixed header bytes before the layer-id list.
+pub const HEADER_LEN: usize = 16;
+
+/// Wire flavor discriminants (header byte 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Flavor {
+    Dense = 0,
+    Sparse = 1,
+    Quantized = 2,
+    SignBits = 3,
+    LowRank = 4,
+    Scalar = 5,
+    Broadcast = 6,
+    SeededMask = 7,
+    Bitmap = 8,
+}
+
+impl Flavor {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Flavor::Dense,
+            1 => Flavor::Sparse,
+            2 => Flavor::Quantized,
+            3 => Flavor::SignBits,
+            4 => Flavor::LowRank,
+            5 => Flavor::Scalar,
+            6 => Flavor::Broadcast,
+            7 => Flavor::SeededMask,
+            8 => Flavor::Bitmap,
+            other => bail!("unknown wire flavor {other}"),
+        })
+    }
+}
+
+/// How a compressor's most recent in-place output should be framed.
+/// Returned by `UpdateCompressor::wire_hint` right after `compress`.
+#[derive(Debug, Clone)]
+pub enum WireHint {
+    /// Raw f32 per listed layer (identity / LUAR partial uploads).
+    Dense,
+    /// Index/value pairs of the nonzeros (top-k, prune, dropout).
+    Sparse,
+    /// FedPAQ grid: `ranges[l] = (lo, step)` per *model* layer, as the
+    /// quantizer computed them (step 0 marks a degenerate/constant
+    /// layer encoded as lo).
+    Quantized { levels: u32, ranges: Vec<(f32, f32)> },
+    /// ±alpha sign binarization; alpha recovered as max |v| per layer.
+    SignBits,
+    /// Randomized rangefinder factors at `rank_ratio` per matrix array.
+    LowRank { rank_ratio: f32 },
+    /// LBGM look-back coefficient.
+    Scalar { coef: f32 },
+    /// FedDropoutAvg: the (client, round)-seeded mask is regenerated
+    /// server-side, so only kept values travel.
+    SeededMask { seed: u64, rate: f32 },
+    /// PruneFL: mask bitmap + kept values (server-shared mask
+    /// represented explicitly on the wire).
+    Bitmap,
+}
+
+/// One encoded frame; `len()` is the exact wire cost in bytes.
+#[derive(Debug, Clone)]
+pub struct WireFrame {
+    bytes: Vec<u8>,
+}
+
+impl WireFrame {
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn flavor(&self) -> Result<Flavor> {
+        if self.bytes.len() < HEADER_LEN {
+            bail!("frame shorter than header");
+        }
+        Flavor::from_u8(self.bytes[3])
+    }
+}
+
+/// Server-side view of a decoded upload.
+#[derive(Debug, Clone)]
+pub enum Decoded {
+    /// Full-dim vector (zeros in unlisted layers).
+    Vector(Vec<f32>),
+    /// LBGM coefficient; the caller reconstructs from its anchor.
+    Scalar(f32),
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("frame truncated at byte {} (wanted {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Pack `bits`-wide values little-endian-first into bytes.
+fn pack_bits(values: impl Iterator<Item = u32>, bits: u32, out: &mut Vec<u8>) {
+    debug_assert!((1..=32).contains(&bits));
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for v in values {
+        acc |= (v as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+}
+
+/// Inverse of `pack_bits`: read `count` values of `bits` width.
+fn unpack_bits(cur: &mut Cur, bits: u32, count: usize) -> Result<Vec<u32>> {
+    let total_bits = (count as u64) * bits as u64;
+    let nbytes = total_bits.div_ceil(8) as usize;
+    let bytes = cur.take(nbytes)?;
+    let mut vals = Vec::with_capacity(count);
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut bi = 0usize;
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    for _ in 0..count {
+        while nbits < bits {
+            acc |= (bytes[bi] as u64) << nbits;
+            bi += 1;
+            nbits += 8;
+        }
+        vals.push((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    Ok(vals)
+}
+
+fn header(flavor: Flavor, dim: usize, layer_ids: &[usize]) -> Result<Vec<u8>> {
+    if dim > u32::MAX as usize {
+        bail!("model dim {dim} exceeds wire format limit");
+    }
+    if layer_ids.len() > u16::MAX as usize {
+        bail!("{} layer ids exceed wire format limit", layer_ids.len());
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + 2 * layer_ids.len());
+    push_u16(&mut out, MAGIC);
+    out.push(VERSION);
+    out.push(flavor as u8);
+    push_u32(&mut out, dim as u32);
+    push_u16(&mut out, layer_ids.len() as u16);
+    push_u16(&mut out, 0); // reserved
+    push_u32(&mut out, 0); // payload_len backpatched by seal()
+    for &l in layer_ids {
+        if l > u16::MAX as usize {
+            bail!("layer id {l} exceeds wire format limit");
+        }
+        push_u16(&mut out, l as u16);
+    }
+    Ok(out)
+}
+
+/// Backpatch payload_len once the payload is appended.
+fn seal(mut frame: Vec<u8>, n_layers: usize) -> WireFrame {
+    let body = HEADER_LEN + 2 * n_layers;
+    let payload_len = (frame.len() - body) as u32;
+    frame[12..16].copy_from_slice(&payload_len.to_le_bytes());
+    WireFrame { bytes: frame }
+}
+
+/// Exact wire bytes of a full dense upload — the FedAvg baseline the
+/// Comm-column denominator uses (header + layer-id list + f32 body).
+pub fn dense_frame_len(meta: &ModelMeta) -> u64 {
+    (HEADER_LEN + 2 * meta.num_layers() + 4 * meta.dim) as u64
+}
+
+/// Number of bits per quantized element for `levels` levels.
+fn level_bits(levels: u32) -> u32 {
+    32 - (levels.max(2) - 1).leading_zeros()
+}
+
+/// Per-position membership in the listed layers.
+fn layer_membership(meta: &ModelMeta, layers: &[usize]) -> Vec<bool> {
+    let mut m = vec![false; meta.dim];
+    for &l in layers {
+        let lm = &meta.layers[l];
+        m[lm.offset..lm.offset + lm.size].iter_mut().for_each(|b| *b = true);
+    }
+    m
+}
+
+// ---------------------------------------------------------------- encode
+
+/// Encode one client upload. `layers` lists the layer ids present on
+/// the wire (LUAR's upload set, or all layers); `hint` selects the
+/// flavor from the compressor that produced `update` in place.
+pub fn encode_update(
+    update: &[f32],
+    meta: &ModelMeta,
+    layers: &[usize],
+    hint: &WireHint,
+) -> Result<WireFrame> {
+    if update.len() != meta.dim {
+        bail!("update len {} != model dim {}", update.len(), meta.dim);
+    }
+    for &l in layers {
+        if l >= meta.num_layers() {
+            bail!("layer id {l} out of range");
+        }
+    }
+    let mut out;
+    match hint {
+        WireHint::Dense => {
+            out = header(Flavor::Dense, meta.dim, layers)?;
+            for &l in layers {
+                push_f32s(&mut out, meta.layer(update, l));
+            }
+        }
+        WireHint::Sparse => {
+            out = header(Flavor::Sparse, meta.dim, layers)?;
+            let nnz_at = out.len();
+            push_u32(&mut out, 0);
+            let mut nnz = 0u32;
+            for &l in layers {
+                let lm = &meta.layers[l];
+                for (i, &v) in update[lm.offset..lm.offset + lm.size].iter().enumerate() {
+                    if v != 0.0 {
+                        push_u32(&mut out, (lm.offset + i) as u32);
+                        push_f32(&mut out, v);
+                        nnz += 1;
+                    }
+                }
+            }
+            out[nnz_at..nnz_at + 4].copy_from_slice(&nnz.to_le_bytes());
+        }
+        WireHint::Quantized { levels, ranges } => {
+            if ranges.len() != meta.num_layers() {
+                bail!(
+                    "quantizer ranges cover {} layers, model has {}",
+                    ranges.len(),
+                    meta.num_layers()
+                );
+            }
+            let bits = level_bits(*levels);
+            out = header(Flavor::Quantized, meta.dim, layers)?;
+            push_u32(&mut out, *levels);
+            for &l in layers {
+                let (lo, step) = ranges[l];
+                push_f32(&mut out, lo);
+                push_f32(&mut out, step);
+                let sl = meta.layer(update, l);
+                let qmax = levels.saturating_sub(1);
+                pack_bits(
+                    sl.iter().map(|&v| {
+                        if step > 0.0 {
+                            (((v - lo) / step).round() as i64).clamp(0, qmax as i64) as u32
+                        } else {
+                            0
+                        }
+                    }),
+                    bits,
+                    &mut out,
+                );
+            }
+        }
+        WireHint::SignBits => {
+            out = header(Flavor::SignBits, meta.dim, layers)?;
+            for &l in layers {
+                let sl = meta.layer(update, l);
+                let alpha = sl.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                push_f32(&mut out, alpha);
+                pack_bits(sl.iter().map(|&v| (v < 0.0) as u32), 1, &mut out);
+            }
+        }
+        WireHint::LowRank { rank_ratio } => {
+            out = header(Flavor::LowRank, meta.dim, layers)?;
+            for &l in layers {
+                for am in &meta.layers[l].arrays {
+                    let sl = &update[am.offset..am.offset + am.size];
+                    match crate::compress::lowrank_plan(&am.shape, *rank_ratio) {
+                        Some((m, n, r)) => {
+                            out.push(1); // factored
+                            push_u16(&mut out, r as u16);
+                            // The slice is already (numerically) rank r,
+                            // so a fresh seeded rangefinder recovers its
+                            // column space; the seed only needs to be
+                            // deterministic, not shared with the client.
+                            let mut rng =
+                                crate::rng::Rng::seed_from_u64(0x5eed ^ (am.size as u64));
+                            let (q, b) = crate::compress::lowrank_factor(sl, m, n, r, &mut rng);
+                            push_f32s(&mut out, &q);
+                            push_f32s(&mut out, &b);
+                        }
+                        None => {
+                            out.push(0); // dense passthrough
+                            push_f32s(&mut out, sl);
+                        }
+                    }
+                }
+            }
+        }
+        WireHint::Scalar { coef } => {
+            // The coefficient references no layer data (the server's
+            // anchor reconstructs everything), so no layer-id list is
+            // paid — a scalar round really is header + 4 bytes.
+            out = header(Flavor::Scalar, meta.dim, &[])?;
+            push_f32(&mut out, *coef);
+            return Ok(seal(out, 0));
+        }
+        WireHint::SeededMask { seed, rate } => {
+            out = header(Flavor::SeededMask, meta.dim, layers)?;
+            out.extend_from_slice(&seed.to_le_bytes());
+            push_f32(&mut out, *rate);
+            let kept_at = out.len();
+            push_u32(&mut out, 0);
+            // Regenerate the mask exactly as the compressor drew it
+            // (the rng must step over every position to stay aligned);
+            // kept slots in *listed* layers ship even when 0.0.
+            let listed = layer_membership(meta, layers);
+            let mut mask_rng = crate::rng::Rng::seed_from_u64(*seed);
+            let mut kept = 0u32;
+            for (i, &v) in update.iter().enumerate() {
+                if mask_rng.f32() >= *rate && listed[i] {
+                    push_f32(&mut out, v);
+                    kept += 1;
+                }
+            }
+            out[kept_at..kept_at + 4].copy_from_slice(&kept.to_le_bytes());
+        }
+        WireHint::Bitmap => {
+            out = header(Flavor::Bitmap, meta.dim, layers)?;
+            let kept: u32 = update.iter().filter(|&&v| v != 0.0).count() as u32;
+            push_u32(&mut out, kept);
+            pack_bits(update.iter().map(|&v| (v != 0.0) as u32), 1, &mut out);
+            for &v in update {
+                if v != 0.0 {
+                    push_f32(&mut out, v);
+                }
+            }
+        }
+    }
+    Ok(seal(out, layers.len()))
+}
+
+/// Encode the downlink broadcast: full params + the delta layer-id
+/// list (R_t). Per-client broadcast variants (FedMut mutations) have
+/// identical length, so one encode measures the whole round's downlink.
+pub fn encode_broadcast(
+    params: &[f32],
+    meta: &ModelMeta,
+    recycle_set: &[usize],
+) -> Result<WireFrame> {
+    if params.len() != meta.dim {
+        bail!("params len {} != model dim {}", params.len(), meta.dim);
+    }
+    let mut out = header(Flavor::Broadcast, meta.dim, recycle_set)?;
+    push_f32s(&mut out, params);
+    Ok(seal(out, recycle_set.len()))
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Parsed<'a> {
+    flavor: Flavor,
+    layer_ids: Vec<usize>,
+    cur: Cur<'a>,
+}
+
+fn parse_header<'a>(frame: &'a [u8], meta: &ModelMeta) -> Result<Parsed<'a>> {
+    let mut cur = Cur { buf: frame, pos: 0 };
+    if cur.u16()? != MAGIC {
+        bail!("bad wire magic");
+    }
+    let ver = cur.take(1)?[0];
+    if ver != VERSION {
+        bail!("wire version {ver} != {VERSION}");
+    }
+    let flavor = Flavor::from_u8(cur.take(1)?[0])?;
+    let dim = cur.u32()? as usize;
+    if dim != meta.dim {
+        bail!("frame dim {dim} != model dim {}", meta.dim);
+    }
+    let n_layers = cur.u16()? as usize;
+    let _reserved = cur.u16()?;
+    let payload_len = cur.u32()? as usize;
+    let mut layer_ids = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let l = cur.u16()? as usize;
+        if l >= meta.num_layers() {
+            bail!("frame layer id {l} out of range");
+        }
+        layer_ids.push(l);
+    }
+    if cur.pos + payload_len != frame.len() {
+        bail!("frame length {} != header-declared {}", frame.len(), cur.pos + payload_len);
+    }
+    Ok(Parsed { flavor, layer_ids, cur })
+}
+
+/// Decode an uplink frame back into a full-dim vector (or the LBGM
+/// scalar). The round-trip invariants per flavor are pinned in tests:
+/// dense/sparse/quantized/signbits are exact, low-rank is bounded.
+pub fn decode_update(frame: &[u8], meta: &ModelMeta) -> Result<Decoded> {
+    let Parsed { flavor, layer_ids, mut cur } = parse_header(frame, meta)?;
+    let mut v = vec![0.0f32; meta.dim];
+    match flavor {
+        Flavor::Dense => {
+            for &l in &layer_ids {
+                let lm = &meta.layers[l];
+                let vals = cur.f32s(lm.size)?;
+                v[lm.offset..lm.offset + lm.size].copy_from_slice(&vals);
+            }
+        }
+        Flavor::Sparse => {
+            let nnz = cur.u32()? as usize;
+            for _ in 0..nnz {
+                let idx = cur.u32()? as usize;
+                let val = cur.f32()?;
+                if idx >= meta.dim {
+                    bail!("sparse index {idx} out of range");
+                }
+                v[idx] = val;
+            }
+        }
+        Flavor::Quantized => {
+            let levels = cur.u32()?;
+            let bits = level_bits(levels);
+            for &l in &layer_ids {
+                let lm = &meta.layers[l];
+                let lo = cur.f32()?;
+                let step = cur.f32()?;
+                let qs = unpack_bits(&mut cur, bits, lm.size)?;
+                for (slot, q) in v[lm.offset..lm.offset + lm.size].iter_mut().zip(qs) {
+                    *slot = if step > 0.0 { lo + (q as f32) * step } else { lo };
+                }
+            }
+        }
+        Flavor::SignBits => {
+            for &l in &layer_ids {
+                let lm = &meta.layers[l];
+                let alpha = cur.f32()?;
+                let signs = unpack_bits(&mut cur, 1, lm.size)?;
+                for (slot, s) in v[lm.offset..lm.offset + lm.size].iter_mut().zip(signs) {
+                    *slot = if s == 1 { -alpha } else { alpha };
+                }
+            }
+        }
+        Flavor::LowRank => {
+            for &l in &layer_ids {
+                for am in &meta.layers[l].arrays {
+                    let tag = cur.take(1)?[0];
+                    match tag {
+                        0 => {
+                            let vals = cur.f32s(am.size)?;
+                            v[am.offset..am.offset + am.size].copy_from_slice(&vals);
+                        }
+                        1 => {
+                            let r = cur.u16()? as usize;
+                            let (m, n) = crate::compress::lowrank_matrix_shape(&am.shape)
+                                .ok_or_else(|| anyhow::anyhow!("factored non-matrix array"))?;
+                            if r == 0 || r > m.min(n) {
+                                bail!("factor rank {r} invalid for {m}x{n}");
+                            }
+                            let q = cur.f32s(m * r)?;
+                            let b = cur.f32s(r * n)?;
+                            let sl = &mut v[am.offset..am.offset + am.size];
+                            for i in 0..m {
+                                for k in 0..n {
+                                    let mut acc = 0.0f32;
+                                    for j in 0..r {
+                                        acc += q[i * r + j] * b[j * n + k];
+                                    }
+                                    sl[i * n + k] = acc;
+                                }
+                            }
+                        }
+                        other => bail!("unknown low-rank array tag {other}"),
+                    }
+                }
+            }
+        }
+        Flavor::Scalar => {
+            return Ok(Decoded::Scalar(cur.f32()?));
+        }
+        Flavor::SeededMask => {
+            let seed = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+            let rate = cur.f32()?;
+            let kept = cur.u32()? as usize;
+            let vals = cur.f32s(kept)?;
+            let listed = layer_membership(meta, &layer_ids);
+            let mut mask_rng = crate::rng::Rng::seed_from_u64(seed);
+            let mut vi = 0usize;
+            for (i, slot) in v.iter_mut().enumerate() {
+                if mask_rng.f32() >= rate && listed[i] {
+                    if vi >= vals.len() {
+                        bail!("seeded-mask frame shorter than its mask");
+                    }
+                    *slot = vals[vi];
+                    vi += 1;
+                }
+            }
+            if vi != vals.len() {
+                bail!("seeded-mask frame carries {} extra values", vals.len() - vi);
+            }
+        }
+        Flavor::Bitmap => {
+            let kept = cur.u32()? as usize;
+            let mask = unpack_bits(&mut cur, 1, meta.dim)?;
+            let vals = cur.f32s(kept)?;
+            let mut vi = 0usize;
+            for (slot, m) in v.iter_mut().zip(mask) {
+                if m == 1 {
+                    if vi >= vals.len() {
+                        bail!("bitmap frame shorter than its mask");
+                    }
+                    *slot = vals[vi];
+                    vi += 1;
+                }
+            }
+            if vi != vals.len() {
+                bail!("bitmap frame carries {} extra values", vals.len() - vi);
+            }
+        }
+        Flavor::Broadcast => bail!("broadcast frame on the uplink"),
+    }
+    Ok(Decoded::Vector(v))
+}
+
+/// Decode a downlink frame: (params, recycle layer-id list).
+pub fn decode_broadcast(frame: &[u8], meta: &ModelMeta) -> Result<(Vec<f32>, Vec<usize>)> {
+    let Parsed { flavor, layer_ids, mut cur } = parse_header(frame, meta)?;
+    if flavor != Flavor::Broadcast {
+        bail!("expected broadcast frame, got {flavor:?}");
+    }
+    let params = cur.f32s(meta.dim)?;
+    Ok((params, layer_ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{toy_meta, toy_update};
+
+    fn all_layers(meta: &ModelMeta) -> Vec<usize> {
+        (0..meta.num_layers()).collect()
+    }
+
+    fn vec_of(d: &Decoded) -> &[f32] {
+        match d {
+            Decoded::Vector(v) => v,
+            Decoded::Scalar(_) => panic!("expected vector"),
+        }
+    }
+
+    #[test]
+    fn dense_full_roundtrip_exact() {
+        let meta = toy_meta();
+        let u = toy_update(1, meta.dim);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &WireHint::Dense).unwrap();
+        assert_eq!(f.len(), dense_frame_len(&meta) as usize);
+        assert_eq!(f.flavor().unwrap(), Flavor::Dense);
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+    }
+
+    #[test]
+    fn dense_subset_zero_fills_missing_layers() {
+        let meta = toy_meta();
+        let u = toy_update(2, meta.dim);
+        // upload only layer 1 (LUAR recycling layer 0)
+        let f = encode_update(&u, &meta, &[1], &WireHint::Dense).unwrap();
+        let lm = &meta.layers[1];
+        assert_eq!(f.len(), HEADER_LEN + 2 + 4 * lm.size);
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        let v = vec_of(&d);
+        assert_eq!(&v[lm.offset..lm.offset + lm.size], &u[lm.offset..lm.offset + lm.size]);
+        assert!(v[..lm.offset].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sparse_roundtrip_exact_and_counts_index_overhead() {
+        let meta = toy_meta();
+        let mut u = vec![0.0f32; meta.dim];
+        u[3] = 1.5;
+        u[29] = -2.25;
+        let f = encode_update(&u, &meta, &all_layers(&meta), &WireHint::Sparse).unwrap();
+        // header + ids + nnz + 2 * (index + value)
+        assert_eq!(f.len(), HEADER_LEN + 2 * 2 + 4 + 2 * 8);
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+    }
+
+    #[test]
+    fn quantized_roundtrip_reproduces_grid_points() {
+        let meta = toy_meta();
+        let mut u = toy_update(3, meta.dim);
+        let mut q = crate::compress::Quantize::new(16);
+        let mut rng = crate::rng::Rng::seed_from_u64(9);
+        use crate::compress::UpdateCompressor;
+        q.compress(0, &mut u, &meta, 0, &mut rng);
+        let hint = q.wire_hint();
+        let f = encode_update(&u, &meta, &all_layers(&meta), &hint).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice(), "quantized grid must round-trip bit-exactly");
+        // 4 bits/elem beats dense
+        assert!(f.len() < dense_frame_len(&meta) as usize);
+    }
+
+    #[test]
+    fn quantized_constant_layer_roundtrips() {
+        let meta = toy_meta();
+        let mut u = vec![0.75f32; meta.dim];
+        let mut q = crate::compress::Quantize::new(8);
+        let mut rng = crate::rng::Rng::seed_from_u64(10);
+        use crate::compress::UpdateCompressor;
+        q.compress(0, &mut u, &meta, 0, &mut rng);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &q.wire_hint()).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+    }
+
+    #[test]
+    fn signbits_roundtrip_exact() {
+        let meta = toy_meta();
+        let mut u = toy_update(4, meta.dim);
+        let mut b = crate::compress::Binarize::new();
+        let mut rng = crate::rng::Rng::seed_from_u64(11);
+        use crate::compress::UpdateCompressor;
+        b.compress(0, &mut u, &meta, 0, &mut rng);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &b.wire_hint()).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+        // ~1 bit/elem: far below dense
+        assert!(f.len() < (meta.dim + HEADER_LEN + 2 * meta.num_layers()));
+    }
+
+    #[test]
+    fn lowrank_roundtrip_within_bound() {
+        let meta = toy_meta();
+        let mut u = toy_update(5, meta.dim);
+        let mut lr = crate::compress::LowRank::new(0.25);
+        let mut rng = crate::rng::Rng::seed_from_u64(12);
+        use crate::compress::UpdateCompressor;
+        lr.compress(0, &mut u, &meta, 0, &mut rng);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &lr.wire_hint()).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        let v = vec_of(&d);
+        let err: f64 = v.iter().zip(&u).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+        let norm: f64 = u.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(err <= 1e-3 * norm.max(1e-9), "factor round-trip error {err} vs norm {norm}");
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let meta = toy_meta();
+        let u = vec![0.0f32; meta.dim];
+        let f = encode_update(&u, &meta, &[], &WireHint::Scalar { coef: 0.375 }).unwrap();
+        assert_eq!(f.len(), HEADER_LEN + 4);
+        match decode_update(f.as_bytes(), &meta).unwrap() {
+            Decoded::Scalar(c) => assert_eq!(c, 0.375),
+            Decoded::Vector(_) => panic!("expected scalar"),
+        }
+        // the layer list is irrelevant to a scalar frame and never paid
+        let f2 =
+            encode_update(&u, &meta, &all_layers(&meta), &WireHint::Scalar { coef: 0.375 })
+                .unwrap();
+        assert_eq!(f2.len(), HEADER_LEN + 4);
+    }
+
+    #[test]
+    fn broadcast_carries_delta_layer_ids() {
+        let meta = toy_meta();
+        let params = toy_update(6, meta.dim);
+        let empty = encode_broadcast(&params, &meta, &[]).unwrap();
+        let with_ids = encode_broadcast(&params, &meta, &[0, 1]).unwrap();
+        // the R_t id list costs 2 bytes per layer on the downlink
+        assert_eq!(with_ids.len(), empty.len() + 2 * 2);
+        let (p, ids) = decode_broadcast(with_ids.as_bytes(), &meta).unwrap();
+        assert_eq!(p, params);
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn seeded_mask_roundtrip_exact() {
+        let meta = toy_meta();
+        let mut u = toy_update(8, meta.dim);
+        let mut dr = crate::compress::DropoutAvg::new(0.5);
+        let mut rng = crate::rng::Rng::seed_from_u64(13);
+        use crate::compress::UpdateCompressor;
+        dr.compress(4, &mut u, &meta, 7, &mut rng);
+        let hint = dr.wire_hint();
+        let f = encode_update(&u, &meta, &all_layers(&meta), &hint).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+        // no indices on the wire: cost ~ seed + rate + kept values
+        let kept = u.iter().filter(|&&v| v != 0.0).count();
+        assert!(f.len() <= HEADER_LEN + 2 * meta.num_layers() + 8 + 4 + 4 + 4 * (kept + 2));
+    }
+
+    #[test]
+    fn bitmap_roundtrip_exact() {
+        let meta = toy_meta();
+        let mut u = toy_update(9, meta.dim);
+        for (i, v) in u.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let f = encode_update(&u, &meta, &all_layers(&meta), &WireHint::Bitmap).unwrap();
+        let d = decode_update(f.as_bytes(), &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+        let kept = u.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(
+            f.len(),
+            HEADER_LEN + 2 * meta.num_layers() + 4 + meta.dim.div_ceil(8) + 4 * kept
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let meta = toy_meta();
+        let u = toy_update(7, meta.dim);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &WireHint::Dense).unwrap();
+        let mut bad_magic = f.as_bytes().to_vec();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_update(&bad_magic, &meta).is_err());
+        let truncated = &f.as_bytes()[..f.len() - 3];
+        assert!(decode_update(truncated, &meta).is_err());
+        let mut bad_dim = f.as_bytes().to_vec();
+        bad_dim[4] ^= 0x01;
+        assert!(decode_update(&bad_dim, &meta).is_err());
+        assert!(decode_broadcast(f.as_bytes(), &meta).is_err(), "uplink frame on downlink");
+    }
+
+    #[test]
+    fn bit_packing_roundtrip() {
+        for bits in [1u32, 3, 4, 7, 8, 13, 32] {
+            let vals: Vec<u32> = (0..97u32)
+                .map(|i| if bits == 32 { i.wrapping_mul(0x9e3779b9) } else { i % (1 << bits) })
+                .collect();
+            let mut buf = Vec::new();
+            pack_bits(vals.iter().copied(), bits, &mut buf);
+            let mut cur = Cur { buf: &buf, pos: 0 };
+            let back = unpack_bits(&mut cur, bits, vals.len()).unwrap();
+            assert_eq!(back, vals, "bits={bits}");
+        }
+    }
+}

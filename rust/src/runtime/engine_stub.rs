@@ -1,0 +1,100 @@
+//! Stub engine for builds without the `pjrt` feature (no `xla`
+//! bindings available). Mirrors `engine.rs`'s public API exactly so
+//! every pure-Rust layer — net/, compress/, luar/, comm, config,
+//! exp plumbing — builds and tests without PJRT; artifact-executing
+//! paths fail loudly at `Engine::load` with a rebuild hint.
+
+use crate::data::{FedDataset, Features};
+use crate::model::ModelMeta;
+use anyhow::{bail, Result};
+
+/// Result of one client's local-training call (Alg. 2 lines 6-10).
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    /// Accumulated local update Delta_t^i = x_tau - x_0 (flat).
+    pub delta: Vec<f32>,
+    /// Mean training loss across the tau local steps.
+    pub loss: f32,
+}
+
+/// Result of one eval-chunk call.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    pub loss_sum: f32,
+    pub correct: i32,
+}
+
+/// Result of the server aggregation call.
+#[derive(Debug, Clone)]
+pub struct AggOutput {
+    pub mean: Vec<f32>,
+    pub update_ssq: Vec<f32>,
+    pub weight_ssq: Vec<f32>,
+}
+
+/// Cumulative execution statistics (always zero in the stub).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub train_calls: u64,
+    pub train_secs: f64,
+    pub eval_calls: u64,
+    pub eval_secs: f64,
+    pub agg_calls: u64,
+    pub agg_secs: f64,
+}
+
+pub struct Engine {
+    pub meta: ModelMeta,
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` feature (add the `xla` \
+     bindings dependency and rebuild with `--features pjrt` to execute AOT artifacts)";
+
+impl Engine {
+    pub fn load(meta: ModelMeta) -> Result<Self> {
+        let _ = &meta;
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_round(
+        &self,
+        _params: &[f32],
+        _anchor_g: Option<&[f32]>,
+        _anchor_prev: Option<&[f32]>,
+        _feats: &Features,
+        _labels: &[i32],
+        _lr: f32,
+        _mu_g: f32,
+        _mu_prev: f32,
+        _wd: f32,
+    ) -> Result<TrainOutput> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn eval_chunk(
+        &self,
+        _params: &[f32],
+        _feats: &Features,
+        _labels: &[i32],
+    ) -> Result<EvalOutput> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn eval_dataset(&self, _params: &[f32], _ds: &FedDataset) -> Result<(f64, f64)> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn aggregate(&self, _updates: &[&[f32]], _params: &[f32]) -> Result<AggOutput> {
+        bail!("{UNAVAILABLE}");
+    }
+}

@@ -6,14 +6,29 @@
 //! executables per model (train / eval / agg). Compilation happens
 //! once at startup; per-call cost is literal construction + execute +
 //! copy-out, measured in `benches/runtime_exec.rs`.
+//!
+//! The `xla` bindings are external and not vendorable, so the real
+//! engine is gated behind the `pjrt` cargo feature; default builds use
+//! `engine_stub.rs`, which has the identical API but errors at
+//! `Engine::load` — every pure-Rust subsystem still builds and tests.
 
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(feature = "pjrt")]
 mod literal;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{AggOutput, Engine, EvalOutput, TrainOutput};
+#[cfg(feature = "pjrt")]
 pub use literal::{features_literal, i32_literal, scalar_f32, vec_f32_literal};
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::{AggOutput, Engine, EvalOutput, TrainOutput};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,297 @@
+//! Network-subsystem integration: the full communication pipeline —
+//! compressor → wire codec → heterogeneous links → event-driven
+//! scheduler → comm ledger → LUAR composition — with no PJRT/artifact
+//! dependency (client deltas are synthetic; everything the net layer
+//! touches is real).
+//!
+//! Pins the acceptance invariants:
+//! * FedAvg and FedLUAR rounds complete in all three round modes;
+//! * the ledger's upload bytes equal the independently summed wire
+//!   frame lengths (byte-exact accounting, no truncating casts);
+//! * sync-mode wall-clock equals the slowest active client's time
+//!   (the mean-upload timing bug stays dead);
+//! * the broadcast side includes the delta layer-id list bytes.
+
+use fedluar::comm::CommAccountant;
+use fedluar::compress::{Quantize, UpdateCompressor};
+use fedluar::config::{RecycleMode, SelectionScheme};
+use fedluar::luar::LuarState;
+use fedluar::model::ModelMeta;
+use fedluar::net::{wire, LinkDist, NetCfg, NetSim, RoundMode};
+use fedluar::rng::Rng;
+use fedluar::tensor;
+use std::path::PathBuf;
+
+const LAYERS: usize = 6;
+const LAYER_SIZE: usize = 512;
+
+/// 6-layer synthetic model (8x64 matrices), no artifacts needed.
+fn synth_meta() -> ModelMeta {
+    let mut rows = Vec::new();
+    for l in 0..LAYERS {
+        let off = l * LAYER_SIZE;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{LAYER_SIZE},
+               "arrays":[{{"name":"w","shape":[8,64],"offset":{off},"size":{LAYER_SIZE}}}]}}"#
+        ));
+    }
+    let dim = LAYERS * LAYER_SIZE;
+    let doc = format!(
+        r#"{{"model":"netsim","dim":{dim},"num_classes":10,
+            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
+            "eval_batch":64,"agg_clients":8,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
+}
+
+struct CommRun {
+    acc: CommAccountant,
+    /// Independently collected frame lengths, all rounds all clients.
+    frame_lens_total: u64,
+    sim_seconds: f64,
+    aggregated_min: usize,
+    rounds: usize,
+}
+
+/// Drive `rounds` communication rounds of the net pipeline for either
+/// FedAvg (luar = false) or FedLUAR delta=2 (luar = true), optionally
+/// composing a FedPAQ quantizer on the uploaded layers.
+fn run_comm_rounds(
+    luar: bool,
+    quantize: bool,
+    mode: RoundMode,
+    dist: LinkDist,
+    rounds: usize,
+) -> CommRun {
+    let meta = synth_meta();
+    let num_clients = 16usize;
+    let active = 8usize;
+    let sim = NetSim::new(
+        NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1 },
+        num_clients,
+        42,
+    );
+    let mut acc = CommAccountant::new(meta.num_layers());
+    let mut luar_state = LuarState::new(meta.num_layers(), meta.dim);
+    let mut compressor = Quantize::new(16);
+    let mut rng = Rng::seed_from_u64(7);
+    let mut frame_lens_total = 0u64;
+    let mut sim_seconds = 0.0f64;
+    let mut aggregated_min = usize::MAX;
+
+    for t in 0..rounds {
+        let actives: Vec<usize> = (0..active).map(|i| (t * active + i) % num_clients).collect();
+        let upload_layers: Vec<usize> = if luar {
+            luar_state.upload_set(meta.num_layers())
+        } else {
+            (0..meta.num_layers()).collect()
+        };
+        let params = vec![0.1f32; meta.dim];
+        let bcast = wire::encode_broadcast(&params, &meta, &luar_state.recycle_set).unwrap();
+
+        let mut deltas: Vec<Vec<f32>> = Vec::new();
+        let mut frame_lens: Vec<u64> = Vec::new();
+        let mut up_total = 0u64;
+        for &client in &actives {
+            let mut delta: Vec<f32> =
+                (0..meta.dim).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+            for &l in &luar_state.recycle_set {
+                let lm = &meta.layers[l];
+                delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+            }
+            let hint = if quantize {
+                compressor.compress(client, &mut delta, &meta, t, &mut rng);
+                for &l in &luar_state.recycle_set {
+                    let lm = &meta.layers[l];
+                    delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+                }
+                compressor.wire_hint()
+            } else {
+                wire::WireHint::Dense
+            };
+            let frame = wire::encode_update(&delta, &meta, &upload_layers, &hint).unwrap();
+            let decoded = match wire::decode_update(frame.as_bytes(), &meta).unwrap() {
+                wire::Decoded::Vector(v) => v,
+                wire::Decoded::Scalar(_) => unreachable!("no scalar flavors here"),
+            };
+            assert_eq!(decoded, delta, "codec round-trip must be exact for this flavor");
+            up_total += frame.len() as u64;
+            frame_lens_total += frame.len() as u64;
+            frame_lens.push(frame.len() as u64);
+            deltas.push(decoded);
+        }
+
+        let outcome = sim.round(&actives, bcast.len() as u64, &frame_lens);
+        sim_seconds += outcome.round_secs;
+        aggregated_min = aggregated_min.min(outcome.aggregated);
+
+        // aggregate the survivors (weighted for buffered staleness)
+        let mut refs: Vec<&[f32]> = Vec::new();
+        let mut ws: Vec<f32> = Vec::new();
+        for (slot, d) in deltas.iter().enumerate() {
+            if outcome.included[slot] {
+                refs.push(d.as_slice());
+                ws.push(outcome.weights[slot]);
+            }
+        }
+        assert!(!refs.is_empty(), "round must never aggregate zero clients");
+        let wsum: f32 = ws.iter().sum();
+        let norm: Vec<f32> = ws.iter().map(|w| w / wsum).collect();
+        let mut mean = vec![0.0f32; meta.dim];
+        tensor::weighted_mean_rows(&refs, &norm, &mut mean);
+
+        if luar {
+            let u_ssq: Vec<f32> = meta
+                .layers
+                .iter()
+                .map(|lm| tensor::ssq(&mean[lm.offset..lm.offset + lm.size]) as f32)
+                .collect();
+            let w_ssq = vec![1.0f32; meta.num_layers()];
+            luar_state.update_scores(&u_ssq, &w_ssq);
+            luar_state.compose_update(&mut mean, &meta, RecycleMode::Recycle);
+            let grad_norms: Vec<f64> =
+                u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
+            luar_state.select_next(SelectionScheme::Luar, 2, &grad_norms, &mut rng);
+        }
+
+        acc.record_wire_round(
+            actives.len() as u64,
+            &upload_layers,
+            up_total,
+            wire::dense_frame_len(&meta),
+            (actives.len() as u64) * bcast.len() as u64,
+        );
+    }
+    CommRun { acc, frame_lens_total, sim_seconds, aggregated_min, rounds }
+}
+
+fn all_modes() -> [RoundMode; 3] {
+    [
+        RoundMode::Sync,
+        RoundMode::Deadline { deadline_s: 2.0 },
+        RoundMode::Buffered { k: 3 },
+    ]
+}
+
+#[test]
+fn fedavg_completes_in_all_round_modes_with_exact_ledger() {
+    for mode in all_modes() {
+        let run = run_comm_rounds(false, false, mode, LinkDist::default(), 10);
+        assert_eq!(run.acc.rounds as usize, run.rounds, "{mode:?}");
+        assert_eq!(
+            run.acc.up_bytes, run.frame_lens_total,
+            "{mode:?}: ledger must equal summed wire-frame bytes"
+        );
+        // dense frames == the measured FedAvg baseline, so Comm == 1
+        assert!(
+            (run.acc.comm_ratio() - 1.0).abs() < 1e-12,
+            "{mode:?}: FedAvg measured ratio {}",
+            run.acc.comm_ratio()
+        );
+        assert!(run.sim_seconds > 0.0);
+    }
+}
+
+#[test]
+fn fedluar_completes_in_all_round_modes_and_reduces_comm() {
+    for mode in all_modes() {
+        let run = run_comm_rounds(true, false, mode, LinkDist::default(), 10);
+        assert_eq!(run.acc.up_bytes, run.frame_lens_total, "{mode:?}");
+        let ratio = run.acc.comm_ratio();
+        assert!(ratio < 0.95, "{mode:?}: LUAR must reduce measured comm, got {ratio}");
+        assert!(ratio > 0.05, "{mode:?}: ratio suspiciously low {ratio}");
+        // Figure 3 bookkeeping intact: some layer skipped some round
+        assert!(run.acc.layer_frequencies().iter().any(|&f| f < 1.0), "{mode:?}");
+    }
+}
+
+#[test]
+fn luar_quantize_composition_has_no_truncation() {
+    // Regression for the per-client `as u64` truncation: with measured
+    // frames the ledger equals the byte-exact sum, every round, and
+    // the composition is cheaper than LUAR alone.
+    let comp = run_comm_rounds(true, true, RoundMode::Sync, LinkDist::default(), 10);
+    assert_eq!(comp.acc.up_bytes, comp.frame_lens_total);
+    let plain = run_comm_rounds(true, false, RoundMode::Sync, LinkDist::default(), 10);
+    assert!(
+        comp.acc.up_bytes < plain.acc.up_bytes,
+        "quantized composition {} !< plain {}",
+        comp.acc.up_bytes,
+        plain.acc.up_bytes
+    );
+}
+
+#[test]
+fn sync_wall_clock_is_slowest_active_client() {
+    // Heterogeneous fleet where the mean-vs-max distinction is stark.
+    let dist = LinkDist::Bimodal {
+        fast_frac: 0.5,
+        fast_up_mbps: 100.0,
+        slow_up_mbps: 1.0,
+        down_mbps: 100.0,
+        rtt_s: 0.0,
+    };
+    let meta = synth_meta();
+    let sim = NetSim::new(
+        NetCfg { link_dist: dist, round_mode: RoundMode::Sync, compute_s: 0.0 },
+        16,
+        42,
+    );
+    let actives: Vec<usize> = (0..8).collect();
+    let frame = wire::dense_frame_len(&meta);
+    let frames = vec![frame; 8];
+    let bcast = frame + 64;
+    let outcome = sim.round(&actives, bcast, &frames);
+    let per_client: Vec<f64> =
+        actives.iter().map(|&c| sim.client_secs(c, bcast, frame)).collect();
+    let slowest = per_client.iter().cloned().fold(0.0f64, f64::max);
+    let fastest = per_client.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = per_client.iter().sum::<f64>() / per_client.len() as f64;
+    assert_eq!(outcome.round_secs, slowest, "sync round must wait for the slowest client");
+    if fastest < slowest {
+        // both cohorts present: the old mean-upload shortcut would
+        // have under-reported the round
+        assert!(
+            outcome.round_secs > mean,
+            "regression: round time {} fell to the mean {mean}",
+            outcome.round_secs
+        );
+    }
+}
+
+#[test]
+fn deadline_mode_drops_stragglers_but_never_everyone() {
+    let dist = LinkDist::Bimodal {
+        fast_frac: 0.5,
+        fast_up_mbps: 100.0,
+        slow_up_mbps: 0.05,
+        down_mbps: 100.0,
+        rtt_s: 0.0,
+    };
+    let run = run_comm_rounds(false, false, RoundMode::Deadline { deadline_s: 0.5 }, dist, 10);
+    assert!(run.aggregated_min >= 1);
+    assert!(
+        run.aggregated_min < 8,
+        "slow cohort should miss a 0.5s deadline at 0.05 Mbps"
+    );
+    // dropped clients still paid their bytes
+    assert_eq!(run.acc.up_bytes, run.frame_lens_total);
+}
+
+#[test]
+fn broadcast_ledger_includes_delta_layer_id_bytes() {
+    let meta = synth_meta();
+    let params = vec![0.0f32; meta.dim];
+    let plain = wire::encode_broadcast(&params, &meta, &[]).unwrap();
+    let with_rt = wire::encode_broadcast(&params, &meta, &[1, 4]).unwrap();
+    assert_eq!(with_rt.len(), plain.len() + 2 * 2);
+
+    let mut acc = CommAccountant::new(meta.num_layers());
+    acc.record_wire_round(4, &[0, 2, 3, 5], 1000, 2000, 4 * with_rt.len() as u64);
+    assert_eq!(acc.down_bytes, 4 * with_rt.len() as u64);
+    assert!(acc.down_bytes > 4 * (meta.dim as u64 * 4), "header + id list must be counted");
+}

@@ -1,0 +1,153 @@
+//! Minimal in-tree stand-in for the `anyhow` crate (offline build: no
+//! registry access). Implements exactly the surface this repo uses —
+//! `Error`, `Result<T>`, `anyhow!`, `bail!`, and the `Context` trait
+//! on both `Result` and `Option` — with anyhow-compatible semantics:
+//!
+//! * `{}` displays the outermost message, `{:#}` the full context
+//!   chain joined with ": " (what `main.rs` prints on fatal errors);
+//! * `Debug` renders the chain as anyhow's `Caused by:` block so
+//!   `unwrap()`/`expect()` panics stay readable in test output;
+//! * any `std::error::Error` converts via `?` (io, parse, utf8, fmt).
+//!
+//! Not implemented (unused here): downcasting, backtraces, `ensure!`.
+
+use std::fmt;
+
+/// Context chain, outermost first (index 0 is the newest `.context`).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to a failure; mirrors `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {args}")` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt {args}")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: Result<i32> = "abc".parse::<i32>().context("parsing");
+        let e = r.unwrap_err();
+        assert!(format!("{e:#}").starts_with("parsing: "));
+        // plain `?` conversion
+        fn inner() -> Result<i32> {
+            Ok("7".parse::<i32>()?)
+        }
+        assert_eq!(inner().unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u8).with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn debug_shows_chain() {
+        let e = fails().context("mid").context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root 42"));
+    }
+}
