@@ -7,7 +7,10 @@
 //! `--compute-s`) configure the `net:` simulation block — see the
 //! USAGE/NET SIMULATION section of `main.rs`'s HELP string and
 //! `net::NetCfg` for the spec grammar (`uniform | lognormal | bimodal`
-//! fleets; `sync | deadline:s=F | buffered:k=N` round modes).
+//! fleets; `sync | deadline:s=F | buffered:k=N |
+//! async:c=N,s=const|poly[,a=F]` round modes — `async` runs the
+//! barrier-free server with per-client model versions and
+//! staleness-discounted aggregation).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;

@@ -298,7 +298,10 @@ pub struct RunConfig {
     pub client_failure_rate: f64,
     /// Network simulation block: link fleet distribution, round-closing
     /// policy, local-compute time (`link_dist`, `round_mode`,
-    /// `deadline_s`, `buffer_k`, `compute_s` config keys).
+    /// `deadline_s`, `buffer_k`, `compute_s` config keys). Round modes:
+    /// `sync`, `deadline:s=F`, `buffered:k=N`, and the barrier-free
+    /// `async:c=N,s=const|poly[,a=F]` (`c=all` pins concurrency to
+    /// `active_clients`).
     pub net: NetCfg,
 }
 
@@ -564,6 +567,26 @@ mod tests {
         .unwrap();
         assert!(matches!(cfg.net.link_dist, LinkDist::Bimodal { .. }));
         assert!(RunConfig::load_kv(&format!("{base}round_mode = warp\n")).is_err());
+    }
+
+    #[test]
+    fn async_round_mode_in_config() {
+        use crate::net::Staleness;
+        let base = RunConfig::benchmark("mlp").unwrap().save_kv();
+        let cfg =
+            RunConfig::load_kv(&format!("{base}round_mode = async:c=4,s=poly,a=0.5\n")).unwrap();
+        assert_eq!(
+            cfg.net.round_mode,
+            RoundMode::Async { concurrency: 4, staleness: Staleness::Poly { a: 0.5 } }
+        );
+        // full kv round-trip carries the async spec (value holds '='
+        // and ',' — only the first '=' splits the key)
+        let mut cfg = RunConfig::benchmark("cnn").unwrap();
+        cfg.net.round_mode =
+            RoundMode::Async { concurrency: 0, staleness: Staleness::Const };
+        let back = RunConfig::load_kv(&cfg.save_kv()).unwrap();
+        assert_eq!(back.net.round_mode, cfg.net.round_mode);
+        assert!(RunConfig::load_kv(&format!("{base}round_mode = async:c=0\n")).is_err());
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Barrier-free FL runtime: the dispatch/absorb state machine behind
+//! `round_mode = async:c=N,s=...`.
+//!
+//! The round-based scheduler (`net::sched::simulate_round`) fills and
+//! drains a fresh event heap every round, so the server implicitly
+//! barriers on each cohort. This runtime removes the barrier:
+//!
+//! * the completion-event queue (`net::AsyncQueue`) **persists across
+//!   dispatches** — uploads from different generations coexist in it;
+//! * every dispatch records the server **model version** the client
+//!   trained against (`client_version` tracks the last version each
+//!   client received), so every absorbed upload carries a measured
+//!   `version_gap = server version now − version at dispatch`;
+//! * a `Staleness` discount maps that gap to the upload's aggregation
+//!   weight;
+//! * a **concurrency cap**: the server keeps exactly `concurrency`
+//!   uploads in flight, dispatching the next sampled client the moment
+//!   a slot frees (over that client's own link — the caller computes
+//!   the link time and hands it to `dispatch`);
+//! * the server **absorbs one completion instant atomically**: all
+//!   arrivals sharing the earliest clock value enter the aggregation
+//!   buffer, a version closes if the buffer reached `agg_goal`, and
+//!   only then are the freed slots refilled. This ordering is what
+//!   makes `async:c=all,s=const` over a homogeneous fleet reproduce
+//!   synchronous FedAvg exactly (pinned in
+//!   `tests/integration_async.rs`).
+//!
+//! The runtime is deliberately engine-free: it owns versions, clocks,
+//! weights, and byte accounting, while the `Server` supplies trained
+//! deltas and link times. That split is what lets the equivalence and
+//! determinism suites drive the *production* state machine without the
+//! PJRT artifacts.
+//!
+//! `AsyncState` is the checkpoint view: every field needed to rebuild
+//! the runtime exactly — including in-flight payloads and the event
+//! queue — so a resumed run replays the remaining schedule bit-for-bit
+//! (`fl/checkpoint.rs` format v2).
+
+use crate::net::{AsyncQueue, Staleness};
+use std::collections::BTreeMap;
+
+/// One dispatched upload: everything the server needs when the upload
+/// is eventually absorbed.
+#[derive(Debug, Clone)]
+pub struct UploadPayload {
+    pub client: usize,
+    /// Server model version the client trained against.
+    pub version: u64,
+    /// Sample-stream generation (the data-round index used for local
+    /// batches and the lr schedule).
+    pub gen: u64,
+    /// Server-side decoded update (full-dim; zeros in recycled layers).
+    pub delta: Vec<f32>,
+    pub loss: f32,
+    /// Measured uplink wire bytes (`frame.len()`).
+    pub frame_len: u64,
+    /// Measured downlink broadcast bytes paid at dispatch.
+    pub bcast_len: u64,
+}
+
+/// An upload after it landed on the server.
+#[derive(Debug, Clone)]
+pub struct AbsorbedUpload {
+    pub payload: UploadPayload,
+    /// Absolute simulated arrival time.
+    pub t: f64,
+    /// Server versions that elapsed while the upload was in flight.
+    pub version_gap: u64,
+    /// Staleness-discounted aggregation weight.
+    pub weight: f32,
+}
+
+/// Everything one closed version hands to the aggregation step.
+#[derive(Debug, Clone)]
+pub struct AggBatch {
+    /// Absorbed uploads in arrival order.
+    pub uploads: Vec<AbsorbedUpload>,
+    /// Wall-clock since the previous aggregation.
+    pub round_secs: f64,
+    /// Downlink bytes paid by dispatches since the previous aggregation.
+    pub down_bytes: u64,
+    /// Mean version gap over the aggregated uploads.
+    pub mean_gap: f64,
+    /// Straggler tail: last absorb minus the median absorb time.
+    pub tail_s: f64,
+}
+
+/// Checkpoint view of the runtime (format v2 payload): rebuildable via
+/// `AsyncRuntime::from_state` into an exact continuation.
+#[derive(Debug, Clone, Default)]
+pub struct AsyncState {
+    pub version: u64,
+    pub now: f64,
+    pub last_agg_t: f64,
+    pub seq: u64,
+    pub down_since_agg: u64,
+    pub sample_gen: u64,
+    pub sample_idx: u64,
+    pub client_version: Vec<u64>,
+    /// Queued completion events, sorted by (t, seq).
+    pub events: Vec<(f64, u64)>,
+    /// In-flight payloads keyed by dispatch seq, sorted by seq.
+    pub pending: Vec<(u64, UploadPayload)>,
+    /// Absorbed-but-not-aggregated uploads, in arrival order.
+    pub buffer: Vec<AbsorbedUpload>,
+}
+
+/// The async server's scheduling state: persistent event queue,
+/// per-client model versions, the staleness-weighted aggregation
+/// buffer, and the sample-stream cursor.
+#[derive(Debug, Clone)]
+pub struct AsyncRuntime {
+    /// In-flight cap (resolved; never 0).
+    pub concurrency: usize,
+    /// Absorbed uploads per aggregation (one server "round").
+    pub agg_goal: usize,
+    pub staleness: Staleness,
+    queue: AsyncQueue,
+    pending: BTreeMap<u64, UploadPayload>,
+    /// Absorbed uploads waiting for the next aggregation.
+    pub buffer: Vec<AbsorbedUpload>,
+    /// Server model version (one aggregation = one version).
+    pub version: u64,
+    /// Simulated clock (absolute).
+    pub now: f64,
+    last_agg_t: f64,
+    /// Last model version each client received.
+    pub client_version: Vec<u64>,
+    seq: u64,
+    down_since_agg: u64,
+    /// Sample-stream cursor: cohort generation and position within it
+    /// (the caller owns the actual sampling; these just persist the
+    /// position across checkpoints).
+    pub sample_gen: u64,
+    pub sample_idx: u64,
+}
+
+impl AsyncRuntime {
+    pub fn new(
+        num_clients: usize,
+        concurrency: usize,
+        agg_goal: usize,
+        staleness: Staleness,
+    ) -> Self {
+        AsyncRuntime {
+            concurrency: concurrency.max(1),
+            agg_goal: agg_goal.max(1),
+            staleness,
+            queue: AsyncQueue::new(),
+            pending: BTreeMap::new(),
+            buffer: Vec::new(),
+            version: 0,
+            now: 0.0,
+            last_agg_t: 0.0,
+            client_version: vec![0; num_clients],
+            seq: 0,
+            down_since_agg: 0,
+            sample_gen: 0,
+            sample_idx: 0,
+        }
+    }
+
+    /// Uploads currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total uploads dispatched so far (also the next dispatch seq —
+    /// the FedMut broadcast-slot parity source).
+    pub fn dispatched(&self) -> u64 {
+        self.seq
+    }
+
+    /// Whether a slot is free under the concurrency cap.
+    pub fn wants_dispatch(&self) -> bool {
+        self.pending.len() < self.concurrency
+    }
+
+    /// Register a trained upload completing `duration_s` from now over
+    /// the client's own link. Records the model version the client
+    /// received and charges its downlink bytes.
+    pub fn dispatch(&mut self, payload: UploadPayload, duration_s: f64) {
+        self.client_version[payload.client] = payload.version;
+        self.down_since_agg += payload.bcast_len;
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(self.now + duration_s, seq);
+        self.pending.insert(seq, payload);
+    }
+
+    /// Absorb every arrival at the next completion instant into the
+    /// aggregation buffer, advancing the clock. Returns the index in
+    /// `buffer` where the new absorbs start (callers read
+    /// `buffer[start..]` for per-absorb metrics); `buffer.len()` if
+    /// nothing was in flight.
+    pub fn absorb_instant(&mut self) -> usize {
+        let start = self.buffer.len();
+        for (t, seq) in self.queue.pop_instant() {
+            self.now = t;
+            let payload = self
+                .pending
+                .remove(&seq)
+                .expect("event queue and pending map out of sync");
+            let version_gap = self.version - payload.version;
+            let weight = self.staleness.weight(version_gap);
+            self.buffer.push(AbsorbedUpload { payload, t, version_gap, weight });
+        }
+        start
+    }
+
+    /// Whether the buffer holds enough absorbs to close a version.
+    pub fn ready(&self) -> bool {
+        self.buffer.len() >= self.agg_goal
+    }
+
+    /// Close a version: drain the buffer, advance the model version,
+    /// and report the round's timing/byte/staleness aggregates.
+    pub fn take_aggregation(&mut self) -> AggBatch {
+        let uploads = std::mem::take(&mut self.buffer);
+        let round_secs = self.now - self.last_agg_t;
+        self.last_agg_t = self.now;
+        self.version += 1;
+        let down_bytes = std::mem::take(&mut self.down_since_agg);
+        let n = uploads.len();
+        let mean_gap = if n > 0 {
+            uploads.iter().map(|u| u.version_gap as f64).sum::<f64>() / n as f64
+        } else {
+            0.0
+        };
+        let tail_s = if n > 0 {
+            let mut ts: Vec<f64> = uploads.iter().map(|u| u.t).collect();
+            ts.sort_by(f64::total_cmp);
+            (ts[n - 1] - ts[n / 2]).max(0.0)
+        } else {
+            0.0
+        };
+        AggBatch { uploads, round_secs, down_bytes, mean_gap, tail_s }
+    }
+
+    /// Checkpoint snapshot (clones in-flight deltas; the queue is
+    /// serialized sorted so restores are order-independent).
+    pub fn state(&self) -> AsyncState {
+        AsyncState {
+            version: self.version,
+            now: self.now,
+            last_agg_t: self.last_agg_t,
+            seq: self.seq,
+            down_since_agg: self.down_since_agg,
+            sample_gen: self.sample_gen,
+            sample_idx: self.sample_idx,
+            client_version: self.client_version.clone(),
+            events: self.queue.events_sorted(),
+            pending: self.pending.iter().map(|(&s, p)| (s, p.clone())).collect(),
+            buffer: self.buffer.clone(),
+        }
+    }
+
+    /// Rebuild a runtime from a checkpoint snapshot. `concurrency`,
+    /// `agg_goal`, and `staleness` come from the run config (they are
+    /// not state).
+    pub fn from_state(
+        concurrency: usize,
+        agg_goal: usize,
+        staleness: Staleness,
+        st: AsyncState,
+    ) -> Self {
+        AsyncRuntime {
+            concurrency: concurrency.max(1),
+            agg_goal: agg_goal.max(1),
+            staleness,
+            queue: AsyncQueue::from_events(&st.events),
+            pending: st.pending.into_iter().collect(),
+            buffer: st.buffer,
+            version: st.version,
+            now: st.now,
+            last_agg_t: st.last_agg_t,
+            client_version: st.client_version,
+            seq: st.seq,
+            down_since_agg: st.down_since_agg,
+            sample_gen: st.sample_gen,
+            sample_idx: st.sample_idx,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(client: usize, version: u64, frame: u64) -> UploadPayload {
+        UploadPayload {
+            client,
+            version,
+            gen: version,
+            delta: vec![client as f32; 4],
+            loss: 0.5,
+            frame_len: frame,
+            bcast_len: 10,
+        }
+    }
+
+    #[test]
+    fn dispatch_absorb_aggregate_cycle() {
+        let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Const);
+        assert!(rt.wants_dispatch());
+        rt.dispatch(payload(0, 0, 100), 1.0);
+        rt.dispatch(payload(1, 0, 100), 0.5);
+        assert!(!rt.wants_dispatch(), "concurrency cap reached");
+        assert_eq!(rt.in_flight(), 2);
+        assert_eq!(rt.dispatched(), 2);
+
+        // earliest instant: client 1 at t=0.5
+        let start = rt.absorb_instant();
+        assert_eq!(start, 0);
+        assert_eq!(rt.buffer.len(), 1);
+        assert_eq!(rt.buffer[0].payload.client, 1);
+        assert_eq!(rt.now, 0.5);
+        assert!(!rt.ready());
+
+        let start = rt.absorb_instant();
+        assert_eq!(rt.buffer[start].payload.client, 0);
+        assert_eq!(rt.now, 1.0);
+        assert!(rt.ready());
+
+        let batch = rt.take_aggregation();
+        assert_eq!(batch.uploads.len(), 2);
+        assert_eq!(batch.round_secs, 1.0);
+        assert_eq!(batch.down_bytes, 20);
+        assert_eq!(batch.mean_gap, 0.0);
+        assert_eq!(rt.version, 1);
+        assert!(rt.buffer.is_empty());
+        assert_eq!(rt.in_flight(), 0);
+    }
+
+    #[test]
+    fn version_gap_is_measured_per_upload() {
+        let mut rt = AsyncRuntime::new(4, 2, 1, Staleness::Poly { a: 0.5 });
+        // client 0 is slow (t=10), client 1 fast (t=1)
+        rt.dispatch(payload(0, 0, 100), 10.0);
+        rt.dispatch(payload(1, 0, 100), 1.0);
+        rt.absorb_instant(); // client 1 at t=1
+        assert_eq!(rt.buffer[0].version_gap, 0);
+        let b = rt.take_aggregation(); // version -> 1
+        assert_eq!(b.uploads[0].weight, 1.0);
+        // refill: client 2 trained against version 1, arrives before 0
+        rt.dispatch(payload(2, rt.version, 100), 2.0);
+        rt.absorb_instant(); // client 2 at t=3
+        assert_eq!(rt.buffer[0].version_gap, 0);
+        rt.take_aggregation(); // version -> 2
+        rt.absorb_instant(); // slow client 0 at t=10: two versions elapsed
+        let stale = &rt.buffer[0];
+        assert_eq!(stale.payload.client, 0);
+        assert_eq!(stale.version_gap, 2);
+        let expect = (1.0f64 / 3.0f64.sqrt()) as f32;
+        assert!((stale.weight - expect).abs() < 1e-6, "poly weight {}", stale.weight);
+        assert_eq!(rt.client_version[0], 0);
+        assert_eq!(rt.client_version[2], 1);
+    }
+
+    #[test]
+    fn equal_instants_absorb_atomically_in_dispatch_order() {
+        let mut rt = AsyncRuntime::new(8, 4, 4, Staleness::Const);
+        for c in 0..4 {
+            rt.dispatch(payload(c, 0, 100), 2.5);
+        }
+        let start = rt.absorb_instant();
+        assert_eq!(start, 0);
+        assert_eq!(rt.buffer.len(), 4, "one instant absorbs the whole cohort");
+        let order: Vec<usize> = rt.buffer.iter().map(|u| u.payload.client).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert!(rt.ready());
+        let batch = rt.take_aggregation();
+        assert_eq!(batch.round_secs, 2.5);
+        assert_eq!(batch.tail_s, 0.0);
+    }
+
+    #[test]
+    fn round_secs_measures_inter_aggregation_time() {
+        let mut rt = AsyncRuntime::new(2, 1, 1, Staleness::Const);
+        rt.dispatch(payload(0, 0, 1), 1.5);
+        rt.absorb_instant();
+        assert_eq!(rt.take_aggregation().round_secs, 1.5);
+        rt.dispatch(payload(1, 1, 1), 2.0);
+        rt.absorb_instant();
+        let b = rt.take_aggregation();
+        assert_eq!(b.round_secs, 2.0, "second round measures from the last aggregation");
+        assert_eq!(rt.now, 3.5);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_exactly() {
+        let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Poly { a: 0.5 });
+        rt.dispatch(payload(0, 0, 100), 4.0);
+        rt.dispatch(payload(1, 0, 50), 1.0);
+        rt.absorb_instant();
+        rt.sample_gen = 3;
+        rt.sample_idx = 1;
+
+        let st = rt.state();
+        let mut back = AsyncRuntime::from_state(2, 2, Staleness::Poly { a: 0.5 }, st);
+        assert_eq!(back.version, rt.version);
+        assert_eq!(back.now, rt.now);
+        assert_eq!(back.in_flight(), 1);
+        assert_eq!(back.sample_gen, 3);
+        assert_eq!(back.sample_idx, 1);
+
+        // both copies must replay the remaining schedule identically
+        back.absorb_instant();
+        rt.absorb_instant();
+        assert_eq!(back.now, rt.now);
+        assert_eq!(back.buffer.len(), rt.buffer.len());
+        let a = back.take_aggregation();
+        let b = rt.take_aggregation();
+        assert_eq!(a.round_secs, b.round_secs);
+        assert_eq!(a.uploads.len(), b.uploads.len());
+        for (x, y) in a.uploads.iter().zip(&b.uploads) {
+            assert_eq!(x.payload.client, y.payload.client);
+            assert_eq!(x.payload.delta, y.payload.delta);
+            assert_eq!(x.t, y.t);
+            assert_eq!(x.version_gap, y.version_gap);
+            assert_eq!(x.weight, y.weight);
+        }
+    }
+
+    #[test]
+    fn empty_aggregation_is_safe() {
+        let mut rt = AsyncRuntime::new(2, 1, 1, Staleness::Const);
+        assert_eq!(rt.absorb_instant(), 0, "no in-flight uploads: nothing absorbed");
+        let b = rt.take_aggregation();
+        assert!(b.uploads.is_empty());
+        assert_eq!(b.mean_gap, 0.0);
+        assert_eq!(b.tail_s, 0.0);
+    }
+}

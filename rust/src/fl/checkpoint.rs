@@ -7,19 +7,28 @@
 //! bit-identical to an uninterrupted one (asserted in
 //! `integration_fl::checkpoint_resume_is_bit_identical`).
 //!
+//! Format v2 appends the simulated clock (`sim_seconds`), the loss
+//! EMA, the failure/straggler counters, and — when the run is async —
+//! the full `AsyncRuntime` state: per-client model versions, the
+//! persistent event queue, every in-flight upload (including its
+//! trained delta), the absorbed-but-unaggregated buffer, and the
+//! sample-stream cursor. A resumed async run therefore replays the
+//! remaining schedule exactly, in-flight stragglers included. v1
+//! checkpoints still load (the appended fields keep their defaults).
+//!
 //! Not captured (documented limits): per-client compressor state
 //! (error-feedback residuals, LBGM anchors) and MOON's previous local
 //! models — resuming a run that uses those restarts their state, which
 //! changes trajectories for FedBAT/LBGM/MOON runs but not for
 //! FedAvg/FedLUAR.
 
-use super::Server;
+use super::{AbsorbedUpload, AsyncRuntime, AsyncState, Server, UploadPayload};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FLCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 struct Writer {
     buf: Vec<u8>,
@@ -39,6 +48,10 @@ impl Writer {
     }
 
     fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -112,6 +125,10 @@ impl<'a> Reader<'a> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         Ok(String::from_utf8(self.take(n)?.to_vec())?)
@@ -182,6 +199,19 @@ impl Server {
         // coordinator rng
         let st = self.rng_state();
         w.u64s(&st);
+        // --- v2: simulated clock + counters ---------------------------
+        w.f64(self.sim_seconds);
+        w.f64(self.train_loss_ema);
+        w.u64(self.failed_clients);
+        w.u64(self.dropped_stragglers);
+        // --- v2: async runtime (in-flight queue included) -------------
+        match &self.async_rt {
+            None => w.buf.push(0),
+            Some(rt) => {
+                w.buf.push(1);
+                write_async_state(&mut w, &rt.state());
+            }
+        }
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -203,8 +233,8 @@ impl Server {
             bail!("not a fedluar checkpoint");
         }
         let version = r.u32()?;
-        if version != VERSION {
-            bail!("checkpoint version {version} != {VERSION}");
+        if version == 0 || version > VERSION {
+            bail!("checkpoint version {version} unsupported (this build reads 1..={VERSION})");
         }
         let model = r.str()?;
         if model != self.cfg.model {
@@ -239,6 +269,120 @@ impl Server {
             bail!("bad rng state");
         }
         self.set_rng_state([st[0], st[1], st[2], st[3]]);
+        if version >= 2 {
+            self.sim_seconds = r.f64()?;
+            self.train_loss_ema = r.f64()?;
+            self.failed_clients = r.u64()?;
+            self.dropped_stragglers = r.u64()?;
+            let has_async = r.take(1)?[0];
+            if has_async == 1 {
+                let state = read_async_state(&mut r)?;
+                let (c, goal, staleness) = self.async_mode_params().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "checkpoint holds async runtime state but the server's \
+                         round_mode is {}",
+                        self.cfg.net.round_mode.spec_string()
+                    )
+                })?;
+                if state.client_version.len() != self.cfg.num_clients {
+                    bail!(
+                        "checkpoint tracks {} client versions, server has {} clients",
+                        state.client_version.len(),
+                        self.cfg.num_clients
+                    );
+                }
+                self.async_rt = Some(AsyncRuntime::from_state(c, goal, staleness, state));
+            } else {
+                self.async_rt = None;
+            }
+        }
         Ok(())
     }
+}
+
+fn write_payload(w: &mut Writer, p: &UploadPayload) {
+    w.u64(p.client as u64);
+    w.u64(p.version);
+    w.u64(p.gen);
+    w.f32(p.loss);
+    w.u64(p.frame_len);
+    w.u64(p.bcast_len);
+    w.f32s(&p.delta);
+}
+
+fn read_payload(r: &mut Reader) -> Result<UploadPayload> {
+    Ok(UploadPayload {
+        client: r.u64()? as usize,
+        version: r.u64()?,
+        gen: r.u64()?,
+        loss: r.f32()?,
+        frame_len: r.u64()?,
+        bcast_len: r.u64()?,
+        delta: r.f32s()?,
+    })
+}
+
+fn write_async_state(w: &mut Writer, st: &AsyncState) {
+    w.u64(st.version);
+    w.f64(st.now);
+    w.f64(st.last_agg_t);
+    w.u64(st.seq);
+    w.u64(st.down_since_agg);
+    w.u64(st.sample_gen);
+    w.u64(st.sample_idx);
+    w.u64s(&st.client_version);
+    w.u64(st.events.len() as u64);
+    for &(t, seq) in &st.events {
+        w.f64(t);
+        w.u64(seq);
+    }
+    w.u64(st.pending.len() as u64);
+    for (seq, p) in &st.pending {
+        w.u64(*seq);
+        write_payload(w, p);
+    }
+    w.u64(st.buffer.len() as u64);
+    for a in &st.buffer {
+        write_payload(w, &a.payload);
+        w.f64(a.t);
+        w.u64(a.version_gap);
+        w.f32(a.weight);
+    }
+}
+
+fn read_async_state(r: &mut Reader) -> Result<AsyncState> {
+    let mut st = AsyncState {
+        version: r.u64()?,
+        now: r.f64()?,
+        last_agg_t: r.f64()?,
+        seq: r.u64()?,
+        down_since_agg: r.u64()?,
+        sample_gen: r.u64()?,
+        sample_idx: r.u64()?,
+        client_version: r.u64s()?,
+        ..Default::default()
+    };
+    let n_events = r.u64()? as usize;
+    st.events.reserve(n_events);
+    for _ in 0..n_events {
+        let t = r.f64()?;
+        let seq = r.u64()?;
+        st.events.push((t, seq));
+    }
+    let n_pending = r.u64()? as usize;
+    st.pending.reserve(n_pending);
+    for _ in 0..n_pending {
+        let seq = r.u64()?;
+        st.pending.push((seq, read_payload(r)?));
+    }
+    let n_buf = r.u64()? as usize;
+    st.buffer.reserve(n_buf);
+    for _ in 0..n_buf {
+        let payload = read_payload(r)?;
+        let t = r.f64()?;
+        let version_gap = r.u64()?;
+        let weight = r.f32()?;
+        st.buffer.push(AbsorbedUpload { payload, t, version_gap, weight });
+    }
+    Ok(st)
 }

@@ -1,38 +1,55 @@
 //! The FL coordinator — Algorithm 2 (FedLUAR) with every baseline
-//! method and server optimizer plugged into the same round loop.
+//! method and server optimizer plugged into the same control flow,
+//! which is now split into two halves:
 //!
-//! Round t:
-//! 1. sample `a` active clients;
-//! 2. broadcast x_t (or the optimizer's per-client variant) + R_t;
-//! 3. each client runs tau local SGD steps through the AOT train
-//!    graph and returns Delta_t^i; layers in R_t are not uploaded
-//!    (LUAR) or the update is lossily compressed (baselines);
-//! 4. every upload is serialized through `net::wire` (byte-exact
-//!    frames), pushed over the client's own link (`net::links`), and
-//!    lands on the server's event queue (`net::sched`); the round mode
-//!    decides who makes the aggregate (sync / deadline / buffered);
-//! 5. the server decodes the frames and aggregates the survivors via
-//!    the Pallas-backed agg graph (exactly FedAvg's mean) which also
-//!    returns the Eq. 1 norms for free — or the weighted fallback when
-//!    staleness discounts or drop-outs apply;
-//! 6. LUAR composes \hat{Delta}_t (Alg. 1), measures kappa, resamples
-//!    R_{t+1};
-//! 7. the server optimizer applies \hat{Delta}_t;
-//! 8. the comm ledger records measured frame bytes; the scheduler's
-//!    round time (slowest-survivor semantics) advances sim wall-clock.
+//! **Dispatch** (`client_upload`): sample a client, hand it the
+//! broadcast (or the optimizer's per-client variant), run tau local
+//! SGD steps through the AOT train graph, zero the R_t layers (LUAR)
+//! or lossily compress the update (baselines), serialize the upload
+//! through `net::wire` (byte-exact frames), and decode it server-side
+//! — the ledger counts `frame.len()`, the aggregate consumes the
+//! decoded bytes.
 //!
-//! `checkpoint.rs` adds save/resume of the full server state.
+//! **Absorb** (`finish_aggregation`): given the uploads that made an
+//! aggregate — with their inclusion mask and (staleness-discounted)
+//! weights — run the Pallas-backed agg graph (exactly FedAvg's mean,
+//! which also returns the Eq. 1 norms for free) or the weighted
+//! pure-Rust fallback, compose \hat{Delta}_t (Alg. 1), measure kappa,
+//! resample R_{t+1}, apply the server optimizer, and record bytes /
+//! wall-clock / staleness metrics.
+//!
+//! Who drives the halves depends on `net.round_mode`:
+//!
+//! * `sync` / `deadline` / `buffered` — `run_sync_round`: one cohort
+//!   is dispatched, the per-round scheduler (`net::sched`) decides who
+//!   makes the aggregate, and one absorb closes the round. Byte-
+//!   identical to the pre-split round loop (golden-pinned in
+//!   `tests/integration_async.rs`).
+//! * `async:c=N,s=...` — `run_async_round`: no barrier at all. An
+//!   `AsyncRuntime` (see `async_rt.rs`) keeps N clients in flight over
+//!   a persistent event queue; every absorbed upload carries a
+//!   measured model-version gap that the staleness discount turns
+//!   into its aggregation weight; a version closes every
+//!   `active_clients` absorbs, at which point recycled layers age by
+//!   the mean version gap (not by round count) and the freed slots
+//!   refill immediately with freshly sampled clients.
+//!
+//! `checkpoint.rs` adds save/resume of the full server state,
+//! including the async runtime's in-flight queue (format v2).
 
+mod async_rt;
 mod checkpoint;
+
+pub use async_rt::{AbsorbedUpload, AggBatch, AsyncRuntime, AsyncState, UploadPayload};
 
 use crate::comm::CommAccountant;
 use crate::compress::{self, UpdateCompressor};
 use crate::config::{Method, RunConfig};
 use crate::data::FedDataset;
 use crate::luar::{DeltaController, LuarState};
-use crate::metrics::{History, RoundRecord};
+use crate::metrics::{AbsorbRecord, History, RoundRecord};
 use crate::model::{artifacts_dir, ModelMeta};
-use crate::net::{wire, NetSim};
+use crate::net::{wire, NetSim, RoundMode, Staleness};
 use crate::optim::ServerOpt;
 use crate::rng::Rng;
 use crate::runtime::Engine;
@@ -70,6 +87,8 @@ pub struct Server {
     /// Uploads that transmitted but missed the round close (deadline
     /// mode drops), total.
     pub dropped_stragglers: u64,
+    /// Barrier-free scheduling state; `Some` once an async round ran.
+    pub async_rt: Option<AsyncRuntime>,
 }
 
 impl Server {
@@ -128,6 +147,7 @@ impl Server {
             failed_clients: 0,
             last_frame_lens: Vec::new(),
             dropped_stragglers: 0,
+            async_rt: None,
             cfg,
         })
     }
@@ -144,28 +164,132 @@ impl Server {
         Ok(&self.history)
     }
 
-    /// One communication round (Alg. 2 lines 4–12).
+    /// One server aggregation: a communication round (Alg. 2 lines
+    /// 4–12) in the barrier modes, one closed model version in async
+    /// mode.
     pub fn run_round(&mut self) -> Result<()> {
-        let t = self.round;
-        let cfg = self.cfg.clone();
-        let meta = self.engine.meta.clone();
-        let lr = cfg.lr_at(t);
-        let a = cfg.active_clients;
-        let mut actives = self.ds.sample_clients(t, a, cfg.seed);
-        // Failure injection: each active client independently fails
-        // before uploading with the configured probability; the server
-        // aggregates over survivors (never fewer than one).
-        if cfg.client_failure_rate > 0.0 {
-            let mut frng = Rng::seed_from_u64(cfg.seed ^ 0xfa11 ^ (t as u64) << 16);
-            let before = actives.len();
-            actives.retain(|_| !frng.gen_bool(cfg.client_failure_rate));
-            if actives.is_empty() {
-                actives = self.ds.sample_clients(t, 1, cfg.seed ^ 1);
-            }
-            self.failed_clients += (before - actives.len()) as u64;
+        match self.cfg.net.round_mode {
+            RoundMode::Async { .. } => self.run_async_round(),
+            _ => self.run_sync_round(),
         }
+    }
 
-        let (is_luar, mut luar_delta, luar_scheme, luar_mode) = match cfg.method {
+    // ------------------------------------------------------------------
+    // dispatch half
+    // ------------------------------------------------------------------
+
+    /// One client's dispatch: local training through the AOT graph,
+    /// LUAR layer skipping / baseline compression, wire encode, and
+    /// the server-side decode. Returns (decoded update, measured frame
+    /// bytes, training loss). `t` indexes the local-batch schedule (the
+    /// round in barrier modes, the sample generation in async mode).
+    #[allow(clippy::too_many_arguments)]
+    fn client_upload(
+        &mut self,
+        client: usize,
+        slot: usize,
+        t: usize,
+        lr: f32,
+        shared_broadcast: Option<&[f32]>,
+        anchor_g: Option<&[f32]>,
+        upload_layers: &[usize],
+        meta: &ModelMeta,
+    ) -> Result<(Vec<f32>, u64, f32)> {
+        let mu_g = self.cfg.client_opt.mu_global;
+        let mu_p = self.cfg.client_opt.mu_prev;
+        let wd = self.cfg.weight_decay;
+        let is_luar = matches!(self.cfg.method, Method::Luar { .. });
+        let has_compose = self.cfg.luar_compress.is_some();
+
+        let start = match shared_broadcast {
+            Some(b) => b.to_vec(),
+            None => self.opt.broadcast(slot),
+        };
+        let (feats, labels) = self.ds.client_batches(client, t, meta.tau, meta.batch);
+        let out = self.engine.train_round(
+            &start,
+            anchor_g,
+            self.prev_local[client].as_deref().filter(|_| mu_p > 0.0),
+            &feats,
+            &labels,
+            lr,
+            mu_g,
+            mu_p,
+            wd,
+        )?;
+        let mut delta = out.delta;
+        if mu_p > 0.0 {
+            let mut local = start.clone();
+            tensor::axpy(1.0, &delta, &mut local);
+            self.prev_local[client] = Some(local);
+        }
+        let hint;
+        if is_luar {
+            // Clients omit R_t layers from the upload (Alg. 1 line 2).
+            for &l in &self.luar.recycle_set {
+                let lm = &meta.layers[l];
+                delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+            }
+            if has_compose {
+                // Table 3 composition: baseline compression on the
+                // uploaded layers.
+                self.compressor.compress(client, &mut delta, meta, t, &mut self.rng);
+                // re-zero recycled layers (compressors like binarize
+                // may have produced nonzeros there)
+                for &l in &self.luar.recycle_set {
+                    let lm = &meta.layers[l];
+                    delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+                }
+                hint = self.compressor.wire_hint();
+            } else {
+                hint = wire::WireHint::Dense;
+            }
+        } else {
+            self.compressor.compress(client, &mut delta, meta, t, &mut self.rng);
+            hint = self.compressor.wire_hint();
+        }
+        // Serialize exactly what crosses the wire, then decode it
+        // server-side: the ledger counts frame.len() (headers,
+        // layer-id lists, and index overheads included), and the
+        // aggregate consumes the decoded bytes.
+        let frame = wire::encode_update(&delta, meta, upload_layers, &hint)?;
+        let delta_srv = match wire::decode_update(frame.as_bytes(), meta)? {
+            wire::Decoded::Vector(v) => v,
+            // LBGM scalar: the server's per-client anchor times the
+            // coefficient — which is the in-place reconstruction.
+            wire::Decoded::Scalar(_) => delta,
+        };
+        Ok((delta_srv, frame.len() as u64, out.loss))
+    }
+
+    // ------------------------------------------------------------------
+    // absorb half
+    // ------------------------------------------------------------------
+
+    /// Aggregate the included uploads, run the LUAR composition and
+    /// next selection, apply the server optimizer, and record metrics.
+    /// `mean_gap` is the mean model-version gap of the aggregated
+    /// uploads (0 in the barrier modes): it ages recycled layers and
+    /// feeds the staleness-aware `DeltaController`.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_aggregation(
+        &mut self,
+        deltas: &[Vec<f32>],
+        included: &[bool],
+        weights: &[f32],
+        upload_layers: &[usize],
+        actives_len: usize,
+        loss_sum: f64,
+        loss_count: usize,
+        up_bytes_total: u64,
+        down_total: u64,
+        round_secs: f64,
+        tail_s: f64,
+        arrivals: usize,
+        mean_gap: f64,
+    ) -> Result<()> {
+        let meta = self.engine.meta.clone();
+        let (is_luar, mut luar_delta, luar_scheme, luar_mode) = match self.cfg.method {
             Method::Luar { delta, scheme, mode, .. } => (true, delta, Some(scheme), Some(mode)),
             _ => (false, 0, None, None),
         };
@@ -173,119 +297,16 @@ impl Server {
             luar_delta = ctl.delta;
         }
 
-        // --- client phase -------------------------------------------------
-        let mu_g = cfg.client_opt.mu_global;
-        let mu_p = cfg.client_opt.mu_prev;
-        let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
-        let shared_broadcast =
-            if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
-        // Layers on the wire this round: R_t's complement for LUAR,
-        // everything otherwise. Captured now because select_next will
-        // overwrite recycle_set with R_{t+1} below.
-        let upload_layers: Vec<usize> = if is_luar {
-            self.luar.upload_set(meta.num_layers())
-        } else {
-            (0..meta.num_layers()).collect()
-        };
-        // Downlink frame: broadcast params + the R_t layer-id list.
-        // FedMut's per-client mutations have identical length, so one
-        // encode measures every client's download.
-        let bcast_frame = {
-            let tmp;
-            let params: &[f32] = match &shared_broadcast {
-                Some(b) => b,
-                None => {
-                    tmp = self.opt.broadcast(0);
-                    &tmp
-                }
-            };
-            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
-        };
-
-        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
-        let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
-        let mut loss_sum = 0.0f64;
-        let mut up_bytes_total = 0u64;
-        for (slot, &client) in actives.iter().enumerate() {
-            let start = match &shared_broadcast {
-                Some(b) => b.clone(),
-                None => self.opt.broadcast(slot),
-            };
-            let (feats, labels) = self.ds.client_batches(client, t, meta.tau, meta.batch);
-            let out = self.engine.train_round(
-                &start,
-                anchor_g.as_deref(),
-                self.prev_local[client].as_deref().filter(|_| mu_p > 0.0),
-                &feats,
-                &labels,
-                lr,
-                mu_g,
-                mu_p,
-                cfg.weight_decay,
-            )?;
-            loss_sum += out.loss as f64;
-            let mut delta = out.delta;
-            if mu_p > 0.0 {
-                let mut local = start.clone();
-                tensor::axpy(1.0, &delta, &mut local);
-                self.prev_local[client] = Some(local);
-            }
-            let hint;
-            if is_luar {
-                // Clients omit R_t layers from the upload (Alg. 1 line 2).
-                for &l in &self.luar.recycle_set {
-                    let lm = &meta.layers[l];
-                    delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
-                }
-                if cfg.luar_compress.is_some() {
-                    // Table 3 composition: baseline compression on the
-                    // uploaded layers.
-                    self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
-                    // re-zero recycled layers (compressors like binarize
-                    // may have produced nonzeros there)
-                    for &l in &self.luar.recycle_set {
-                        let lm = &meta.layers[l];
-                        delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
-                    }
-                    hint = self.compressor.wire_hint();
-                } else {
-                    hint = wire::WireHint::Dense;
-                }
-            } else {
-                self.compressor.compress(client, &mut delta, &meta, t, &mut self.rng);
-                hint = self.compressor.wire_hint();
-            }
-            // Serialize exactly what crosses the wire, then decode it
-            // server-side: the ledger counts frame.len() (headers,
-            // layer-id lists, and index overheads included — no more
-            // analytic estimates or per-client truncating casts), and
-            // the aggregate consumes the decoded bytes.
-            let frame = wire::encode_update(&delta, &meta, &upload_layers, &hint)?;
-            let delta_srv = match wire::decode_update(frame.as_bytes(), &meta)? {
-                wire::Decoded::Vector(v) => v,
-                // LBGM scalar: the server's per-client anchor times the
-                // coefficient — which is the in-place reconstruction.
-                wire::Decoded::Scalar(_) => delta,
-            };
-            up_bytes_total += frame.len() as u64;
-            frame_lens.push(frame.len() as u64);
-            deltas.push(delta_srv);
-        }
-        // --- network simulation: who makes this round's aggregate? ---------
-        let outcome = self.net.round(&actives, bcast_frame.len() as u64, &frame_lens);
-        self.last_frame_lens = frame_lens;
-        self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
-
-        // --- aggregation over the round's survivors ------------------------
+        // --- aggregation over the included uploads --------------------
         // (Pallas graph when every upload arrived with unit weight and
         // the count matches the lowered shape; weighted pure-Rust
-        // fallback for deadline drops and buffered staleness discounts.)
-        let mut refs: Vec<&[f32]> = Vec::with_capacity(outcome.aggregated);
-        let mut agg_weights: Vec<f32> = Vec::with_capacity(outcome.aggregated);
+        // fallback for deadline drops and staleness discounts.)
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(arrivals);
+        let mut agg_weights: Vec<f32> = Vec::with_capacity(arrivals);
         for (slot, d) in deltas.iter().enumerate() {
-            if outcome.included[slot] {
+            if included[slot] {
                 refs.push(d.as_slice());
-                agg_weights.push(outcome.weights[slot]);
+                agg_weights.push(weights[slot]);
             }
         }
         let uniform = agg_weights.iter().all(|&w| w == 1.0);
@@ -315,13 +336,16 @@ impl Server {
         self.last_update_ssq = u_ssq.clone();
         self.last_weight_ssq = w_ssq.clone();
 
-        // --- LUAR composition + next selection (Alg. 1) --------------------
+        // --- LUAR composition + next selection (Alg. 1) --------------
         let mut kappa = 0.0;
         if is_luar {
             self.luar.update_scores(&u_ssq, &w_ssq);
+            // Async absorbs were trained versions ago: recycled layers
+            // age by the measured version gap, not by round count.
+            self.luar.set_age_step(1 + mean_gap.round() as u32);
             kappa = self.luar.compose_update(&mut mean, &meta, luar_mode.unwrap());
             let next_delta = match &mut self.delta_ctl {
-                Some(ctl) => ctl.observe(kappa),
+                Some(ctl) => ctl.observe_stale(kappa, mean_gap),
                 None => luar_delta,
             };
             let grad_norms: Vec<f64> =
@@ -329,30 +353,26 @@ impl Server {
             self.luar.select_next(luar_scheme.unwrap(), next_delta, &grad_norms, &mut self.rng);
         }
 
-        // --- server update --------------------------------------------------
+        // --- server update --------------------------------------------
         self.opt.apply(&mean);
 
-        // --- accounting ------------------------------------------------------
+        // --- accounting -----------------------------------------------
         // Everything measured: the Comm numerator sums uplink frame
         // lengths (dropped stragglers still transmitted — their bytes
         // crossed the wire), the denominator is the measured dense
         // FedAvg frame, and the downlink is the broadcast frame
-        // (params + R_t layer-id list) per active client.
+        // (params + R_t layer-id list) per dispatch.
         let fedavg_frame = wire::dense_frame_len(&meta);
-        let down_total = (actives.len() as u64) * bcast_frame.len() as u64;
         self.comm.record_wire_round(
-            actives.len() as u64,
-            &upload_layers,
+            actives_len as u64,
+            upload_layers,
             up_bytes_total,
             fedavg_frame,
             down_total,
         );
-        // Sync rounds are bound by the slowest active client (the old
-        // mean-upload shortcut is gone); deadline/buffered rounds close
-        // by their own policy.
-        self.sim_seconds += outcome.round_secs;
+        self.sim_seconds += round_secs;
 
-        let train_loss = loss_sum / actives.len().max(1) as f64;
+        let train_loss = loss_sum / loss_count.max(1) as f64;
         self.train_loss_ema = if self.train_loss_ema.is_nan() {
             train_loss
         } else {
@@ -360,8 +380,8 @@ impl Server {
         };
 
         self.round += 1;
-        let last = self.round == cfg.rounds;
-        if last || (cfg.eval_every > 0 && self.round % cfg.eval_every == 0) {
+        let last = self.round == self.cfg.rounds;
+        if last || (self.cfg.eval_every > 0 && self.round % self.cfg.eval_every == 0) {
             let (test_loss, test_acc) = self.engine.eval_dataset(self.opt.params(), &self.ds)?;
             self.history.push(RoundRecord {
                 round: self.round,
@@ -373,11 +393,301 @@ impl Server {
                 kappa,
                 sim_seconds: self.sim_seconds,
                 wire_bytes: up_bytes_total,
-                tail_s: outcome.straggler_tail_s,
-                arrivals: outcome.aggregated,
+                tail_s,
+                arrivals,
+                version_gap: mean_gap,
             });
         }
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // barrier modes: one cohort, one scheduler round, one absorb
+    // ------------------------------------------------------------------
+
+    /// One communication round (Alg. 2 lines 4–12) under the `sync` /
+    /// `deadline` / `buffered` round-closing policies.
+    fn run_sync_round(&mut self) -> Result<()> {
+        let t = self.round;
+        let cfg = self.cfg.clone();
+        let meta = self.engine.meta.clone();
+        let lr = cfg.lr_at(t);
+        let a = cfg.active_clients;
+        let mut actives = self.ds.sample_clients(t, a, cfg.seed);
+        // Failure injection: each active client independently fails
+        // before uploading with the configured probability; the server
+        // aggregates over survivors (never fewer than one).
+        if cfg.client_failure_rate > 0.0 {
+            let mut frng = Rng::seed_from_u64(cfg.seed ^ 0xfa11 ^ ((t as u64) << 16));
+            let before = actives.len();
+            actives.retain(|_| !frng.gen_bool(cfg.client_failure_rate));
+            if actives.is_empty() {
+                actives = self.ds.sample_clients(t, 1, cfg.seed ^ 1);
+            }
+            self.failed_clients += (before - actives.len()) as u64;
+        }
+
+        let is_luar = matches!(cfg.method, Method::Luar { .. });
+
+        // --- client phase ---------------------------------------------
+        let mu_g = cfg.client_opt.mu_global;
+        let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
+        let shared_broadcast =
+            if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
+        // Layers on the wire this round: R_t's complement for LUAR,
+        // everything otherwise. Captured now because select_next will
+        // overwrite recycle_set with R_{t+1} in the absorb half.
+        let upload_layers: Vec<usize> = if is_luar {
+            self.luar.upload_set(meta.num_layers())
+        } else {
+            (0..meta.num_layers()).collect()
+        };
+        // Downlink frame: broadcast params + the R_t layer-id list.
+        // FedMut's per-client mutations have identical length, so one
+        // encode measures every client's download.
+        let bcast_frame = {
+            let tmp;
+            let params: &[f32] = match &shared_broadcast {
+                Some(b) => b,
+                None => {
+                    tmp = self.opt.broadcast(0);
+                    &tmp
+                }
+            };
+            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+        };
+
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
+        let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
+        let mut loss_sum = 0.0f64;
+        let mut up_bytes_total = 0u64;
+        for (slot, &client) in actives.iter().enumerate() {
+            let (delta_srv, frame_len, loss) = self.client_upload(
+                client,
+                slot,
+                t,
+                lr,
+                shared_broadcast.as_deref(),
+                anchor_g.as_deref(),
+                &upload_layers,
+                &meta,
+            )?;
+            loss_sum += loss as f64;
+            up_bytes_total += frame_len;
+            frame_lens.push(frame_len);
+            deltas.push(delta_srv);
+        }
+
+        // --- network simulation: who makes this round's aggregate? ----
+        let outcome = self.net.round(&actives, bcast_frame.len() as u64, &frame_lens);
+        self.last_frame_lens = frame_lens;
+        self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
+        let down_total = (actives.len() as u64) * bcast_frame.len() as u64;
+
+        self.finish_aggregation(
+            &deltas,
+            &outcome.included,
+            &outcome.weights,
+            &upload_layers,
+            actives.len(),
+            loss_sum,
+            actives.len(),
+            up_bytes_total,
+            down_total,
+            outcome.round_secs,
+            outcome.straggler_tail_s,
+            outcome.aggregated,
+            0.0,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // async mode: persistent queue, per-client versions, no barrier
+    // ------------------------------------------------------------------
+
+    /// Drive the barrier-free runtime until one model version closes
+    /// (= `active_clients` absorbed uploads). The event loop processes
+    /// one completion instant at a time: absorb its arrivals, close a
+    /// version if the buffer filled, then refill the freed slots with
+    /// freshly sampled clients trained on the newest model.
+    fn run_async_round(&mut self) -> Result<()> {
+        let (c, goal, staleness) = self
+            .async_mode_params()
+            .expect("run_async_round requires the async round mode");
+        if self.async_rt.is_none() {
+            if self.cfg.client_failure_rate >= 1.0 {
+                anyhow::bail!("async mode cannot progress with client_failure_rate >= 1");
+            }
+            self.async_rt =
+                Some(AsyncRuntime::new(self.cfg.num_clients, c, goal, staleness));
+        }
+        loop {
+            // Refill to the concurrency cap: each freed slot dispatches
+            // the next sampled client immediately over its own link.
+            while self.async_rt.as_ref().unwrap().wants_dispatch() {
+                self.dispatch_next_async()?;
+            }
+            // Absorb the next completion instant atomically.
+            let start = self.async_rt.as_mut().unwrap().absorb_instant();
+            {
+                let rt = self.async_rt.as_ref().unwrap();
+                let in_flight = rt.in_flight();
+                let version = rt.version;
+                for (i, u) in rt.buffer[start..].iter().enumerate() {
+                    self.history.absorbs.push(AbsorbRecord {
+                        version,
+                        client: u.payload.client,
+                        t: u.t,
+                        version_gap: u.version_gap,
+                        weight: u.weight,
+                        in_flight,
+                        queue_depth: start + i + 1,
+                    });
+                }
+            }
+            if self.async_rt.as_ref().unwrap().ready() {
+                let batch = self.async_rt.as_mut().unwrap().take_aggregation();
+                return self.absorb_async_batch(batch);
+            }
+        }
+    }
+
+    /// Close one async model version: unpack the aggregation batch and
+    /// run the shared absorb half over it (all uploads included, each
+    /// with its staleness weight).
+    fn absorb_async_batch(&mut self, batch: AggBatch) -> Result<()> {
+        let AggBatch { uploads, round_secs, down_bytes, mean_gap, tail_s } = batch;
+        let n = uploads.len();
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut weights: Vec<f32> = Vec::with_capacity(n);
+        let mut frame_lens: Vec<u64> = Vec::with_capacity(n);
+        let mut loss_sum = 0.0f64;
+        let mut up_bytes_total = 0u64;
+        for u in uploads {
+            loss_sum += u.payload.loss as f64;
+            up_bytes_total += u.payload.frame_len;
+            frame_lens.push(u.payload.frame_len);
+            weights.push(u.weight);
+            deltas.push(u.payload.delta);
+        }
+        let included = vec![true; n];
+        // Layer bookkeeping uses the upload set at aggregation time;
+        // stale uploads encoded an older R and simply carry zeros in
+        // the layers recycled since (their frame bytes are measured
+        // either way).
+        let is_luar = matches!(self.cfg.method, Method::Luar { .. });
+        let num_layers = self.engine.meta.num_layers();
+        let upload_layers: Vec<usize> = if is_luar {
+            self.luar.upload_set(num_layers)
+        } else {
+            (0..num_layers).collect()
+        };
+        self.last_frame_lens = frame_lens;
+        self.finish_aggregation(
+            &deltas,
+            &included,
+            &weights,
+            &upload_layers,
+            n,
+            loss_sum,
+            n,
+            up_bytes_total,
+            down_bytes,
+            round_secs,
+            tail_s,
+            n,
+            mean_gap,
+        )
+    }
+
+    /// Train and dispatch the next sampled client against the current
+    /// model; its completion event lands on the persistent queue after
+    /// the client's own link time.
+    fn dispatch_next_async(&mut self) -> Result<()> {
+        let meta = self.engine.meta.clone();
+        let (client, gen) = self.next_async_client();
+        let t = gen as usize;
+        let lr = self.cfg.lr_at(t);
+        let mu_g = self.cfg.client_opt.mu_global;
+        let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
+        let shared_broadcast =
+            if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
+        let is_luar = matches!(self.cfg.method, Method::Luar { .. });
+        let upload_layers: Vec<usize> = if is_luar {
+            self.luar.upload_set(meta.num_layers())
+        } else {
+            (0..meta.num_layers()).collect()
+        };
+        let bcast_frame = {
+            let tmp;
+            let params: &[f32] = match &shared_broadcast {
+                Some(b) => b,
+                None => {
+                    tmp = self.opt.broadcast(0);
+                    &tmp
+                }
+            };
+            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+        };
+        // FedMut pairs mutations by parity of the dispatch sequence.
+        let slot = self.async_rt.as_ref().unwrap().dispatched() as usize;
+        let (delta_srv, frame_len, loss) = self.client_upload(
+            client,
+            slot,
+            t,
+            lr,
+            shared_broadcast.as_deref(),
+            anchor_g.as_deref(),
+            &upload_layers,
+            &meta,
+        )?;
+        let secs = self.net.client_secs(client, bcast_frame.len() as u64, frame_len);
+        let rt = self.async_rt.as_mut().unwrap();
+        let payload = UploadPayload {
+            client,
+            version: rt.version,
+            gen,
+            delta: delta_srv,
+            loss,
+            frame_len,
+            bcast_len: bcast_frame.len() as u64,
+        };
+        rt.dispatch(payload, secs);
+        Ok(())
+    }
+
+    /// Next client from the deterministic sample stream: generation g
+    /// reuses the barrier modes' cohort sampling (and failure
+    /// injection — failed clients are skipped at dispatch and the slot
+    /// refills from the stream), so `async:c=all` walks exactly the
+    /// sync cohorts.
+    fn next_async_client(&mut self) -> (usize, u64) {
+        loop {
+            let (gen, idx) = {
+                let rt = self.async_rt.as_ref().unwrap();
+                (rt.sample_gen, rt.sample_idx as usize)
+            };
+            let a = self.cfg.active_clients;
+            let mut cohort = self.ds.sample_clients(gen as usize, a, self.cfg.seed);
+            if self.cfg.client_failure_rate > 0.0 {
+                let mut frng = Rng::seed_from_u64(self.cfg.seed ^ 0xfa11 ^ (gen << 16));
+                let before = cohort.len();
+                cohort.retain(|_| !frng.gen_bool(self.cfg.client_failure_rate));
+                // Count each generation's failures once, when its first
+                // slot is consumed (a resumed run re-enters mid-cohort
+                // with idx > 0 and must not recount).
+                if idx == 0 {
+                    self.failed_clients += (before - cohort.len()) as u64;
+                }
+            }
+            let rt = self.async_rt.as_mut().unwrap();
+            if idx < cohort.len() {
+                rt.sample_idx += 1;
+                return (cohort[idx], gen);
+            }
+            rt.sample_gen += 1;
+            rt.sample_idx = 0;
+        }
     }
 
     /// Figure 1 diagnostics: per-layer (name, ||Delta||, ||x||, ratio).
@@ -394,6 +704,18 @@ impl Server {
                 (lm.name.clone(), g, w, ratio)
             })
             .collect()
+    }
+
+    /// Resolved async-mode parameters (concurrency, aggregation goal,
+    /// staleness discount); `None` under the barrier round modes.
+    pub(crate) fn async_mode_params(&self) -> Option<(usize, usize, Staleness)> {
+        match self.cfg.net.round_mode {
+            RoundMode::Async { concurrency, staleness } => {
+                let c = if concurrency == 0 { self.cfg.active_clients } else { concurrency };
+                Some((c, self.cfg.active_clients, staleness))
+            }
+            _ => None,
+        }
     }
 
     /// Checkpoint access to the coordinator RNG.

@@ -48,10 +48,25 @@ impl DeltaController {
         self.ema
     }
 
+    /// Penalty per unit of mean model-version gap applied to the
+    /// observed kappa under asynchrony: recycled signal that is
+    /// several versions old eats more of the Theorem 2 noise budget,
+    /// so the controller treats it as a proportionally larger kappa
+    /// and backs the recycling depth off sooner.
+    const GAP_PENALTY: f64 = 0.5;
+
     /// Feed the round's measured kappa; returns the delta for the next
     /// round.
     pub fn observe(&mut self, kappa: f64) -> usize {
-        self.ema = self.beta * self.ema + (1.0 - self.beta) * kappa.clamp(0.0, 1.0);
+        self.observe_stale(kappa, 0.0)
+    }
+
+    /// Staleness-aware observation for the async runtime: `mean_gap`
+    /// is the aggregation's mean model-version gap. A gap of 0 reduces
+    /// exactly to `observe`.
+    pub fn observe_stale(&mut self, kappa: f64, mean_gap: f64) -> usize {
+        let effective = kappa * (1.0 + Self::GAP_PENALTY * mean_gap);
+        self.ema = self.beta * self.ema + (1.0 - self.beta) * effective.clamp(0.0, 1.0);
         self.since_change += 1;
         if self.since_change < self.cooldown {
             return self.delta;
@@ -124,6 +139,38 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(c.observe(0.0), 1);
         }
+    }
+
+    #[test]
+    fn stale_observations_back_off_sooner() {
+        // Identical kappa stream; the stale controller sees an
+        // inflated effective kappa and settles on a smaller delta.
+        let mut fresh = DeltaController::new(12);
+        let mut stale = DeltaController::new(12);
+        for _ in 0..60 {
+            fresh.observe(0.03);
+            stale.observe_stale(0.03, 4.0);
+        }
+        assert!(
+            stale.delta < fresh.delta,
+            "stale {} !< fresh {}",
+            stale.delta,
+            fresh.delta
+        );
+        assert!(stale.kappa_ema() > fresh.kappa_ema());
+    }
+
+    #[test]
+    fn zero_gap_matches_observe_exactly() {
+        let mut a = DeltaController::new(8);
+        let mut b = DeltaController::new(8);
+        for i in 0..30 {
+            let k = (i as f64) * 0.002;
+            let da = a.observe(k);
+            let db = b.observe_stale(k, 0.0);
+            assert_eq!(da, db);
+        }
+        assert_eq!(a.kappa_ema().to_bits(), b.kappa_ema().to_bits());
     }
 
     #[test]

@@ -33,8 +33,15 @@ pub struct LuarState {
     pub prev_update: Vec<f32>,
     /// R_t: layers recycled *this* round (empty at t=0, Alg. 2 line 2).
     pub recycle_set: Vec<usize>,
-    /// Rounds since each layer last uploaded (staleness k in Eq. 6).
+    /// Aggregations since each layer last uploaded (staleness k in
+    /// Eq. 6), advanced by `age_step` per compose.
     pub staleness: Vec<u32>,
+    /// How much `compose_update` ages recycled layers: 1 in the
+    /// barrier round modes; 1 + the mean model-version gap in async
+    /// mode, where recycled information is older than one aggregation.
+    /// Set per aggregation via `set_age_step`; not checkpointed (it is
+    /// recomputed before every compose).
+    pub age_step: u32,
 }
 
 impl LuarState {
@@ -45,7 +52,14 @@ impl LuarState {
             prev_update: vec![0.0; dim],
             recycle_set: Vec::new(),
             staleness: vec![0; num_layers],
+            age_step: 1,
         }
+    }
+
+    /// Set how many aggregation-equivalents the next compose charges
+    /// recycled layers (clamped to at least 1).
+    pub fn set_age_step(&mut self, step: u32) {
+        self.age_step = step.max(1);
     }
 
     /// Layers the clients must upload this round (complement of R_t).
@@ -123,7 +137,7 @@ impl LuarState {
         self.prev_update.copy_from_slice(mean);
         for l in 0..self.staleness.len() {
             if self.recycle_set.contains(&l) {
-                self.staleness[l] += 1;
+                self.staleness[l] += self.age_step;
             } else {
                 self.staleness[l] = 0;
             }
@@ -255,6 +269,24 @@ mod tests {
         let mut st = LuarState::new(4, 10);
         st.recycle_set = vec![1, 3];
         assert_eq!(st.upload_set(4), vec![0, 2]);
+    }
+
+    #[test]
+    fn age_step_scales_staleness_by_version_gap() {
+        let m = meta();
+        let mut st = LuarState::new(2, 10);
+        st.recycle_set = vec![1];
+        let mut u = vec![1.0f32; 10];
+        // async aggregation with mean version gap 2: recycled layers
+        // age by 3 aggregation-equivalents
+        st.set_age_step(3);
+        st.compose_update(&mut u, &m, RecycleMode::Recycle);
+        assert_eq!(st.staleness, vec![0, 3]);
+        // a zero step clamps to the sync behavior
+        st.set_age_step(0);
+        assert_eq!(st.age_step, 1);
+        st.compose_update(&mut u, &m, RecycleMode::Recycle);
+        assert_eq!(st.staleness, vec![0, 4]);
     }
 
     #[test]

@@ -72,6 +72,12 @@ frames, so the Comm column measures real bytes):
               | deadline:s=2.5      close at a time budget, aggregate arrivals
               | buffered:k=8        FedBuff-style: flush every k arrivals,
                                     staleness-discounted
+              | async:c=8,s=poly,a=0.5
+                                    fully async: c clients in flight (c=all pins
+                                    to --active), per-client model versions, each
+                                    upload weighted by its version gap (s=const
+                                    for no discount; s=poly => (1+gap)^-a); a
+                                    round record = one closed model version
   --compute-s   mean local-compute seconds per client per round
   (config files also accept deadline_s = F and buffer_k = N)
 ";
@@ -139,6 +145,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     server.history.write_csv(&out)?;
+    if !server.history.absorbs.is_empty() {
+        let absorb_out = match out.strip_suffix(".csv") {
+            Some(stem) => format!("{stem}_absorbs.csv"),
+            None => format!("{out}.absorbs.csv"),
+        };
+        server.history.write_absorb_csv(&absorb_out)?;
+        println!("# per-absorb telemetry -> {absorb_out}");
+    }
     let stats = server.engine.stats();
     println!(
         "# done in {:.1}s wall ({} train execs {:.1}s, {} evals {:.1}s, {} aggs {:.2}s)",

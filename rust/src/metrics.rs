@@ -1,4 +1,5 @@
-//! Run metrics: per-round history, accuracy/loss records, CSV output.
+//! Run metrics: per-round history, per-absorb records (async mode),
+//! accuracy/loss records, CSV output.
 
 use std::io::Write;
 use std::path::Path;
@@ -25,12 +26,36 @@ pub struct RoundRecord {
     pub tail_s: f64,
     /// Uploads aggregated this round (survivors under deadline/buffered).
     pub arrivals: usize,
+    /// Mean model-version gap of the aggregated uploads (async mode;
+    /// 0 under the barrier round modes).
+    pub version_gap: f64,
+}
+
+/// One upload landing on the async server (`round_mode = async:...`):
+/// the per-absorb telemetry behind the staleness discounts.
+#[derive(Debug, Clone)]
+pub struct AbsorbRecord {
+    /// Server model version at the moment of absorption.
+    pub version: u64,
+    pub client: usize,
+    /// Absolute simulated arrival time.
+    pub t: f64,
+    /// Server versions that closed while this upload was in flight.
+    pub version_gap: u64,
+    /// Staleness-discounted aggregation weight.
+    pub weight: f32,
+    /// Uploads still in flight after this absorb.
+    pub in_flight: usize,
+    /// Aggregation-buffer depth after this absorb.
+    pub queue_depth: usize,
 }
 
 /// Full history of a run plus its terminal summary.
 #[derive(Debug, Clone, Default)]
 pub struct History {
     pub records: Vec<RoundRecord>,
+    /// Per-absorb records (empty under the barrier round modes).
+    pub absorbs: Vec<AbsorbRecord>,
 }
 
 impl History {
@@ -75,12 +100,12 @@ impl History {
         writeln!(
             f,
             "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds,\
-             wire_bytes,tail_s,arrivals"
+             wire_bytes,tail_s,arrivals,version_gap"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.3},{},{:.3},{}",
+                "{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.3},{},{:.3},{},{:.3}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -91,7 +116,26 @@ impl History {
                 r.sim_seconds,
                 r.wire_bytes,
                 r.tail_s,
-                r.arrivals
+                r.arrivals,
+                r.version_gap
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write the per-absorb telemetry (async runs) next to the round
+    /// CSV: one row per upload landing on the server.
+    pub fn write_absorb_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "version,client,t,version_gap,weight,in_flight,queue_depth")?;
+        for a in &self.absorbs {
+            writeln!(
+                f,
+                "{},{},{:.6},{},{:.6},{},{}",
+                a.version, a.client, a.t, a.version_gap, a.weight, a.in_flight, a.queue_depth
             )?;
         }
         Ok(())
@@ -105,8 +149,8 @@ impl History {
         let mut h = History::default();
         for line in text.lines().skip(1) {
             let f: Vec<&str> = line.split(',').collect();
-            // 8 columns = pre-net CSVs, 11 = current format
-            if f.len() != 8 && f.len() != 11 {
+            // 8 columns = pre-net CSVs, 11 = PR 1 format, 12 = current
+            if f.len() != 8 && f.len() != 11 && f.len() != 12 {
                 continue;
             }
             let p = |s: &str| s.parse::<f64>().unwrap_or(f64::NAN);
@@ -119,9 +163,10 @@ impl History {
                 comm_ratio: p(f[5]),
                 kappa: p(f[6]),
                 sim_seconds: p(f[7]),
-                wire_bytes: if f.len() == 11 { f[8].parse().unwrap_or(0) } else { 0 },
-                tail_s: if f.len() == 11 { p(f[9]) } else { 0.0 },
-                arrivals: if f.len() == 11 { f[10].parse().unwrap_or(0) } else { 0 },
+                wire_bytes: if f.len() >= 11 { f[8].parse().unwrap_or(0) } else { 0 },
+                tail_s: if f.len() >= 11 { p(f[9]) } else { 0.0 },
+                arrivals: if f.len() >= 11 { f[10].parse().unwrap_or(0) } else { 0 },
+                version_gap: if f.len() == 12 { p(f[11]) } else { 0.0 },
             });
         }
         Ok(h)
@@ -160,6 +205,7 @@ mod tests {
             wire_bytes: 10,
             tail_s: 0.2,
             arrivals: 4,
+            version_gap: 1.5,
         }
     }
 
@@ -192,13 +238,58 @@ mod tests {
         h.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,"));
-        assert!(text.lines().next().unwrap().ends_with("wire_bytes,tail_s,arrivals"));
+        assert!(text
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("wire_bytes,tail_s,arrivals,version_gap"));
         assert_eq!(text.lines().count(), 2);
         let back = History::read_csv(&path).unwrap();
         assert_eq!(back.records.len(), 1);
         assert_eq!(back.records[0].wire_bytes, 10);
         assert_eq!(back.records[0].arrivals, 4);
         assert!((back.records[0].tail_s - 0.2).abs() < 1e-9);
+        assert!((back.records[0].version_gap - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_csv_accepts_pr1_11_column_format() {
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pr1.csv");
+        std::fs::write(
+            &path,
+            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds,\
+             wire_bytes,tail_s,arrivals\n\
+             2,1.0,1.1,0.5,42,0.5,0.01,2.5,99,0.3,7\n",
+        )
+        .unwrap();
+        let h = History::read_csv(&path).unwrap();
+        assert_eq!(h.records.len(), 1);
+        assert_eq!(h.records[0].wire_bytes, 99);
+        assert_eq!(h.records[0].arrivals, 7);
+        assert_eq!(h.records[0].version_gap, 0.0, "PR 1 rows default the async column");
+    }
+
+    #[test]
+    fn absorb_csv_written() {
+        let mut h = History::default();
+        h.absorbs.push(AbsorbRecord {
+            version: 3,
+            client: 11,
+            t: 2.25,
+            version_gap: 2,
+            weight: 0.577,
+            in_flight: 4,
+            queue_depth: 5,
+        });
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        let path = dir.join("absorbs.csv");
+        h.write_absorb_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("version,client,t,version_gap,weight,in_flight,queue_depth"));
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().nth(1).unwrap().starts_with("3,11,2.250000,2,0.577"));
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!   drawn from configurable fleet distributions.
 //! * `sched` — binary-heap event queue simulating broadcast → local
 //!   compute → upload per client, with `sync` / `deadline` /
-//!   `buffered` round-closing policies.
+//!   `buffered` round-closing policies plus the barrier-free `async`
+//!   mode (`AsyncQueue` persists completion events across dispatches;
+//!   `Staleness` maps version gaps to aggregation weights; the control
+//!   flow lives in `fl::AsyncRuntime`).
 //!
 //! `NetCfg` is the `net:` block of a run config (flat keys
 //! `link_dist`, `round_mode`, `deadline_s`, `buffer_k`, `compute_s`);
@@ -18,7 +21,7 @@ pub mod sched;
 pub mod wire;
 
 pub use links::{ClientLink, LinkDist, LinkFleet};
-pub use sched::{Arrival, RoundMode, RoundOutcome};
+pub use sched::{Arrival, AsyncQueue, RoundMode, RoundOutcome, Staleness};
 pub use wire::{Decoded, WireFrame, WireHint};
 
 use anyhow::{Context, Result};

@@ -21,15 +21,54 @@
 //!   flushes is discounted by 1/sqrt(1+s) (the staleness weight
 //!   FedBuff suggests).
 //!
-//! Specs: `sync`, `deadline:s=2.5`, `buffered:k=8`. The event queue
-//! is a min-heap over upload-completion events; today each round
-//! drains it once (no mid-round insertions yet — re-broadcasts and
-//! retries are the natural extension point).
+//! * `async`    — no rounds at all: a **persistent** event queue
+//!   (`AsyncQueue`) survives across dispatches, the server keeps a
+//!   fixed number of clients in flight, and every absorbed upload
+//!   carries a measured model-version gap that a `Staleness` discount
+//!   turns into an aggregation weight. The queue lives here; the
+//!   dispatch/absorb control flow is `fl::AsyncRuntime`.
+//!
+//! Specs: `sync`, `deadline:s=2.5`, `buffered:k=8`,
+//! `async:c=8,s=poly,a=0.5` (`c=all` pins concurrency to the active
+//! count; `s=const` is the zero-discount setting that reproduces sync
+//! FedAvg when `c=all`). For the three round-based modes the min-heap
+//! is drained once per round by `simulate_round`; the async mode keeps
+//! events across dispatches and pops one completion *instant* at a
+//! time (ties on the clock break by dispatch sequence, so replays are
+//! exact).
 
 use super::parse_kv;
 use anyhow::{bail, Result};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+/// Staleness discount applied to an absorbed upload's aggregation
+/// weight as a function of its model-version gap (FedAsync's weighting
+/// families).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Staleness {
+    /// Zero discount: weight 1 regardless of the gap.
+    Const,
+    /// Polynomial discount: weight = (1 + gap)^-a.
+    Poly { a: f64 },
+}
+
+impl Staleness {
+    /// Aggregation weight for an upload trained `gap` versions ago.
+    pub fn weight(&self, gap: u64) -> f32 {
+        match *self {
+            Staleness::Const => 1.0,
+            Staleness::Poly { a } => (1.0 + gap as f64).powf(-a) as f32,
+        }
+    }
+
+    pub fn spec_string(&self) -> String {
+        match self {
+            Staleness::Const => "s=const".into(),
+            Staleness::Poly { a } => format!("s=poly,a={a}"),
+        }
+    }
+}
 
 /// When the server closes a round over the arrival stream.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,6 +76,12 @@ pub enum RoundMode {
     Sync,
     Deadline { deadline_s: f64 },
     Buffered { k: usize },
+    /// Fully-async server: `concurrency` clients in flight at all
+    /// times (0 = "all": resolved to the active-client count at run
+    /// start), `staleness` maps each upload's version gap to its
+    /// aggregation weight. Driven by `fl::AsyncRuntime`, not by
+    /// `simulate_round`.
+    Async { concurrency: usize, staleness: Staleness },
 }
 
 impl Default for RoundMode {
@@ -73,6 +118,30 @@ impl RoundMode {
                 };
                 RoundMode::Buffered { k }
             }
+            "async" => {
+                let concurrency = match args.get("c").map(String::as_str) {
+                    Some("all") | None => 0,
+                    Some(v) => match v.parse::<usize>() {
+                        Ok(x) if x > 0 => x,
+                        _ => bail!("async:c={v} must be a positive integer or `all`"),
+                    },
+                };
+                let staleness = match args.get("s").map(String::as_str) {
+                    Some("const") => Staleness::Const,
+                    Some("poly") | None => {
+                        let a = match args.get("a") {
+                            Some(v) => match v.parse::<f64>() {
+                                Ok(x) if x >= 0.0 => x,
+                                _ => bail!("async:a={v} must be a non-negative number"),
+                            },
+                            None => 0.5,
+                        };
+                        Staleness::Poly { a }
+                    }
+                    Some(other) => bail!("unknown staleness discount {other}"),
+                };
+                RoundMode::Async { concurrency, staleness }
+            }
             other => bail!("unknown round mode {other}"),
         })
     }
@@ -82,6 +151,14 @@ impl RoundMode {
             RoundMode::Sync => "sync".into(),
             RoundMode::Deadline { deadline_s } => format!("deadline:s={deadline_s}"),
             RoundMode::Buffered { k } => format!("buffered:k={k}"),
+            RoundMode::Async { concurrency, staleness } => {
+                let c = if *concurrency == 0 {
+                    "all".to_string()
+                } else {
+                    concurrency.to_string()
+                };
+                format!("async:c={c},{}", staleness.spec_string())
+            }
         }
     }
 
@@ -90,6 +167,7 @@ impl RoundMode {
             RoundMode::Sync => "sync",
             RoundMode::Deadline { .. } => "deadline",
             RoundMode::Buffered { .. } => "buffered",
+            RoundMode::Async { .. } => "async",
         }
     }
 }
@@ -205,6 +283,12 @@ pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
             }
             arrivals[n_flushed - 1].t
         }
+        RoundMode::Async { .. } => {
+            // The async mode has no per-round barrier to simulate; the
+            // server must drive `fl::AsyncRuntime` over an `AsyncQueue`
+            // instead of calling the round-based scheduler.
+            panic!("async round mode has no per-round simulation; use fl::AsyncRuntime")
+        }
     };
 
     let median = {
@@ -220,6 +304,100 @@ pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
         weights,
         arrivals,
         aggregated,
+    }
+}
+
+/// Persistent event queue for the fully-async server: completion
+/// events survive across dispatches (unlike `simulate_round`, which
+/// fills and drains a fresh heap every round). Keys are (completion
+/// time, dispatch sequence number); the sequence tie-break makes
+/// replays and checkpoint resumes exactly reproducible even when two
+/// uploads land on the same simulated instant.
+#[derive(Debug, Clone, Default)]
+pub struct AsyncQueue {
+    heap: BinaryHeap<Reverse<QEv>>,
+}
+
+/// Heap key: (completion time, dispatch seq). Same total order trick
+/// as `Ev` (times are finite by construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct QEv(f64, u64);
+
+impl Eq for QEv {}
+
+impl PartialOrd for QEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl AsyncQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule the upload dispatched as `seq` to complete at absolute
+    /// simulated time `t`.
+    pub fn push(&mut self, t: f64, seq: u64) {
+        self.heap.push(Reverse(QEv(t, seq)));
+    }
+
+    /// Next completion time, if any upload is in flight.
+    pub fn peek_t(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(QEv(t, _))| *t)
+    }
+
+    /// Pop every event sharing the earliest completion instant, in
+    /// dispatch order. The server processes one instant atomically —
+    /// absorb all of its arrivals, close a version if the buffer
+    /// filled, then refill the freed slots — which is what makes
+    /// `async:c=all,s=const` over a homogeneous fleet reproduce sync
+    /// FedAvg exactly.
+    pub fn pop_instant(&mut self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let first_t = match self.peek_t() {
+            Some(t) => t,
+            None => return out,
+        };
+        while let Some(&Reverse(QEv(t, _))) = self.heap.peek() {
+            if t != first_t {
+                break;
+            }
+            let Reverse(QEv(t, seq)) = self.heap.pop().unwrap();
+            out.push((t, seq));
+        }
+        out
+    }
+
+    /// Snapshot the queued events sorted by (t, seq) — the checkpoint
+    /// serialization order.
+    pub fn events_sorted(&self) -> Vec<(f64, u64)> {
+        let mut v: Vec<(f64, u64)> = self.heap.iter().map(|Reverse(QEv(t, s))| (*t, *s)).collect();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        v
+    }
+
+    /// Rebuild a queue from a checkpoint snapshot.
+    pub fn from_events(events: &[(f64, u64)]) -> Self {
+        let mut q = AsyncQueue::new();
+        for &(t, seq) in events {
+            q.push(t, seq);
+        }
+        q
     }
 }
 
@@ -310,14 +488,89 @@ mod tests {
 
     #[test]
     fn mode_specs_roundtrip() {
-        for spec in ["sync", "deadline:s=2.5", "buffered:k=8"] {
+        for spec in [
+            "sync",
+            "deadline:s=2.5",
+            "buffered:k=8",
+            "async:c=all,s=const",
+            "async:c=4,s=poly,a=0.5",
+        ] {
             let m = RoundMode::parse(spec).unwrap();
             assert_eq!(RoundMode::parse(&m.spec_string()).unwrap(), m, "{spec}");
         }
         assert_eq!(RoundMode::parse("deadline").unwrap(), RoundMode::Deadline { deadline_s: 5.0 });
         assert_eq!(RoundMode::parse("buffered").unwrap(), RoundMode::Buffered { k: 8 });
-        assert!(RoundMode::parse("async").is_err());
         assert!(RoundMode::parse("deadline:s=-1").is_err());
         assert!(RoundMode::parse("buffered:k=0").is_err());
+    }
+
+    #[test]
+    fn async_spec_parses_with_defaults() {
+        assert_eq!(
+            RoundMode::parse("async").unwrap(),
+            RoundMode::Async { concurrency: 0, staleness: Staleness::Poly { a: 0.5 } }
+        );
+        assert_eq!(
+            RoundMode::parse("async:c=16").unwrap(),
+            RoundMode::Async { concurrency: 16, staleness: Staleness::Poly { a: 0.5 } }
+        );
+        assert_eq!(
+            RoundMode::parse("async:c=all,s=const").unwrap(),
+            RoundMode::Async { concurrency: 0, staleness: Staleness::Const }
+        );
+        assert_eq!(RoundMode::parse("async").unwrap().name(), "async");
+        assert!(RoundMode::parse("async:c=0").is_err());
+        assert!(RoundMode::parse("async:s=hinge").is_err());
+        assert!(RoundMode::parse("async:s=poly,a=-1").is_err());
+    }
+
+    #[test]
+    fn staleness_weights() {
+        assert_eq!(Staleness::Const.weight(0), 1.0);
+        assert_eq!(Staleness::Const.weight(100), 1.0);
+        let p = Staleness::Poly { a: 0.5 };
+        assert_eq!(p.weight(0), 1.0, "zero gap must be undiscounted");
+        let w1 = p.weight(1) as f64;
+        assert!((w1 - 1.0 / 2.0f64.sqrt()).abs() < 1e-6);
+        assert!(p.weight(3) < p.weight(1), "discount must decrease with the gap");
+        // a = 0 degenerates to no discount
+        assert_eq!(Staleness::Poly { a: 0.0 }.weight(7), 1.0);
+    }
+
+    #[test]
+    fn async_queue_pops_instants_in_seq_order() {
+        let mut q = AsyncQueue::new();
+        q.push(2.0, 0);
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(3.0, 3);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek_t(), Some(1.0));
+        // both t=1.0 events pop together, ordered by dispatch seq
+        assert_eq!(q.pop_instant(), vec![(1.0, 1), (1.0, 2)]);
+        assert_eq!(q.pop_instant(), vec![(2.0, 0)]);
+        assert_eq!(q.pop_instant(), vec![(3.0, 3)]);
+        assert!(q.pop_instant().is_empty());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn async_queue_snapshot_roundtrip() {
+        let mut q = AsyncQueue::new();
+        q.push(0.5, 3);
+        q.push(0.25, 7);
+        q.push(0.5, 1);
+        let events = q.events_sorted();
+        assert_eq!(events, vec![(0.25, 7), (0.5, 1), (0.5, 3)]);
+        let mut back = AsyncQueue::from_events(&events);
+        assert_eq!(back.pop_instant(), vec![(0.25, 7)]);
+        assert_eq!(back.pop_instant(), vec![(0.5, 1), (0.5, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "async round mode")]
+    fn simulate_round_rejects_async_mode() {
+        let mode = RoundMode::Async { concurrency: 0, staleness: Staleness::Const };
+        simulate_round(&mode, &[1.0]);
     }
 }

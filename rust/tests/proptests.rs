@@ -4,9 +4,11 @@
 //! be replayed exactly.
 
 use fedluar::comm::CommAccountant;
+use fedluar::compress::{Binarize, DropoutAvg, LowRank, Quantize, UpdateCompressor};
 use fedluar::config::{RecycleMode, SelectionScheme};
 use fedluar::luar::{select_layers, LuarState};
 use fedluar::model::ModelMeta;
+use fedluar::net::wire::{self, WireHint};
 use fedluar::rng::Rng;
 use fedluar::tensor;
 use std::path::PathBuf;
@@ -21,6 +23,36 @@ fn rand_meta(rng: &mut Rng) -> ModelMeta {
         let size = rng.gen_range(1, 64);
         rows.push(format!(
             r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{size},"arrays":[]}}"#
+        ));
+        off += size;
+    }
+    let doc = format!(
+        r#"{{"model":"prop","dim":{off},"num_classes":3,
+            "input_shape":[4],"input_dtype":"f32","tau":2,"batch":4,
+            "eval_batch":8,"agg_clients":4,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    let meta = ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap();
+    meta.validate().unwrap();
+    meta
+}
+
+/// Random meta whose layers each hold one matrix array (so the
+/// low-rank flavor has factorable shapes).
+fn rand_meta_arrays(rng: &mut Rng) -> ModelMeta {
+    let layers = rng.gen_range(1, 6);
+    let mut rows = Vec::new();
+    let mut off = 0usize;
+    for l in 0..layers {
+        let r = rng.gen_range(2, 9);
+        let c = rng.gen_range(2, 17);
+        let size = r * c;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{size},
+               "arrays":[{{"name":"w","shape":[{r},{c}],"offset":{off},"size":{size}}}]}}"#
         ));
         off += size;
     }
@@ -224,6 +256,142 @@ fn prop_comm_ratio_bounded_by_upload_fraction() {
             .layer_frequencies()
             .iter()
             .all(|&f| (0.0..=1.0 + 1e-12).contains(&f)));
+    }
+}
+
+// ---------------------------------------------------------------- wire codecs
+
+/// All eight uplink frame flavors round-trip over randomized shapes,
+/// seeds, and listed-layer subsets: dense / sparse / quantized /
+/// sign-bit / low-rank / scalar / seeded-mask / bitmap. Exact payload
+/// recovery (low-rank: bounded) and ledger bytes == summed
+/// `frame.len()` — the byte-exact accounting invariant.
+#[test]
+fn prop_all_wire_flavors_roundtrip_with_exact_ledger() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let meta = rand_meta_arrays(&mut rng);
+        let n = meta.num_layers();
+        let k = rng.gen_range(1, n + 1);
+        let mut subset = rng.sample_indices(n, k);
+        subset.sort_unstable();
+        let all: Vec<usize> = (0..n).collect();
+        let base: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+
+        let masked = |u: &[f32], layers: &[usize]| -> Vec<f32> {
+            let mut v = vec![0.0f32; meta.dim];
+            for &l in layers {
+                let lm = &meta.layers[l];
+                v[lm.offset..lm.offset + lm.size]
+                    .copy_from_slice(&u[lm.offset..lm.offset + lm.size]);
+            }
+            v
+        };
+        let decode_vec = |frame: &wire::WireFrame| -> Vec<f32> {
+            match wire::decode_update(frame.as_bytes(), &meta).unwrap() {
+                wire::Decoded::Vector(v) => v,
+                wire::Decoded::Scalar(_) => panic!("seed {seed}: unexpected scalar"),
+            }
+        };
+        let mut frames: Vec<(&'static str, wire::WireFrame)> = Vec::new();
+
+        // 1. dense (LUAR partial uploads)
+        let f = wire::encode_update(&base, &meta, &subset, &WireHint::Dense).unwrap();
+        assert_eq!(decode_vec(&f), masked(&base, &subset), "seed {seed}: dense");
+        frames.push(("dense", f));
+
+        // 2. sparse (top-k / prune / dropout shapes)
+        let sparse_u: Vec<f32> =
+            base.iter().map(|&v| if rng.gen_bool(0.6) { 0.0 } else { v }).collect();
+        let f = wire::encode_update(&sparse_u, &meta, &subset, &WireHint::Sparse).unwrap();
+        assert_eq!(decode_vec(&f), masked(&sparse_u, &subset), "seed {seed}: sparse");
+        frames.push(("sparse", f));
+
+        // 3. quantized (FedPAQ grid points round-trip bit-exactly)
+        let levels = [2u32, 4, 16, 256][rng.gen_range(0, 4)];
+        let mut quant_u = base.clone();
+        let mut q = Quantize::new(levels);
+        q.compress(0, &mut quant_u, &meta, 0, &mut rng);
+        let f = wire::encode_update(&quant_u, &meta, &subset, &q.wire_hint()).unwrap();
+        assert_eq!(
+            decode_vec(&f),
+            masked(&quant_u, &subset),
+            "seed {seed}: quantized levels={levels}"
+        );
+        frames.push(("quantized", f));
+
+        // 4. sign bits (±alpha per layer)
+        let mut sign_u = base.clone();
+        let mut b = Binarize::new();
+        b.compress(0, &mut sign_u, &meta, 0, &mut rng);
+        let f = wire::encode_update(&sign_u, &meta, &subset, &b.wire_hint()).unwrap();
+        assert_eq!(decode_vec(&f), masked(&sign_u, &subset), "seed {seed}: signbits");
+        frames.push(("signbits", f));
+
+        // 5. low rank (bounded reconstruction over factorable arrays)
+        let mut lr_u = base.clone();
+        let mut lr = LowRank::new(0.25);
+        lr.compress(0, &mut lr_u, &meta, 0, &mut rng);
+        let f = wire::encode_update(&lr_u, &meta, &all, &lr.wire_hint()).unwrap();
+        let back = decode_vec(&f);
+        let err: f64 =
+            back.iter().zip(&lr_u).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+        let norm: f64 = lr_u.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(
+            err <= 1e-3 * norm.max(1e-9),
+            "seed {seed}: lowrank err {err} vs norm {norm}"
+        );
+        frames.push(("lowrank", f));
+
+        // 6. scalar (LBGM look-back coefficient)
+        let coef = rng.f32();
+        let f = wire::encode_update(&base, &meta, &all, &WireHint::Scalar { coef }).unwrap();
+        assert_eq!(f.len(), wire::HEADER_LEN + 4, "seed {seed}: scalar frame size");
+        match wire::decode_update(f.as_bytes(), &meta).unwrap() {
+            wire::Decoded::Scalar(c) => {
+                assert_eq!(c.to_bits(), coef.to_bits(), "seed {seed}: scalar")
+            }
+            wire::Decoded::Vector(_) => panic!("seed {seed}: expected scalar"),
+        }
+        frames.push(("scalar", f));
+
+        // 7. seeded mask (FedDropoutAvg: mask regenerated server-side)
+        let mut drop_u = base.clone();
+        let mut dr = DropoutAvg::new(0.5);
+        let client = rng.gen_range(0, 8);
+        let round = rng.gen_range(0, 20);
+        dr.compress(client, &mut drop_u, &meta, round, &mut rng);
+        let f = wire::encode_update(&drop_u, &meta, &subset, &dr.wire_hint()).unwrap();
+        assert_eq!(decode_vec(&f), masked(&drop_u, &subset), "seed {seed}: seeded mask");
+        frames.push(("seeded_mask", f));
+
+        // 8. bitmap (PruneFL: full-dim mask + kept values)
+        let bitmap_u: Vec<f32> =
+            base.iter().map(|&v| if rng.gen_bool(0.66) { 0.0 } else { v }).collect();
+        let f = wire::encode_update(&bitmap_u, &meta, &all, &WireHint::Bitmap).unwrap();
+        assert_eq!(decode_vec(&f), bitmap_u, "seed {seed}: bitmap");
+        frames.push(("bitmap", f));
+
+        // the downlink frame rides along: params + R_t id list
+        let bf = wire::encode_broadcast(&base, &meta, &subset).unwrap();
+        let (params, ids) = wire::decode_broadcast(bf.as_bytes(), &meta).unwrap();
+        assert_eq!(params, base, "seed {seed}: broadcast params");
+        assert_eq!(ids, subset, "seed {seed}: broadcast ids");
+
+        // ledger bytes == summed frame.len(), flavor by flavor
+        let mut acc = CommAccountant::new(n);
+        let mut expected = 0u64;
+        for (_, f) in &frames {
+            acc.record_wire_round(1, &[], f.len() as u64, wire::dense_frame_len(&meta), 0);
+            expected += f.len() as u64;
+        }
+        assert_eq!(
+            acc.up_bytes, expected,
+            "seed {seed}: ledger must equal summed wire-frame bytes"
+        );
+        for (name, f) in &frames {
+            assert!(f.len() >= wire::HEADER_LEN, "seed {seed}: {name} under-sized");
+        }
     }
 }
 
