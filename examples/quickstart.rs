@@ -5,9 +5,25 @@
 //! printing accuracy and the communication ratio as it goes.
 //!
 //!     make artifacts && cargo run --release --example quickstart
+//!
+//! Without the PJRT artifacts (e.g. a plain `cargo run --example
+//! quickstart`), the engine cannot load; the example then falls back
+//! to an engine-free telemetry demo that drives the production wire /
+//! link / async-scheduler / LUAR state machines with synthetic deltas
+//! at `obs: level=full`, writing the three telemetry artifact kinds
+//! under `results/quickstart/` (the CI `obs-artifacts` job validates
+//! them).
 
-use fedluar::config::{Method, RunConfig};
-use fedluar::fl::Server;
+use fedluar::comm::CommAccountant;
+use fedluar::config::{Method, RecycleMode, RunConfig, SelectionScheme};
+use fedluar::fl::{AsyncRuntime, Server, UploadPayload};
+use fedluar::luar::LuarState;
+use fedluar::model::ModelMeta;
+use fedluar::net::{wire, NetCfg, NetSim, Staleness, WireHint};
+use fedluar::obs::{self, ObsCfg, ObsLevel};
+use fedluar::rng::Rng;
+use fedluar::tensor;
+use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     // 1. A paper-aligned benchmark config, scaled down for a demo.
@@ -19,8 +35,16 @@ fn main() -> anyhow::Result<()> {
     // 2. The paper's method: recycle the 2 lowest-priority layers.
     cfg.method = Method::luar(2);
 
-    // 3. Run Algorithm 2.
-    let mut server = Server::new(cfg)?;
+    // 3. Run Algorithm 2 (or the telemetry demo when the AOT
+    //    artifacts are absent).
+    let mut server = match Server::new(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("engine unavailable ({e:#});");
+            eprintln!("running the engine-free telemetry demo instead\n");
+            return telemetry_demo();
+        }
+    };
     println!("platform: {}", server.engine.platform());
     println!(
         "model {} | {} params in {} layers | {} clients ({} active)\n",
@@ -48,4 +72,146 @@ fn main() -> anyhow::Result<()> {
         server.luar.recycle_set
     );
     Ok(())
+}
+
+/// Drive the production (engine-free) subsystems — wire codecs,
+/// heterogeneous links, the barrier-free scheduler, LUAR selection,
+/// the comm ledger — with synthetic updates, under full telemetry.
+fn telemetry_demo() -> anyhow::Result<()> {
+    const NUM_CLIENTS: usize = 32;
+    const CONCURRENCY: usize = 8;
+    const AGG_GOAL: usize = 8;
+    const VERSIONS: usize = 12;
+    const DELTA: usize = 2;
+
+    let meta = demo_meta()?;
+    let num_layers = meta.num_layers();
+    obs::init(&ObsCfg {
+        level: ObsLevel::Full,
+        trace_path: Some("results/quickstart/trace.jsonl".into()),
+        metrics_path: Some("results/quickstart/metrics.prom".into()),
+        layer_csv: Some("results/quickstart/layers.csv".into()),
+    })?;
+
+    let mut luar = LuarState::new(num_layers, meta.dim);
+    let mut comm = CommAccountant::new(num_layers);
+    let net = NetSim::new(NetCfg::default(), NUM_CLIENTS, 7);
+    let mut rt = AsyncRuntime::new(NUM_CLIENTS, CONCURRENCY, AGG_GOAL, Staleness::Poly { a: 0.5 });
+    let mut rng = Rng::seed_from_u64(7);
+    let mut params: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+
+    for version in 0..VERSIONS {
+        // Upload set is fixed within a version (selection runs at close).
+        let upload_layers = luar.upload_set(num_layers);
+        let bcast = wire::encode_broadcast(&params, &meta, &luar.recycle_set)?;
+        while !rt.ready() {
+            while rt.wants_dispatch() {
+                let client = rng.gen_range(0, NUM_CLIENTS);
+                let scale = 0.05 / (1.0 + version as f32);
+                let mut delta: Vec<f32> =
+                    (0..meta.dim).map(|_| rng.normal_f32(0.0, scale)).collect();
+                // zero the recycled layers, like a real client upload
+                for &l in &luar.recycle_set {
+                    let lm = &meta.layers[l];
+                    delta[lm.offset..lm.offset + lm.size].fill(0.0);
+                }
+                let frame = wire::encode_update(&delta, &meta, &upload_layers, &WireHint::Sparse)?;
+                let decoded = match wire::decode_update(frame.as_bytes(), &meta)? {
+                    wire::Decoded::Vector(v) => v,
+                    wire::Decoded::Scalar(_) => delta,
+                };
+                let secs = net.client_secs(client, bcast.len() as u64, frame.len() as u64);
+                let payload = UploadPayload {
+                    client,
+                    version: rt.version,
+                    gen: version as u64,
+                    delta: decoded,
+                    loss: 1.0 / (1.0 + version as f32),
+                    frame_len: frame.len() as u64,
+                    bcast_len: bcast.len() as u64,
+                };
+                rt.dispatch(payload, secs);
+            }
+            rt.absorb_instant();
+        }
+        let batch = rt.take_aggregation();
+        let n = batch.uploads.len();
+        let up_bytes: u64 = batch.uploads.iter().map(|u| u.payload.frame_len).sum();
+        let discount =
+            batch.uploads.iter().map(|u| u.weight as f64).sum::<f64>() / n.max(1) as f64;
+        let mut mean = vec![0.0f32; meta.dim];
+        for u in &batch.uploads {
+            for (m, d) in mean.iter_mut().zip(&u.payload.delta) {
+                *m += (u.weight * d) / n as f32;
+            }
+        }
+        let mut u_ssq = Vec::with_capacity(num_layers);
+        let mut w_ssq = Vec::with_capacity(num_layers);
+        for lm in &meta.layers {
+            let r = lm.offset..lm.offset + lm.size;
+            u_ssq.push(tensor::ssq(&mean[r.clone()]) as f32);
+            w_ssq.push(tensor::ssq(&params[r]) as f32);
+        }
+        luar.update_scores(&u_ssq, &w_ssq);
+        luar.set_age_step(1 + batch.mean_gap.round() as u32);
+        let kappa = luar.compose_update(&mut mean, &meta, RecycleMode::Recycle);
+        let grad_norms: Vec<f64> = u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
+        obs::record_layer_round(
+            version,
+            &meta,
+            &upload_layers,
+            &luar.scores,
+            &luar.staleness,
+            up_bytes,
+            discount,
+        );
+        obs::gauge("luar.kappa", kappa);
+        obs::snapshot(version as u64);
+        luar.select_next(SelectionScheme::Luar, DELTA, &grad_norms, &mut rng);
+        comm.record_wire_round(
+            n as u64,
+            &upload_layers,
+            up_bytes,
+            wire::dense_frame_len(&meta),
+            batch.down_bytes,
+        );
+        for (p, m) in params.iter_mut().zip(&mean) {
+            *p += m;
+        }
+        println!(
+            "version {version:2}: {n} absorbs  gap {:.2}  kappa {:.4}  comm {:.3}  R={:?}",
+            batch.mean_gap,
+            kappa,
+            comm.comm_ratio(),
+            luar.recycle_set
+        );
+    }
+
+    println!(
+        "\nlayer upload frequencies (Figure 3): {:?}",
+        comm.layer_frequencies().iter().map(|f| (f * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    for p in obs::finish()? {
+        println!("telemetry -> {p}");
+    }
+    Ok(())
+}
+
+fn demo_meta() -> anyhow::Result<ModelMeta> {
+    ModelMeta::from_json(
+        r#"{
+        "model":"demo-mlp","dim":2048,"num_classes":10,
+        "input_shape":[64],"input_dtype":"f32",
+        "tau":2,"batch":8,"eval_batch":32,"agg_clients":8,"momentum":0.9,
+        "layers":[
+          {"name":"dense1","kind":"dense","offset":0,"size":1024,"arrays":[]},
+          {"name":"dense2","kind":"dense","offset":1024,"size":512,"arrays":[]},
+          {"name":"dense3","kind":"dense","offset":1536,"size":384,"arrays":[]},
+          {"name":"head","kind":"dense","offset":1920,"size":128,"arrays":[]}
+        ],
+        "artifacts":{"train":"t","eval":"e","agg":"g","init":"i"},
+        "init_sha256":"demo"
+    }"#,
+        PathBuf::from("artifacts"),
+    )
 }

@@ -7,9 +7,35 @@
 
 use fedluar::bench_harness::Bench;
 use fedluar::fl::{AsyncRuntime, UploadPayload};
+use fedluar::model::ModelMeta;
 use fedluar::net::sched::{simulate_round, RoundMode};
-use fedluar::net::{AsyncQueue, Staleness};
+use fedluar::net::{wire, AsyncQueue, Staleness};
 use fedluar::rng::Rng;
+use std::path::PathBuf;
+
+fn synth_meta(layers: usize, layer_size: usize) -> ModelMeta {
+    let mut rows = Vec::new();
+    for l in 0..layers {
+        let off = l * layer_size;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{layer_size},
+               "arrays":[{{"name":"w","shape":[{r},{c}],"offset":{off},"size":{layer_size}}}]}}"#,
+            r = layer_size / 64,
+            c = 64
+        ));
+    }
+    let dim = layers * layer_size;
+    let doc = format!(
+        r#"{{"model":"bench","dim":{dim},"num_classes":10,
+            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
+            "eval_batch":64,"agg_clients":32,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
+}
 
 fn main() {
     let mut b = Bench::new("async_sched");
@@ -80,4 +106,25 @@ fn main() {
     });
 
     b.compare("queue_pop_push_4096", "simulate_round_buffered_64");
+
+    // 4) broadcast memoization: `Server::dispatch_next_async` used to
+    //    re-encode the broadcast frame for every dispatched client even
+    //    though the server model only changes when a version closes.
+    //    The per-version cache turns the within-version cost from a
+    //    full encode into a frame-length read; this pair measures the
+    //    spread at a realistic model size (~0.5 M params).
+    let meta = synth_meta(8, 65536);
+    let params: Vec<f32> = (0..meta.dim).map(|i| (i % 37) as f32 * 0.01).collect();
+    let recycle = [2usize, 5];
+    let elems = Some(meta.dim as u64);
+    b.bench("bcast_encode_per_dispatch", elems, || {
+        let f = wire::encode_broadcast(&params, &meta, &recycle).unwrap();
+        std::hint::black_box(f.len());
+    });
+    let cached = wire::encode_broadcast(&params, &meta, &recycle).unwrap();
+    b.bench("bcast_cached_reuse", elems, || {
+        std::hint::black_box(cached.len());
+        std::hint::black_box(cached.as_bytes().first());
+    });
+    b.compare("bcast_cached_reuse", "bcast_encode_per_dispatch");
 }

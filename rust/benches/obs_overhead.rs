@@ -1,0 +1,57 @@
+//! Telemetry overhead: the cost of an obs/ instrumentation point at
+//! each level. The contract (see `docs/observability.md`) is that a
+//! disabled call site is one thread-local byte read plus a branch — no
+//! allocation, no clock read — so `--obs off` runs pay effectively
+//! nothing for being instrumentable. This bench pins that disabled
+//! path and shows what enabling metrics / full tracing buys into.
+
+use fedluar::bench_harness::Bench;
+use fedluar::obs::{self, ObsCfg, ObsLevel};
+
+fn main() {
+    let mut b = Bench::new("obs_overhead");
+
+    // --- level = off: every instrumentation point must be near-free
+    obs::init(&ObsCfg::default()).unwrap();
+    b.bench("span_off", None, || {
+        let mut s = obs::span("bench.span");
+        s.set_sim(1.0);
+        std::hint::black_box(&s);
+    });
+    b.bench("counter_off", None, || obs::counter("bench.count", 1));
+    b.bench("observe_off", None, || obs::observe("bench.histo", 1.0));
+    assert_eq!(obs::spans_recorded(), 0, "off level must record nothing");
+    assert_eq!(obs::counter_value("bench.count"), 0, "off level must record nothing");
+
+    // --- level = metrics: registry updates armed, spans still disarmed
+    obs::init(&ObsCfg { level: ObsLevel::Metrics, ..ObsCfg::default() }).unwrap();
+    b.bench("counter_metrics", None, || obs::counter("bench.count", 1));
+    b.bench("observe_metrics", None, || obs::observe("bench.histo", 1.0));
+    b.bench("span_disarmed_metrics", None, || {
+        let _s = obs::span("bench.span");
+    });
+    assert_eq!(obs::spans_recorded(), 0, "spans stay disarmed below level=full");
+    obs::finish().unwrap();
+
+    // --- level = full: span guards read the clock and feed the ring +
+    //     the per-span duration histogram (no JSONL writer configured)
+    obs::init(&ObsCfg { level: ObsLevel::Full, ..ObsCfg::default() }).unwrap();
+    b.bench("span_full_ring", None, || {
+        let mut s = obs::span("bench.span");
+        s.set_sim(1.0);
+        std::hint::black_box(&s);
+    });
+    assert!(obs::spans_recorded() > 0);
+    obs::finish().unwrap();
+
+    b.compare("span_off", "span_full_ring");
+    b.compare("counter_off", "counter_metrics");
+    let off_ns = b
+        .results()
+        .iter()
+        .filter(|(n, _)| n.ends_with("_off"))
+        .map(|(_, s)| s.mean_secs() * 1e9)
+        .fold(0.0f64, f64::max);
+    println!("\n  -> worst disabled call site: {off_ns:.1} ns (budget: a few ns; if this");
+    println!("     grows, a gate stopped short-circuiting before the context lookup)");
+}

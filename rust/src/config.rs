@@ -9,6 +9,7 @@
 
 use crate::data::{SynthKind, SynthSpec};
 use crate::net::{LinkDist, NetCfg, RoundMode};
+use crate::obs::{ObsCfg, ObsLevel};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -303,6 +304,12 @@ pub struct RunConfig {
     /// `async:c=N,s=const|poly[,a=F]` (`c=all` pins concurrency to
     /// `active_clients`).
     pub net: NetCfg,
+    /// Observability block: telemetry level and artifact paths (flat
+    /// config keys `obs_level`, `obs_trace`, `obs_metrics`,
+    /// `obs_layer_csv`; `none` clears a path). Telemetry never
+    /// perturbs the simulation — `off` and `full` runs are
+    /// bit-identical (`tests/integration_obs.rs`).
+    pub obs: ObsCfg,
 }
 
 impl RunConfig {
@@ -335,6 +342,7 @@ impl RunConfig {
             difficulty,
             client_failure_rate: 0.0,
             net: NetCfg::default(),
+            obs: ObsCfg::default(),
         })
     }
 
@@ -400,7 +408,8 @@ impl RunConfig {
              alpha = {}\nper_client = {}\ntest_size = {}\nlr = {}\nweight_decay = {}\n\
              lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
              mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
-             client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n",
+             client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n\
+             obs_level = {}\nobs_trace = {}\nobs_metrics = {}\nobs_layer_csv = {}\n",
             self.model,
             self.rounds,
             self.num_clients,
@@ -428,6 +437,10 @@ impl RunConfig {
             self.net.link_dist.spec_string(),
             self.net.round_mode.spec_string(),
             self.net.compute_s,
+            self.obs.level.name(),
+            self.obs.trace_path.as_deref().unwrap_or("none"),
+            self.obs.metrics_path.as_deref().unwrap_or("none"),
+            self.obs.layer_csv.as_deref().unwrap_or("none"),
         )
     }
 
@@ -510,6 +523,20 @@ impl RunConfig {
         if let Some(v) = kv.get("compute_s") {
             cfg.net.compute_s = v.parse().context("bad compute_s")?;
         }
+        // obs: block (flat keys); `none` leaves a path unset.
+        if let Some(v) = kv.get("obs_level") {
+            cfg.obs.level = ObsLevel::parse(v)?;
+        }
+        let path = |v: &String| if v == "none" { None } else { Some(v.clone()) };
+        if let Some(v) = kv.get("obs_trace") {
+            cfg.obs.trace_path = path(v);
+        }
+        if let Some(v) = kv.get("obs_metrics") {
+            cfg.obs.metrics_path = path(v);
+        }
+        if let Some(v) = kv.get("obs_layer_csv") {
+            cfg.obs.layer_csv = path(v);
+        }
         Ok(cfg)
     }
 
@@ -552,6 +579,26 @@ mod tests {
         assert_eq!(back.lr_decay_rounds, cfg.lr_decay_rounds);
         assert_eq!(back.client_opt.mu_global, 0.001);
         assert_eq!(back.net, cfg.net);
+    }
+
+    #[test]
+    fn obs_block_roundtrip() {
+        let mut cfg = RunConfig::benchmark("mlp").unwrap();
+        cfg.obs.level = ObsLevel::Full;
+        cfg.obs.trace_path = Some("results/t.jsonl".into());
+        cfg.obs.layer_csv = Some("results/l.csv".into());
+        let back = RunConfig::load_kv(&cfg.save_kv()).unwrap();
+        assert_eq!(back.obs, cfg.obs);
+        // defaults: off, no paths; `none` stays None through the trip
+        let base = RunConfig::benchmark("mlp").unwrap();
+        assert_eq!(base.obs.level, ObsLevel::Off);
+        let back = RunConfig::load_kv(&base.save_kv()).unwrap();
+        assert_eq!(back.obs, base.obs);
+        assert!(back.obs.metrics_path.is_none());
+        // legacy configs without the obs keys parse fine
+        let legacy = "model = mlp\nrounds = 3\n";
+        assert_eq!(RunConfig::load_kv(legacy).unwrap().obs.level, ObsLevel::Off);
+        assert!(RunConfig::load_kv("model = mlp\nobs_level = loud\n").is_err());
     }
 
     #[test]

@@ -154,7 +154,16 @@ pub fn run_cached(cfg: RunConfig, fresh: bool) -> Result<(History, f64)> {
     let path = dir.join(format!("{key}.csv"));
     let meta_path = dir.join(format!("{key}.cfg"));
     if !fresh && path.exists() {
-        let h = History::read_csv(&path)?;
+        let (h, rep) = History::read_csv_report(&path)?;
+        if !rep.is_clean() {
+            eprintln!(
+                "# warning: cached {} parsed with {} skipped / {} degraded rows \
+                 (rerun with --fresh to rebuild)",
+                path.display(),
+                rep.skipped,
+                rep.degraded
+            );
+        }
         if !h.records.is_empty() {
             return Ok((h, 0.0));
         }

@@ -37,6 +37,7 @@
 //! (`fl/checkpoint.rs` format v2).
 
 use crate::net::{AsyncQueue, Staleness};
+use crate::obs;
 use std::collections::BTreeMap;
 
 /// One dispatched upload: everything the server needs when the upload
@@ -186,6 +187,8 @@ impl AsyncRuntime {
         self.seq += 1;
         self.queue.push(self.now + duration_s, seq);
         self.pending.insert(seq, payload);
+        obs::counter("async.dispatched", 1);
+        obs::gauge("async.in_flight", self.pending.len() as f64);
     }
 
     /// Absorb every arrival at the next completion instant into the
@@ -194,6 +197,8 @@ impl AsyncRuntime {
     /// `buffer[start..]` for per-absorb metrics); `buffer.len()` if
     /// nothing was in flight.
     pub fn absorb_instant(&mut self) -> usize {
+        let mut sp = obs::span("sched.pop");
+        let t0 = self.now;
         let start = self.buffer.len();
         for (t, seq) in self.queue.pop_instant() {
             self.now = t;
@@ -203,8 +208,11 @@ impl AsyncRuntime {
                 .expect("event queue and pending map out of sync");
             let version_gap = self.version - payload.version;
             let weight = self.staleness.weight(version_gap);
+            obs::observe("async.version_gap", version_gap as f64);
             self.buffer.push(AbsorbedUpload { payload, t, version_gap, weight });
         }
+        sp.set_sim(self.now - t0);
+        obs::gauge("sched.queue_depth", self.buffer.len() as f64);
         start
     }
 
@@ -216,6 +224,7 @@ impl AsyncRuntime {
     /// Close a version: drain the buffer, advance the model version,
     /// and report the round's timing/byte/staleness aggregates.
     pub fn take_aggregation(&mut self) -> AggBatch {
+        obs::counter("async.versions_closed", 1);
         let uploads = std::mem::take(&mut self.buffer);
         let round_secs = self.now - self.last_agg_t;
         self.last_agg_t = self.now;

@@ -296,6 +296,10 @@ impl Server {
                 self.async_rt = None;
             }
         }
+        // Dispatch-side memos are derived state: drop them so the first
+        // post-restore dispatch rebuilds against the restored model.
+        self.async_bcast = None;
+        self.async_cohort = None;
         Ok(())
     }
 }

@@ -50,6 +50,7 @@ use crate::luar::{DeltaController, LuarState};
 use crate::metrics::{AbsorbRecord, History, RoundRecord};
 use crate::model::{artifacts_dir, ModelMeta};
 use crate::net::{wire, NetSim, RoundMode, Staleness};
+use crate::obs;
 use crate::optim::ServerOpt;
 use crate::rng::Rng;
 use crate::runtime::Engine;
@@ -89,6 +90,29 @@ pub struct Server {
     pub dropped_stragglers: u64,
     /// Barrier-free scheduling state; `Some` once an async round ran.
     pub async_rt: Option<AsyncRuntime>,
+    /// Async dispatch memo (the ROADMAP-flagged hot path): broadcast
+    /// params, FedProx anchor, encoded downlink frame, and the upload
+    /// set are invariant within a model version — encode them once per
+    /// version instead of once per dispatch. Derived state only:
+    /// rebuilt lazily, cleared on checkpoint load, never serialized.
+    async_bcast: Option<AsyncBcastCache>,
+    /// The generation's failure-filtered cohort (deterministic in
+    /// (gen, seed)), sampled once per generation. Same cache policy.
+    async_cohort: Option<(u64, Vec<usize>)>,
+}
+
+/// Per-model-version dispatch artifacts reused across async dispatches.
+struct AsyncBcastCache {
+    version: u64,
+    /// Shared broadcast params (`None` when the optimizer mutates the
+    /// broadcast per client, e.g. FedMut).
+    shared: Option<Vec<f32>>,
+    /// FedProx global anchor (populated only when mu_global > 0).
+    anchor: Option<Vec<f32>>,
+    /// Encoded downlink frame (params + the R_t layer-id list).
+    frame: wire::WireFrame,
+    /// Layers on the wire this version (R_t's complement for LUAR).
+    upload_layers: Vec<usize>,
 }
 
 impl Server {
@@ -148,6 +172,8 @@ impl Server {
             last_frame_lens: Vec::new(),
             dropped_stragglers: 0,
             async_rt: None,
+            async_bcast: None,
+            async_cohort: None,
             cfg,
         })
     }
@@ -195,6 +221,7 @@ impl Server {
         upload_layers: &[usize],
         meta: &ModelMeta,
     ) -> Result<(Vec<f32>, u64, f32)> {
+        let _sp = obs::span("fl.client_upload");
         let mu_g = self.cfg.client_opt.mu_global;
         let mu_p = self.cfg.client_opt.mu_prev;
         let wd = self.cfg.weight_decay;
@@ -206,17 +233,20 @@ impl Server {
             None => self.opt.broadcast(slot),
         };
         let (feats, labels) = self.ds.client_batches(client, t, meta.tau, meta.batch);
-        let out = self.engine.train_round(
-            &start,
-            anchor_g,
-            self.prev_local[client].as_deref().filter(|_| mu_p > 0.0),
-            &feats,
-            &labels,
-            lr,
-            mu_g,
-            mu_p,
-            wd,
-        )?;
+        let out = {
+            let _t = obs::span("engine.train");
+            self.engine.train_round(
+                &start,
+                anchor_g,
+                self.prev_local[client].as_deref().filter(|_| mu_p > 0.0),
+                &feats,
+                &labels,
+                lr,
+                mu_g,
+                mu_p,
+                wd,
+            )?
+        };
         let mut delta = out.delta;
         if mu_p > 0.0 {
             let mut local = start.clone();
@@ -288,6 +318,7 @@ impl Server {
         arrivals: usize,
         mean_gap: f64,
     ) -> Result<()> {
+        let _sp = obs::span("agg.absorb");
         let meta = self.engine.meta.clone();
         let (is_luar, mut luar_delta, luar_scheme, luar_mode) = match self.cfg.method {
             Method::Luar { delta, scheme, mode, .. } => (true, delta, Some(scheme), Some(mode)),
@@ -311,10 +342,12 @@ impl Server {
         }
         let uniform = agg_weights.iter().all(|&w| w == 1.0);
         let (mut mean, u_ssq, w_ssq) = if uniform && refs.len() == meta.agg_clients {
+            let _a = obs::span("engine.agg");
             let out = self.engine.aggregate(&refs, self.opt.params())?;
             (out.mean, out.update_ssq, out.weight_ssq)
         } else {
             // fallback for non-standard client counts / weighted rounds
+            let _a = obs::span("agg.fallback");
             let mut mean = vec![0.0f32; meta.dim];
             if uniform {
                 tensor::mean_rows_par(&refs, &mut mean);
@@ -353,6 +386,44 @@ impl Server {
             self.luar.select_next(luar_scheme.unwrap(), next_delta, &grad_norms, &mut self.rng);
         }
 
+        // --- per-layer telemetry (Figure 3 / kappa decomposition) -----
+        // Scores are the values selection actually used (stale for
+        // recycled layers); ages are post-compose; the uploaded flag
+        // mirrors the same `upload_layers` the comm ledger records, so
+        // layer-CSV upload counts equal `CommAccountant` frequencies.
+        if obs::enabled() {
+            let wsum: f32 = agg_weights.iter().sum();
+            let discount = if agg_weights.is_empty() {
+                1.0
+            } else {
+                (wsum / agg_weights.len() as f32) as f64
+            };
+            let scores: Vec<f64> = if is_luar {
+                self.luar.scores.clone()
+            } else {
+                u_ssq
+                    .iter()
+                    .zip(&w_ssq)
+                    .map(|(&u, &w)| ((u as f64) / (w as f64).max(1e-24)).sqrt())
+                    .collect()
+            };
+            let ages: Vec<u32> =
+                if is_luar { self.luar.staleness.clone() } else { vec![0; meta.num_layers()] };
+            obs::record_layer_round(
+                self.round,
+                &meta,
+                upload_layers,
+                &scores,
+                &ages,
+                up_bytes_total,
+                discount,
+            );
+            obs::gauge("luar.kappa", kappa);
+            obs::observe("agg.mean_gap", mean_gap);
+            obs::counter("agg.rounds", 1);
+            obs::snapshot(self.round as u64);
+        }
+
         // --- server update --------------------------------------------
         self.opt.apply(&mean);
 
@@ -382,7 +453,10 @@ impl Server {
         self.round += 1;
         let last = self.round == self.cfg.rounds;
         if last || (self.cfg.eval_every > 0 && self.round % self.cfg.eval_every == 0) {
-            let (test_loss, test_acc) = self.engine.eval_dataset(self.opt.params(), &self.ds)?;
+            let (test_loss, test_acc) = {
+                let _e = obs::span("engine.eval");
+                self.engine.eval_dataset(self.opt.params(), &self.ds)?
+            };
             self.history.push(RoundRecord {
                 round: self.round,
                 train_loss,
@@ -603,32 +677,52 @@ impl Server {
     /// Train and dispatch the next sampled client against the current
     /// model; its completion event lands on the persistent queue after
     /// the client's own link time.
+    ///
+    /// Broadcast-side state (shared params, prox anchor, encoded
+    /// downlink frame, upload set) only changes when a model version
+    /// closes (`opt.apply` / `select_next` in `finish_aggregation`), so
+    /// it is computed once per version and memoized in `async_bcast`
+    /// instead of re-encoded for every dispatch — the ROADMAP-flagged
+    /// hot path. FedMut keeps its per-slot broadcast inside
+    /// `client_upload` (`shared` stays `None`); only the length-equal
+    /// wire frame is shared.
     fn dispatch_next_async(&mut self) -> Result<()> {
+        let _sp = obs::span("fl.dispatch");
         let meta = self.engine.meta.clone();
         let (client, gen) = self.next_async_client();
         let t = gen as usize;
         let lr = self.cfg.lr_at(t);
-        let mu_g = self.cfg.client_opt.mu_global;
-        let anchor_g = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
-        let shared_broadcast =
-            if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
-        let is_luar = matches!(self.cfg.method, Method::Luar { .. });
-        let upload_layers: Vec<usize> = if is_luar {
-            self.luar.upload_set(meta.num_layers())
-        } else {
-            (0..meta.num_layers()).collect()
-        };
-        let bcast_frame = {
-            let tmp;
-            let params: &[f32] = match &shared_broadcast {
-                Some(b) => b,
-                None => {
-                    tmp = self.opt.broadcast(0);
-                    &tmp
-                }
+        let version = self.async_rt.as_ref().unwrap().version;
+        let cache_ok = matches!(&self.async_bcast, Some(c) if c.version == version);
+        if !cache_ok {
+            let mu_g = self.cfg.client_opt.mu_global;
+            let anchor = if mu_g > 0.0 { Some(self.opt.prox_anchor()) } else { None };
+            let shared =
+                if self.opt.per_client_broadcast() { None } else { Some(self.opt.broadcast(0)) };
+            let is_luar = matches!(self.cfg.method, Method::Luar { .. });
+            let upload_layers: Vec<usize> = if is_luar {
+                self.luar.upload_set(meta.num_layers())
+            } else {
+                (0..meta.num_layers()).collect()
             };
-            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
-        };
+            let frame = {
+                let tmp;
+                let params: &[f32] = match &shared {
+                    Some(b) => b,
+                    None => {
+                        tmp = self.opt.broadcast(0);
+                        &tmp
+                    }
+                };
+                wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+            };
+            obs::counter("fl.bcast_encodes", 1);
+            self.async_bcast =
+                Some(AsyncBcastCache { version, shared, anchor, frame, upload_layers });
+        }
+        // Take/put-back around `client_upload(&mut self)`: an `?` error
+        // in between drops the memo, which merely rebuilds next call.
+        let cache = self.async_bcast.take().expect("bcast cache populated above");
         // FedMut pairs mutations by parity of the dispatch sequence.
         let slot = self.async_rt.as_ref().unwrap().dispatched() as usize;
         let (delta_srv, frame_len, loss) = self.client_upload(
@@ -636,12 +730,12 @@ impl Server {
             slot,
             t,
             lr,
-            shared_broadcast.as_deref(),
-            anchor_g.as_deref(),
-            &upload_layers,
+            cache.shared.as_deref(),
+            cache.anchor.as_deref(),
+            &cache.upload_layers,
             &meta,
         )?;
-        let secs = self.net.client_secs(client, bcast_frame.len() as u64, frame_len);
+        let secs = self.net.client_secs(client, cache.frame.len() as u64, frame_len);
         let rt = self.async_rt.as_mut().unwrap();
         let payload = UploadPayload {
             client,
@@ -650,9 +744,10 @@ impl Server {
             delta: delta_srv,
             loss,
             frame_len,
-            bcast_len: bcast_frame.len() as u64,
+            bcast_len: cache.frame.len() as u64,
         };
         rt.dispatch(payload, secs);
+        self.async_bcast = Some(cache);
         Ok(())
     }
 
@@ -667,24 +762,33 @@ impl Server {
                 let rt = self.async_rt.as_ref().unwrap();
                 (rt.sample_gen, rt.sample_idx as usize)
             };
-            let a = self.cfg.active_clients;
-            let mut cohort = self.ds.sample_clients(gen as usize, a, self.cfg.seed);
-            if self.cfg.client_failure_rate > 0.0 {
-                let mut frng = Rng::seed_from_u64(self.cfg.seed ^ 0xfa11 ^ (gen << 16));
-                let before = cohort.len();
-                cohort.retain(|_| !frng.gen_bool(self.cfg.client_failure_rate));
-                // Count each generation's failures once, when its first
-                // slot is consumed (a resumed run re-enters mid-cohort
-                // with idx > 0 and must not recount).
-                if idx == 0 {
-                    self.failed_clients += (before - cohort.len()) as u64;
+            // The post-failure cohort is a pure function of (gen, seed),
+            // so it is sampled once per generation and memoized; the old
+            // per-call resample walked the same client list `c` times.
+            let cached = matches!(&self.async_cohort, Some((g, _)) if *g == gen);
+            if !cached {
+                let a = self.cfg.active_clients;
+                let mut cohort = self.ds.sample_clients(gen as usize, a, self.cfg.seed);
+                if self.cfg.client_failure_rate > 0.0 {
+                    let mut frng = Rng::seed_from_u64(self.cfg.seed ^ 0xfa11 ^ (gen << 16));
+                    let before = cohort.len();
+                    cohort.retain(|_| !frng.gen_bool(self.cfg.client_failure_rate));
+                    // Count each generation's failures once, when its
+                    // first slot is consumed (a resumed run re-enters
+                    // mid-cohort with idx > 0 and must not recount).
+                    if idx == 0 {
+                        self.failed_clients += (before - cohort.len()) as u64;
+                    }
                 }
+                self.async_cohort = Some((gen, cohort));
             }
-            let rt = self.async_rt.as_mut().unwrap();
-            if idx < cohort.len() {
-                rt.sample_idx += 1;
+            let cohort_len = self.async_cohort.as_ref().map_or(0, |(_, c)| c.len());
+            if idx < cohort_len {
+                self.async_rt.as_mut().unwrap().sample_idx += 1;
+                let (_, cohort) = self.async_cohort.as_ref().unwrap();
                 return (cohort[idx], gen);
             }
+            let rt = self.async_rt.as_mut().unwrap();
             rt.sample_gen += 1;
             rt.sample_idx = 0;
         }

@@ -28,6 +28,7 @@ pub mod luar;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod rng;
 pub mod runtime;

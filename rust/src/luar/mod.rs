@@ -153,6 +153,7 @@ impl LuarState {
         grad_norms: &[f64],
         rng: &mut Rng,
     ) {
+        let _sp = crate::obs::span("luar.select");
         self.recycle_set = select_layers(
             scheme,
             delta,
@@ -162,6 +163,8 @@ impl LuarState {
             grad_norms,
             rng,
         );
+        crate::obs::counter("luar.selections", 1);
+        crate::obs::gauge("luar.recycled_layers", self.recycle_set.len() as f64);
     }
 
     pub fn max_staleness(&self) -> u32 {

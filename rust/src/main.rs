@@ -18,6 +18,8 @@ use fedluar::exp;
 use fedluar::fl::Server;
 use fedluar::model::{artifacts_dir, ModelMeta};
 use fedluar::net::{LinkDist, RoundMode};
+use fedluar::obs;
+use fedluar::obs::ObsLevel;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -50,6 +52,8 @@ USAGE:
                [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
                [--mu-prev F] [--eval-every N] [--out results/run.csv]
                [--link-dist SPEC] [--round-mode SPEC] [--compute-s F]
+               [--obs off|metrics|full] [--obs-trace FILE]
+               [--obs-metrics FILE] [--obs-layer-csv FILE]
                [--config FILE]
   fedluar info --model <name>
   fedluar exp  <table1|table2|table3|table4|table5|delta-sweep|alpha-sweep|
@@ -80,6 +84,20 @@ frames, so the Comm column measures real bytes):
                                     round record = one closed model version
   --compute-s   mean local-compute seconds per client per round
   (config files also accept deadline_s = F and buffer_k = N)
+
+OBSERVABILITY (the obs: config block; telemetry is read-only — an
+`--obs full` run is bit-identical to `--obs off`):
+  --obs         off       no telemetry, near-zero overhead (default)
+              | metrics   counters/gauges/histograms + per-layer CSV
+              | full      metrics + span tracing (ring buffer + JSONL)
+  --obs-trace     span JSONL path     (default <out-stem>_trace.jsonl, full only)
+  --obs-metrics   exposition path     (default <out-stem>_metrics.prom;
+                                       a .json summary is written next to it)
+  --obs-layer-csv per-layer rounds    (default <out-stem>_layers.csv:
+                                       score, uploaded, recycle age, wire
+                                       bytes — Figure 3 / kappa decomposition)
+  (config files accept obs_level / obs_trace / obs_metrics / obs_layer_csv;
+   the value `none` clears a path)
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -116,8 +134,36 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.net.round_mode = RoundMode::parse(spec)?;
     }
     cfg.net.compute_s = args.get_f64("compute-s", cfg.net.compute_s)?;
+    if let Some(v) = args.get("obs") {
+        cfg.obs.level = ObsLevel::parse(v)?;
+    }
+    if let Some(v) = args.get("obs-trace") {
+        cfg.obs.trace_path = Some(v.to_string());
+    }
+    if let Some(v) = args.get("obs-metrics") {
+        cfg.obs.metrics_path = Some(v.to_string());
+    }
+    if let Some(v) = args.get("obs-layer-csv") {
+        cfg.obs.layer_csv = Some(v.to_string());
+    }
     let out = args.get_or("out", "results/run.csv").to_string();
     args.check_unused()?;
+
+    // Default telemetry artifact paths derive from the history CSV so
+    // one run's outputs land together.
+    if cfg.obs.level != ObsLevel::Off {
+        let stem = out.strip_suffix(".csv").unwrap_or(&out).to_string();
+        if cfg.obs.metrics_path.is_none() {
+            cfg.obs.metrics_path = Some(format!("{stem}_metrics.prom"));
+        }
+        if cfg.obs.layer_csv.is_none() {
+            cfg.obs.layer_csv = Some(format!("{stem}_layers.csv"));
+        }
+        if cfg.obs.level == ObsLevel::Full && cfg.obs.trace_path.is_none() {
+            cfg.obs.trace_path = Some(format!("{stem}_trace.jsonl"));
+        }
+    }
+    obs::init(&cfg.obs)?;
 
     println!(
         "# fedluar run: {} / {} / {} / net {} over {}",
@@ -175,6 +221,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         server.comm.up_bytes, server.dropped_stragglers
     );
     println!("# history -> {out}");
+    for p in obs::finish()? {
+        println!("# telemetry -> {p}");
+    }
     Ok(())
 }
 

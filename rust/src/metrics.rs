@@ -1,8 +1,48 @@
 //! Run metrics: per-round history, per-absorb records (async mode),
 //! accuracy/loss records, CSV output.
 
+use crate::obs;
 use std::io::Write;
 use std::path::Path;
+
+/// Parse accounting for the CSV reload paths. The reloaders keep the
+/// permissive row handling (a cache reload should salvage what it can)
+/// but no longer do it silently: every dropped or patched row is
+/// counted here and surfaced via the `history.csv_*` obs counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CsvReport {
+    /// Data rows parsed into records.
+    pub rows: usize,
+    /// Rows dropped entirely (unrecognized column count).
+    pub skipped: usize,
+    /// Rows kept with at least one malformed numeric field replaced by
+    /// the NaN/0 placeholder.
+    pub degraded: usize,
+}
+
+impl CsvReport {
+    pub fn is_clean(&self) -> bool {
+        self.skipped == 0 && self.degraded == 0
+    }
+}
+
+// Lenient field parsers for the reload paths: same NaN/0 placeholders
+// the reader always used, but malformed fields flip the row's
+// `degraded` flag. Module fns (not closures) so both can borrow the
+// same flag.
+fn lenient_f64(s: &str, degraded: &mut bool) -> f64 {
+    s.parse::<f64>().unwrap_or_else(|_| {
+        *degraded = true;
+        f64::NAN
+    })
+}
+
+fn lenient_int<T: std::str::FromStr + Default>(s: &str, degraded: &mut bool) -> T {
+    s.parse::<T>().unwrap_or_else(|_| {
+        *degraded = true;
+        T::default()
+    })
+}
 
 /// One evaluated checkpoint of a run.
 #[derive(Debug, Clone)]
@@ -143,33 +183,99 @@ impl History {
 }
 
 impl History {
-    /// Parse a CSV written by `write_csv` (run-cache reload path).
+    /// Parse a CSV written by `write_csv` (run-cache reload path),
+    /// surfacing any skipped/degraded rows through the obs counters
+    /// `history.csv_rows_skipped` / `history.csv_rows_degraded`. Use
+    /// `read_csv_report` to inspect the parse accounting directly.
     pub fn read_csv(path: impl AsRef<Path>) -> std::io::Result<History> {
+        let (h, rep) = Self::read_csv_report(path)?;
+        obs::counter("history.csv_rows_skipped", rep.skipped as u64);
+        obs::counter("history.csv_rows_degraded", rep.degraded as u64);
+        Ok(h)
+    }
+
+    /// `read_csv` plus the parse report: rows kept, rows dropped for a
+    /// wrong column count, and rows kept with NaN/0-patched fields.
+    pub fn read_csv_report(path: impl AsRef<Path>) -> std::io::Result<(History, CsvReport)> {
         let text = std::fs::read_to_string(path)?;
         let mut h = History::default();
+        let mut rep = CsvReport::default();
         for line in text.lines().skip(1) {
+            if line.is_empty() {
+                continue;
+            }
             let f: Vec<&str> = line.split(',').collect();
             // 8 columns = pre-net CSVs, 11 = PR 1 format, 12 = current
             if f.len() != 8 && f.len() != 11 && f.len() != 12 {
+                rep.skipped += 1;
                 continue;
             }
-            let p = |s: &str| s.parse::<f64>().unwrap_or(f64::NAN);
+            let mut bad = false;
+            let b = &mut bad;
             h.push(RoundRecord {
-                round: f[0].parse().unwrap_or(0),
-                train_loss: p(f[1]),
-                test_loss: p(f[2]),
-                test_acc: p(f[3]),
-                up_bytes: f[4].parse().unwrap_or(0),
-                comm_ratio: p(f[5]),
-                kappa: p(f[6]),
-                sim_seconds: p(f[7]),
-                wire_bytes: if f.len() >= 11 { f[8].parse().unwrap_or(0) } else { 0 },
-                tail_s: if f.len() >= 11 { p(f[9]) } else { 0.0 },
-                arrivals: if f.len() >= 11 { f[10].parse().unwrap_or(0) } else { 0 },
-                version_gap: if f.len() == 12 { p(f[11]) } else { 0.0 },
+                round: lenient_int(f[0], b),
+                train_loss: lenient_f64(f[1], b),
+                test_loss: lenient_f64(f[2], b),
+                test_acc: lenient_f64(f[3], b),
+                up_bytes: lenient_int(f[4], b),
+                comm_ratio: lenient_f64(f[5], b),
+                kappa: lenient_f64(f[6], b),
+                sim_seconds: lenient_f64(f[7], b),
+                wire_bytes: if f.len() >= 11 { lenient_int(f[8], b) } else { 0 },
+                tail_s: if f.len() >= 11 { lenient_f64(f[9], b) } else { 0.0 },
+                arrivals: if f.len() >= 11 { lenient_int(f[10], b) } else { 0 },
+                version_gap: if f.len() == 12 { lenient_f64(f[11], b) } else { 0.0 },
             });
+            rep.rows += 1;
+            if bad {
+                rep.degraded += 1;
+            }
         }
-        Ok(h)
+        Ok((h, rep))
+    }
+
+    /// Parse a CSV written by `write_absorb_csv` (the async per-absorb
+    /// telemetry), with the same obs-counter surfacing as `read_csv`.
+    pub fn read_absorb_csv(path: impl AsRef<Path>) -> std::io::Result<Vec<AbsorbRecord>> {
+        let (absorbs, rep) = Self::read_absorb_csv_report(path)?;
+        obs::counter("history.csv_rows_skipped", rep.skipped as u64);
+        obs::counter("history.csv_rows_degraded", rep.degraded as u64);
+        Ok(absorbs)
+    }
+
+    /// `read_absorb_csv` plus the parse report.
+    pub fn read_absorb_csv_report(
+        path: impl AsRef<Path>,
+    ) -> std::io::Result<(Vec<AbsorbRecord>, CsvReport)> {
+        let text = std::fs::read_to_string(path)?;
+        let mut absorbs = Vec::new();
+        let mut rep = CsvReport::default();
+        for line in text.lines().skip(1) {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 7 {
+                rep.skipped += 1;
+                continue;
+            }
+            let mut bad = false;
+            let b = &mut bad;
+            absorbs.push(AbsorbRecord {
+                version: lenient_int(f[0], b),
+                client: lenient_int(f[1], b),
+                t: lenient_f64(f[2], b),
+                version_gap: lenient_int(f[3], b),
+                weight: lenient_f64(f[4], b) as f32,
+                in_flight: lenient_int(f[5], b),
+                queue_depth: lenient_int(f[6], b),
+            });
+            rep.rows += 1;
+            if bad {
+                rep.degraded += 1;
+            }
+        }
+        Ok((absorbs, rep))
     }
 }
 
@@ -307,6 +413,85 @@ mod tests {
         assert_eq!(h.records.len(), 1);
         assert_eq!(h.records[0].up_bytes, 42);
         assert_eq!(h.records[0].wire_bytes, 0, "legacy rows default the net columns");
+    }
+
+    #[test]
+    fn absorb_csv_round_trips() {
+        let mut h = History::default();
+        for i in 0..3u64 {
+            h.absorbs.push(AbsorbRecord {
+                version: i,
+                client: (i * 7) as usize,
+                t: 0.5 + i as f64,
+                version_gap: i,
+                weight: 1.0 / (1.0 + i as f32),
+                in_flight: 4 - i as usize,
+                queue_depth: i as usize + 1,
+            });
+        }
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        let path = dir.join("absorbs_rt.csv");
+        h.write_absorb_csv(&path).unwrap();
+        let (back, rep) = History::read_absorb_csv_report(&path).unwrap();
+        assert_eq!(rep, CsvReport { rows: 3, skipped: 0, degraded: 0 });
+        assert!(rep.is_clean());
+        assert_eq!(back.len(), 3);
+        for (a, b) in h.absorbs.iter().zip(&back) {
+            assert_eq!(a.version, b.version);
+            assert_eq!(a.client, b.client);
+            assert_eq!(a.version_gap, b.version_gap);
+            assert_eq!(a.in_flight, b.in_flight);
+            assert_eq!(a.queue_depth, b.queue_depth);
+            assert!((a.t - b.t).abs() < 1e-6);
+            assert!((a.weight - b.weight).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn read_csv_report_counts_skipped_and_degraded_rows() {
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dirty.csv");
+        // row 1: clean legacy row; row 2: wrong column count (dropped);
+        // row 3: malformed numerics (kept, NaN/0-patched).
+        std::fs::write(
+            &path,
+            "round,train_loss,test_loss,test_acc,up_bytes,comm_ratio,kappa,sim_seconds\n\
+             3,1.0,1.1,0.5,42,0.5,0.01,2.5\n\
+             oops,truncated\n\
+             4,xx,1.1,0.5,yy,0.5,0.01,2.5\n",
+        )
+        .unwrap();
+        let (h, rep) = History::read_csv_report(&path).unwrap();
+        assert_eq!(rep, CsvReport { rows: 2, skipped: 1, degraded: 1 });
+        assert!(!rep.is_clean());
+        assert_eq!(h.records.len(), 2);
+        assert_eq!(h.records[0].up_bytes, 42);
+        // degraded row keeps the old placeholder semantics, just counted
+        assert!(h.records[1].train_loss.is_nan());
+        assert_eq!(h.records[1].up_bytes, 0);
+        assert_eq!(h.records[1].round, 4, "well-formed fields still parse");
+    }
+
+    #[test]
+    fn read_absorb_csv_report_counts_bad_rows() {
+        let dir = std::env::temp_dir().join("fedluar_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("absorbs_dirty.csv");
+        std::fs::write(
+            &path,
+            "version,client,t,version_gap,weight,in_flight,queue_depth\n\
+             1,2,0.500000,0,1.000000,3,1\n\
+             not,enough,columns\n\
+             2,bad,0.750000,1,0.707000,2,2\n",
+        )
+        .unwrap();
+        let (absorbs, rep) = History::read_absorb_csv_report(&path).unwrap();
+        assert_eq!(rep, CsvReport { rows: 2, skipped: 1, degraded: 1 });
+        assert_eq!(absorbs.len(), 2);
+        assert_eq!(absorbs[0].client, 2);
+        assert_eq!(absorbs[1].client, 0, "malformed client falls back to 0");
+        assert_eq!(absorbs[1].version, 2);
     }
 
     #[test]

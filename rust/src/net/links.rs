@@ -180,7 +180,19 @@ impl LinkFleet {
                 }
             })
             .collect();
-        LinkFleet { links }
+        let fleet = LinkFleet { links };
+        // Fleet profile at construction: one gauge per run, so the
+        // metrics summary records what hardware the telemetry describes.
+        if crate::obs::enabled() && !fleet.is_empty() {
+            let n = fleet.links.len() as f64;
+            let mean_up: f64 = fleet.links.iter().map(|l| l.up_bps).sum::<f64>() / n;
+            let min_up =
+                fleet.links.iter().map(|l| l.up_bps).fold(f64::INFINITY, f64::min);
+            crate::obs::gauge("links.clients", n);
+            crate::obs::gauge("links.mean_up_bps", mean_up);
+            crate::obs::gauge("links.min_up_bps", min_up);
+        }
+        fleet
     }
 
     pub fn len(&self) -> usize {

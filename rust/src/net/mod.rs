@@ -76,10 +76,14 @@ impl NetSim {
     /// Per-slot completion time: download the broadcast, compute, push
     /// the upload frame.
     pub fn client_secs(&self, client: usize, bcast_bytes: u64, frame_bytes: u64) -> f64 {
+        let mut sp = crate::obs::span("link.transit");
         let l = self.fleet.link(client);
-        l.download_secs(bcast_bytes)
+        let secs = l.download_secs(bcast_bytes)
             + self.cfg.compute_s * l.compute_mult
-            + l.upload_secs(frame_bytes)
+            + l.upload_secs(frame_bytes);
+        sp.set_sim(secs);
+        crate::obs::observe("link.transit_s", secs);
+        secs
     }
 
     /// Simulate one round for `actives[i]` uploading `frame_bytes[i]`

@@ -218,6 +218,7 @@ impl Ord for Ev {
 
 /// Run one round's event loop over per-slot completion times.
 pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
+    let mut sp = crate::obs::span("sched.round");
     let n = times.len();
     assert!(n > 0, "round with no active clients");
     let mut heap: BinaryHeap<Reverse<Ev>> = times
@@ -297,6 +298,8 @@ pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
         ts[n / 2]
     };
     let aggregated = included.iter().filter(|&&b| b).count();
+    sp.set_sim(round_secs);
+    crate::obs::gauge("sched.aggregated", aggregated as f64);
     RoundOutcome {
         round_secs,
         straggler_tail_s: (t_max - median).max(0.0),

@@ -46,6 +46,7 @@
 //!   bytes the paper's §3.2 broadcast actually pays.
 
 use crate::model::ModelMeta;
+use crate::obs;
 use anyhow::{bail, Result};
 
 pub const MAGIC: u16 = 0xFED1;
@@ -312,6 +313,7 @@ pub fn encode_update(
     layers: &[usize],
     hint: &WireHint,
 ) -> Result<WireFrame> {
+    let _sp = obs::span("wire.encode");
     if update.len() != meta.dim {
         bail!("update len {} != model dim {}", update.len(), meta.dim);
     }
@@ -462,6 +464,7 @@ pub fn encode_broadcast(
     meta: &ModelMeta,
     recycle_set: &[usize],
 ) -> Result<WireFrame> {
+    let _sp = obs::span("wire.encode_bcast");
     if params.len() != meta.dim {
         bail!("params len {} != model dim {}", params.len(), meta.dim);
     }
@@ -513,6 +516,7 @@ fn parse_header<'a>(frame: &'a [u8], meta: &ModelMeta) -> Result<Parsed<'a>> {
 /// scalar). The round-trip invariants per flavor are pinned in tests:
 /// dense/sparse/quantized/signbits are exact, low-rank is bounded.
 pub fn decode_update(frame: &[u8], meta: &ModelMeta) -> Result<Decoded> {
+    let _sp = obs::span("wire.decode");
     let Parsed { flavor, layer_ids, mut cur } = parse_header(frame, meta)?;
     let mut v = vec![0.0f32; meta.dim];
     match flavor {

@@ -1,0 +1,168 @@
+//! Per-layer LUAR introspection: one record per (round, layer) with
+//! the paper's per-layer quantities — the Eq. 1 selection score, the
+//! recycled-or-uploaded decision (Figure 3's aggregation frequency is
+//! the column sum of `uploaded`), the recycle age (staleness k in
+//! Eq. 6), the wire bytes the layer cost, and the staleness discount
+//! the round's aggregate was weighted by.
+//!
+//! Rows accumulate in the obs context and are written as a CSV at
+//! `obs::finish` (the `layer_csv` config path). Summing `uploaded` per
+//! layer over rounds reproduces `CommAccountant::layer_upload_rounds`
+//! exactly — both derive from the same per-round upload set (pinned in
+//! `tests/integration_obs.rs`).
+
+use crate::model::ModelMeta;
+use std::io::Write;
+use std::path::Path;
+
+/// One layer's telemetry for one aggregation round / model version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerRound {
+    pub round: usize,
+    pub layer: usize,
+    pub name: String,
+    /// Selection score s_{t,l} = ||u_l|| / ||w_l|| (Eq. 1). For
+    /// recycled layers this is the stale score the selection actually
+    /// used — exactly what `LuarState::scores` holds.
+    pub score: f64,
+    /// Whether the layer was uploaded this round (false = recycled).
+    pub uploaded: bool,
+    /// Aggregations since the layer last uploaded, after this round's
+    /// compose (0 for uploaded layers).
+    pub recycle_age: u32,
+    /// Measured uplink bytes apportioned to this layer: the round's
+    /// total frame bytes split across uploaded layers proportional to
+    /// parameter count (headers and index overheads included pro rata);
+    /// 0 for recycled layers.
+    pub wire_bytes: u64,
+    /// Mean staleness-discount weight of the round's aggregate (1.0 in
+    /// the barrier modes / `s=const`).
+    pub stale_discount: f64,
+}
+
+pub const CSV_HEADER: &str = "round,layer,name,score,uploaded,recycle_age,wire_bytes,stale_discount";
+
+/// Build the per-layer rows for one aggregation round.
+pub(crate) fn build_rows(
+    round: usize,
+    meta: &ModelMeta,
+    upload_layers: &[usize],
+    scores: &[f64],
+    ages: &[u32],
+    up_bytes_total: u64,
+    stale_discount: f64,
+) -> Vec<LayerRound> {
+    let uploaded_params: u64 =
+        upload_layers.iter().map(|&l| meta.layers[l].size as u64).sum();
+    meta.layers
+        .iter()
+        .enumerate()
+        .map(|(l, lm)| {
+            let uploaded = upload_layers.contains(&l);
+            let wire_bytes = if uploaded && uploaded_params > 0 {
+                up_bytes_total * lm.size as u64 / uploaded_params
+            } else {
+                0
+            };
+            LayerRound {
+                round,
+                layer: l,
+                name: lm.name.clone(),
+                score: scores.get(l).copied().unwrap_or(0.0),
+                uploaded,
+                recycle_age: ages.get(l).copied().unwrap_or(0),
+                wire_bytes,
+                stale_discount,
+            }
+        })
+        .collect()
+}
+
+/// Write the accumulated rows as a CSV (`uploaded` as 1/0).
+pub(crate) fn write_csv(rows: &[LayerRound], path: impl AsRef<Path>) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{CSV_HEADER}")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{},{:.6},{},{},{},{:.6}",
+            r.round,
+            r.layer,
+            r.name,
+            r.score,
+            u8::from(r.uploaded),
+            r.recycle_age,
+            r.wire_bytes,
+            r.stale_discount
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::from_json(
+            r#"{
+            "model":"toy","dim":10,"num_classes":2,
+            "input_shape":[4],"input_dtype":"f32",
+            "tau":2,"batch":3,"eval_batch":8,"agg_clients":4,"momentum":0.9,
+            "layers":[
+              {"name":"a","kind":"dense","offset":0,"size":6,"arrays":[]},
+              {"name":"b","kind":"dense","offset":6,"size":4,"arrays":[]}
+            ],
+            "artifacts":{"train":"t","eval":"e","agg":"g","init":"i"},
+            "init_sha256":"x"
+        }"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rows_apportion_bytes_to_uploaded_layers() {
+        let m = meta();
+        let rows = build_rows(3, &m, &[0], &[0.5, 0.25], &[0, 2], 600, 0.9);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].uploaded && !rows[1].uploaded);
+        assert_eq!(rows[0].wire_bytes, 600, "only uploaded layers carry bytes");
+        assert_eq!(rows[1].wire_bytes, 0);
+        assert_eq!(rows[1].recycle_age, 2);
+        assert_eq!(rows[0].score, 0.5);
+        assert_eq!(rows[1].stale_discount, 0.9);
+    }
+
+    #[test]
+    fn bytes_split_proportional_to_param_count() {
+        let m = meta();
+        let rows = build_rows(0, &m, &[0, 1], &[0.0, 0.0], &[0, 0], 1000, 1.0);
+        assert_eq!(rows[0].wire_bytes, 600); // 6 of 10 params
+        assert_eq!(rows[1].wire_bytes, 400);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let m = meta();
+        let rows = build_rows(1, &m, &[1], &[0.5, 0.25], &[3, 0], 100, 1.0);
+        let dir = std::env::temp_dir().join("fedluar_obs_layers_test");
+        let path = dir.join("layers.csv");
+        write_csv(&rows, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        assert_eq!(lines.len(), 3);
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), 8, "{line}");
+        }
+        assert!(lines[1].starts_with("1,0,a,0.500000,0,3,0,"));
+        assert!(lines[2].starts_with("1,1,b,0.250000,1,0,100,"));
+    }
+}

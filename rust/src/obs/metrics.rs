@@ -1,0 +1,291 @@
+//! Metrics registry: named counters, gauges, and fixed-bucket
+//! histograms, snapshotted per model version.
+//!
+//! Everything is keyed by `&'static str` so the enabled hot path does
+//! no allocation — a BTreeMap lookup and an integer bump. Histograms
+//! use fixed power-of-4 buckets (1, 4, 16, ... then +Inf), wide enough
+//! to cover nanosecond span timings up to minutes in 20 buckets.
+//!
+//! Export formats:
+//! * `exposition()` — Prometheus-style text (`fedluar_` prefix, dots
+//!   mapped to underscores, cumulative `_bucket{le=...}` lines);
+//! * `json_summary()` — a compact JSON object with counters, gauges,
+//!   histogram summaries, and the per-version snapshots.
+
+use std::collections::BTreeMap;
+
+/// Histogram bucket count (power-of-4 upper bounds, last is +Inf).
+pub const BUCKETS: usize = 20;
+
+fn bucket_bound(i: usize) -> f64 {
+    4f64.powi(i as i32)
+}
+
+/// Fixed-bucket histogram with count/sum/min/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Per-bucket (non-cumulative) counts; bucket `i` holds values
+    /// `<= 4^i`, the last bucket everything larger.
+    pub buckets: [u64; BUCKETS],
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { count: 0, sum: 0.0, min: 0.0, max: 0.0, buckets: [0; BUCKETS] }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        let mut idx = BUCKETS - 1;
+        for i in 0..BUCKETS - 1 {
+            if v <= bucket_bound(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Counter/gauge state frozen at a model-version close.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub version: u64,
+    pub counters: BTreeMap<&'static str, u64>,
+    pub gauges: BTreeMap<&'static str, f64>,
+}
+
+/// The per-thread metrics store behind the `obs::` free functions.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, Histogram>,
+    /// Span-duration histograms keyed by span name; exported with an
+    /// `_ns` suffix (`wire.encode` spans feed `wire.encode_ns`).
+    span_ns: BTreeMap<&'static str, Histogram>,
+    pub snapshots: Vec<Snapshot>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    pub fn gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.histograms.entry(name).or_default().observe(v);
+    }
+
+    pub fn observe_span_ns(&mut self, name: &'static str, wall_ns: u64) {
+        self.span_ns.entry(name).or_default().observe(wall_ns as f64);
+    }
+
+    /// Freeze the current counters/gauges under a version label.
+    pub fn snapshot(&mut self, version: u64) {
+        self.snapshots.push(Snapshot {
+            version,
+            counters: self.counters.clone(),
+            gauges: self.gauges.clone(),
+        });
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name).or_else(|| self.span_ns.get(name))
+    }
+
+    fn sanitized(name: &str, suffix: &str) -> String {
+        let base: String =
+            name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+        format!("fedluar_{base}{suffix}")
+    }
+
+    /// Prometheus-style text exposition of the full registry.
+    pub fn exposition(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let m = Self::sanitized(name, "");
+            out.push_str(&format!("# TYPE {m} counter\n{m} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let m = Self::sanitized(name, "");
+            out.push_str(&format!("# TYPE {m} gauge\n{m} {v}\n"));
+        }
+        let histos = self
+            .histograms
+            .iter()
+            .map(|(n, h)| (Self::sanitized(n, ""), h))
+            .chain(self.span_ns.iter().map(|(n, h)| (Self::sanitized(n, "_ns"), h)));
+        for (m, h) in histos {
+            out.push_str(&format!("# TYPE {m} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                cum += c;
+                if i == BUCKETS - 1 {
+                    out.push_str(&format!("{m}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                } else {
+                    out.push_str(&format!("{m}_bucket{{le=\"{}\"}} {cum}\n", bucket_bound(i)));
+                }
+            }
+            out.push_str(&format!("{m}_sum {}\n{m}_count {}\n", h.sum, h.count));
+        }
+        out
+    }
+
+    /// JSON summary: counters, gauges, histogram stats, snapshots.
+    /// Names are static identifiers, so no string escaping is needed.
+    pub fn json_summary(&self) -> String {
+        fn kv_u64(m: &BTreeMap<&'static str, u64>) -> String {
+            let inner: Vec<String> = m.iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+            format!("{{{}}}", inner.join(","))
+        }
+        fn kv_f64(m: &BTreeMap<&'static str, f64>) -> String {
+            let inner: Vec<String> = m.iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+            format!("{{{}}}", inner.join(","))
+        }
+        let histos: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|(n, h)| (n.to_string(), h))
+            .chain(self.span_ns.iter().map(|(n, h)| (format!("{n}_ns"), h)))
+            .map(|(n, h)| {
+                format!(
+                    "\"{n}\":{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"mean\":{}}}",
+                    h.count,
+                    h.sum,
+                    h.min,
+                    h.max,
+                    h.mean()
+                )
+            })
+            .collect();
+        let snaps: Vec<String> = self
+            .snapshots
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"version\":{},\"counters\":{},\"gauges\":{}}}",
+                    s.version,
+                    kv_u64(&s.counters),
+                    kv_f64(&s.gauges)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"counters\":{},\"gauges\":{},\"histograms\":{{{}}},\"snapshots\":[{}]}}",
+            kv_u64(&self.counters),
+            kv_f64(&self.gauges),
+            histos.join(","),
+            snaps.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut r = Registry::new();
+        r.counter("a.b", 2);
+        r.counter("a.b", 3);
+        r.gauge("g", 1.5);
+        r.gauge("g", 2.5);
+        assert_eq!(r.counter_value("a.b"), 5);
+        assert_eq!(r.counter_value("missing"), 0);
+        assert_eq!(r.gauge_value("g"), Some(2.5), "gauges keep the last value");
+    }
+
+    #[test]
+    fn histogram_buckets_power_of_four() {
+        let mut h = Histogram::new();
+        h.observe(1.0); // bucket 0 (<= 1)
+        h.observe(4.0); // bucket 1 (<= 4)
+        h.observe(5.0); // bucket 2 (<= 16)
+        h.observe(1e30); // overflow -> last bucket
+        assert_eq!(h.count, 4);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[2], 1);
+        assert_eq!(h.buckets[BUCKETS - 1], 1);
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 1e30);
+    }
+
+    #[test]
+    fn exposition_has_prefix_and_cumulative_buckets() {
+        let mut r = Registry::new();
+        r.counter("wire.frames", 7);
+        r.observe("async.version_gap", 2.0);
+        r.observe_span_ns("wire.encode", 100);
+        let text = r.exposition();
+        assert!(text.contains("# TYPE fedluar_wire_frames counter"));
+        assert!(text.contains("fedluar_wire_frames 7"));
+        assert!(text.contains("fedluar_async_version_gap_count 1"));
+        assert!(text.contains("fedluar_wire_encode_ns_count 1"));
+        assert!(text.contains("_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn json_summary_parses_with_in_tree_parser() {
+        let mut r = Registry::new();
+        r.counter("c", 1);
+        r.gauge("g", 0.5);
+        r.observe("h", 3.0);
+        r.observe_span_ns("sp", 42);
+        r.snapshot(0);
+        r.counter("c", 1);
+        r.snapshot(1);
+        let js = crate::json::Json::parse(&r.json_summary()).unwrap();
+        assert_eq!(js.get("counters").unwrap().get("c").unwrap().as_f64().unwrap(), 2.0);
+        let snaps = match js.get("snapshots").unwrap() {
+            crate::json::Json::Arr(a) => a,
+            other => panic!("snapshots not an array: {other:?}"),
+        };
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].get("counters").unwrap().get("c").unwrap().as_f64().unwrap(), 1.0);
+        assert!(js.get("histograms").unwrap().get("sp_ns").is_ok());
+    }
+}

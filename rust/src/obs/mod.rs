@@ -1,0 +1,431 @@
+//! Observability subsystem: span tracing, a metrics registry, and
+//! per-layer LUAR introspection for the FL runtime.
+//!
+//! Zero external dependencies (offline build — the vendored-`anyhow`
+//! precedent): pure std, hand-rolled JSONL/exposition/CSV writers.
+//!
+//! Three pillars:
+//! * `trace`   — RAII span guards on the hot paths (`fl.client_upload`,
+//!   `wire.encode`/`wire.decode`, `link.transit`, `sched.pop`,
+//!   `agg.absorb`, `luar.select`, `engine.train`/`engine.eval`),
+//!   recording wall-clock and sim-clock durations to a bounded ring
+//!   and an optional JSONL event log;
+//! * `metrics` — named counters / gauges / fixed-bucket histograms
+//!   (`wire.encode_ns`, `sched.queue_depth`, `async.version_gap`,
+//!   `agg.absorb_ns`, ...), snapshotted per model version and exported
+//!   as a Prometheus-style text exposition plus a JSON summary;
+//! * `layers`  — per-round per-layer records (selection score,
+//!   recycled-or-uploaded, recycle age, wire bytes, staleness
+//!   discount) written to a `*_layers.csv`: Figure 3 and the kappa
+//!   decomposition straight from telemetry.
+//!
+//! The context is **thread-local**: `cargo test` runs tests on
+//! parallel threads in one process, and a global level would bleed
+//! telemetry across tests. One run = one thread = one context;
+//! `init` installs it, `finish` writes the artifacts and clears it.
+//!
+//! Disabled cost: every instrumentation point starts with one
+//! thread-local byte read and a branch — no allocation, no clock read
+//! (`benches/obs_overhead.rs` pins this). Telemetry is read-only with
+//! respect to the simulation: it never touches an RNG, the sim clock,
+//! or any model state, which is why `level=off` and `level=full` runs
+//! are bit-identical (`tests/integration_obs.rs`).
+
+pub mod layers;
+pub mod metrics;
+pub mod trace;
+
+pub use layers::LayerRound;
+pub use metrics::{Histogram, Registry, Snapshot};
+pub use trace::{SpanRecord, Tracer};
+
+use crate::model::ModelMeta;
+use std::cell::{Cell, RefCell};
+use std::io::Write;
+use std::time::Instant;
+
+/// How much telemetry to collect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum ObsLevel {
+    /// No context installed; every instrumentation point is one
+    /// thread-local read + branch.
+    #[default]
+    Off,
+    /// Counters, gauges, histograms, layer records, snapshots.
+    Metrics,
+    /// Metrics plus span tracing (ring, span histograms, JSONL log).
+    Full,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "off" => Self::Off,
+            "metrics" => Self::Metrics,
+            "full" => Self::Full,
+            other => anyhow::bail!("unknown obs level {other} (off | metrics | full)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Metrics => "metrics",
+            Self::Full => "full",
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Self::Off => 0,
+            Self::Metrics => 1,
+            Self::Full => 2,
+        }
+    }
+}
+
+/// The `obs:` config block (flat keys `obs_level`, `obs_trace`,
+/// `obs_metrics`, `obs_layer_csv`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsCfg {
+    pub level: ObsLevel,
+    /// JSONL span log (written during the run, `level=full` only).
+    pub trace_path: Option<String>,
+    /// Prometheus-style exposition file; a `.json` summary is written
+    /// next to it.
+    pub metrics_path: Option<String>,
+    /// Per-layer LUAR introspection CSV.
+    pub layer_csv: Option<String>,
+}
+
+struct Ctx {
+    cfg: ObsCfg,
+    tracer: Tracer,
+    registry: Registry,
+    layer_rows: Vec<LayerRound>,
+}
+
+thread_local! {
+    static LEVEL: Cell<u8> = const { Cell::new(0) };
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn with_ctx<T>(f: impl FnOnce(&mut Ctx) -> T) -> Option<T> {
+    CTX.with(|c| c.borrow_mut().as_mut().map(f))
+}
+
+/// Install a telemetry context on this thread. `level=off` clears any
+/// existing context (and is how `finish`-less callers reset).
+pub fn init(cfg: &ObsCfg) -> std::io::Result<()> {
+    if cfg.level == ObsLevel::Off {
+        CTX.with(|c| *c.borrow_mut() = None);
+        LEVEL.with(|l| l.set(0));
+        return Ok(());
+    }
+    let trace_path =
+        if cfg.level == ObsLevel::Full { cfg.trace_path.as_deref() } else { None };
+    let ctx = Ctx {
+        cfg: cfg.clone(),
+        tracer: Tracer::new(trace_path)?,
+        registry: Registry::new(),
+        layer_rows: Vec::new(),
+    };
+    CTX.with(|c| *c.borrow_mut() = Some(ctx));
+    LEVEL.with(|l| l.set(cfg.level.as_u8()));
+    Ok(())
+}
+
+/// The level installed on this thread.
+pub fn level() -> ObsLevel {
+    match LEVEL.with(|l| l.get()) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::Metrics,
+        _ => ObsLevel::Full,
+    }
+}
+
+/// Whether any telemetry is being collected (level >= metrics).
+#[inline]
+pub fn enabled() -> bool {
+    LEVEL.with(|l| l.get()) > 0
+}
+
+/// Whether spans are being recorded (level = full).
+#[inline]
+pub fn tracing() -> bool {
+    LEVEL.with(|l| l.get()) >= 2
+}
+
+/// RAII span guard: measures wall-clock from construction to drop and
+/// records into the tracer + the span-duration histogram. Disarmed
+/// (no clock read, nothing recorded) below `level=full`.
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<Instant>,
+    sim_s: f64,
+}
+
+impl SpanGuard {
+    /// Attach a simulated duration (e.g. link transit seconds) to the
+    /// span record. No-op when the span is disarmed.
+    pub fn set_sim(&mut self, sim_s: f64) {
+        if self.start.is_some() {
+            self.sim_s = sim_s;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start.take() {
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            let (name, sim_s) = (self.name, self.sim_s);
+            with_ctx(|c| {
+                c.tracer.record(name, wall_ns, sim_s);
+                c.registry.observe_span_ns(name, wall_ns);
+            });
+        }
+    }
+}
+
+/// Open a span. `name` must be a static identifier (it crosses into
+/// metric names and JSONL unescaped).
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = if tracing() { Some(Instant::now()) } else { None };
+    SpanGuard { name, start, sim_s: 0.0 }
+}
+
+/// Bump a named counter.
+pub fn counter(name: &'static str, delta: u64) {
+    if enabled() {
+        with_ctx(|c| c.registry.counter(name, delta));
+    }
+}
+
+/// Set a named gauge to its latest value.
+pub fn gauge(name: &'static str, v: f64) {
+    if enabled() {
+        with_ctx(|c| c.registry.gauge(name, v));
+    }
+}
+
+/// Record one observation into a named histogram.
+pub fn observe(name: &'static str, v: f64) {
+    if enabled() {
+        with_ctx(|c| c.registry.observe(name, v));
+    }
+}
+
+/// Freeze counters/gauges under a model-version label.
+pub fn snapshot(version: u64) {
+    if enabled() {
+        with_ctx(|c| c.registry.snapshot(version));
+    }
+}
+
+/// Record one aggregation round's per-layer telemetry (see
+/// `layers::LayerRound` for the column semantics).
+pub fn record_layer_round(
+    round: usize,
+    meta: &ModelMeta,
+    upload_layers: &[usize],
+    scores: &[f64],
+    ages: &[u32],
+    up_bytes_total: u64,
+    stale_discount: f64,
+) {
+    if !enabled() {
+        return;
+    }
+    with_ctx(|c| {
+        let rows = layers::build_rows(
+            round,
+            meta,
+            upload_layers,
+            scores,
+            ages,
+            up_bytes_total,
+            stale_discount,
+        );
+        c.layer_rows.extend(rows);
+    });
+}
+
+/// Write the configured artifacts (flushing the JSONL log), clear the
+/// thread's context, and return the paths written.
+pub fn finish() -> std::io::Result<Vec<String>> {
+    let ctx = CTX.with(|c| c.borrow_mut().take());
+    LEVEL.with(|l| l.set(0));
+    let mut written = Vec::new();
+    let Some(mut ctx) = ctx else {
+        return Ok(written);
+    };
+    ctx.tracer.flush()?;
+    if let Some(p) = &ctx.cfg.trace_path {
+        if ctx.cfg.level == ObsLevel::Full {
+            written.push(p.clone());
+        }
+    }
+    if let Some(p) = &ctx.cfg.metrics_path {
+        write_text(p, &ctx.registry.exposition())?;
+        written.push(p.clone());
+        let json_path = match p.strip_suffix(".prom") {
+            Some(stem) => format!("{stem}.json"),
+            None => format!("{p}.json"),
+        };
+        write_text(&json_path, &ctx.registry.json_summary())?;
+        written.push(json_path);
+    }
+    if let Some(p) = &ctx.cfg.layer_csv {
+        layers::write_csv(&ctx.layer_rows, p)?;
+        written.push(p.clone());
+    }
+    Ok(written)
+}
+
+fn write_text(path: &str, text: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text.as_bytes())
+}
+
+// ---------------------------------------------------------------------
+// in-process accessors (tests / diagnostics)
+// ---------------------------------------------------------------------
+
+/// Current value of a counter (0 when absent or obs is off).
+pub fn counter_value(name: &str) -> u64 {
+    with_ctx(|c| c.registry.counter_value(name)).unwrap_or(0)
+}
+
+/// Latest value of a gauge.
+pub fn gauge_value(name: &str) -> Option<f64> {
+    with_ctx(|c| c.registry.gauge_value(name)).flatten()
+}
+
+/// Copy of the span ring, oldest first (empty when off).
+pub fn recent_spans() -> Vec<SpanRecord> {
+    with_ctx(|c| c.tracer.recent()).unwrap_or_default()
+}
+
+/// Total spans recorded so far on this thread.
+pub fn spans_recorded() -> u64 {
+    with_ctx(|c| c.tracer.recorded()).unwrap_or(0)
+}
+
+/// Copy of the accumulated per-layer rows.
+pub fn layer_rows() -> Vec<LayerRound> {
+    with_ctx(|c| c.layer_rows.clone()).unwrap_or_default()
+}
+
+/// Render the exposition text for the current registry.
+pub fn metrics_exposition() -> String {
+    with_ctx(|c| c.registry.exposition()).unwrap_or_default()
+}
+
+/// Render the JSON summary for the current registry.
+pub fn metrics_json() -> String {
+    with_ctx(|c| c.registry.json_summary()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_cfg() -> ObsCfg {
+        ObsCfg { level: ObsLevel::Full, ..ObsCfg::default() }
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        init(&ObsCfg::default()).unwrap();
+        {
+            let mut s = span("test.span");
+            s.set_sim(1.0);
+        }
+        counter("test.count", 5);
+        observe("test.histo", 1.0);
+        assert_eq!(level(), ObsLevel::Off);
+        assert!(!enabled());
+        assert_eq!(counter_value("test.count"), 0);
+        assert!(recent_spans().is_empty());
+        assert!(finish().unwrap().is_empty());
+    }
+
+    #[test]
+    fn full_level_records_spans_and_metrics() {
+        init(&full_cfg()).unwrap();
+        {
+            let mut s = span("test.span");
+            s.set_sim(2.0);
+        }
+        counter("test.count", 3);
+        gauge("test.gauge", 7.5);
+        observe("test.histo", 10.0);
+        snapshot(0);
+        let spans = recent_spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "test.span");
+        assert_eq!(spans[0].sim_s, 2.0);
+        assert_eq!(counter_value("test.count"), 3);
+        assert_eq!(gauge_value("test.gauge"), Some(7.5));
+        let text = metrics_exposition();
+        assert!(text.contains("fedluar_test_span_ns_count 1"), "span feeds its _ns histogram");
+        assert!(text.contains("fedluar_test_count 3"));
+        finish().unwrap();
+        assert_eq!(level(), ObsLevel::Off, "finish clears the context");
+    }
+
+    #[test]
+    fn metrics_level_disarms_spans_but_keeps_counters() {
+        init(&ObsCfg { level: ObsLevel::Metrics, ..ObsCfg::default() }).unwrap();
+        {
+            let _s = span("test.span");
+        }
+        counter("test.count", 1);
+        assert!(enabled());
+        assert!(!tracing());
+        assert_eq!(spans_recorded(), 0);
+        assert_eq!(counter_value("test.count"), 1);
+        finish().unwrap();
+    }
+
+    #[test]
+    fn finish_writes_all_artifacts() {
+        let dir = std::env::temp_dir().join("fedluar_obs_finish_test");
+        let trace = dir.join("t.jsonl").to_str().unwrap().to_string();
+        let prom = dir.join("m.prom").to_str().unwrap().to_string();
+        let csv = dir.join("l.csv").to_str().unwrap().to_string();
+        init(&ObsCfg {
+            level: ObsLevel::Full,
+            trace_path: Some(trace.clone()),
+            metrics_path: Some(prom.clone()),
+            layer_csv: Some(csv.clone()),
+        })
+        .unwrap();
+        {
+            let _s = span("x.y");
+        }
+        counter("c", 1);
+        let written = finish().unwrap();
+        assert_eq!(written.len(), 4, "trace + prom + json + layer csv: {written:?}");
+        assert!(std::fs::read_to_string(&trace).unwrap().contains("\"span\":\"x.y\""));
+        assert!(std::fs::read_to_string(&prom).unwrap().contains("fedluar_c 1"));
+        let json_path = prom.strip_suffix(".prom").unwrap().to_string() + ".json";
+        crate::json::Json::parse(&std::fs::read_to_string(json_path).unwrap()).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with(layers::CSV_HEADER));
+    }
+
+    #[test]
+    fn init_off_clears_previous_context() {
+        init(&full_cfg()).unwrap();
+        counter("c", 1);
+        init(&ObsCfg::default()).unwrap();
+        assert_eq!(counter_value("c"), 0);
+    }
+}

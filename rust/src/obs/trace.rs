@@ -1,0 +1,146 @@
+//! Span tracing: a bounded in-memory ring of finished spans plus an
+//! optional JSONL event log.
+//!
+//! Spans are recorded by the RAII guards in `obs::span` — one record
+//! per guard drop, carrying the wall-clock duration and (for simulated
+//! work like link transit) an attached sim-clock duration. The ring
+//! keeps the most recent `RING_CAP` records for in-process inspection;
+//! when a `trace_path` is configured every record is also streamed as
+//! one JSON object per line. Write errors are swallowed: telemetry
+//! must never fail the run it observes.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Most recent finished spans kept in memory.
+pub const RING_CAP: usize = 4096;
+
+/// One finished span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanRecord {
+    /// Monotonic per-tracer sequence number.
+    pub seq: u64,
+    /// Static span name (`fl.client_upload`, `wire.encode`, ...).
+    pub name: &'static str,
+    /// Measured wall-clock duration.
+    pub wall_ns: u64,
+    /// Simulated duration attached via `SpanGuard::set_sim` (0 when
+    /// the span measured pure wall-clock work).
+    pub sim_s: f64,
+}
+
+/// The per-thread trace sink behind the span guards.
+#[derive(Debug)]
+pub struct Tracer {
+    ring: VecDeque<SpanRecord>,
+    writer: Option<BufWriter<File>>,
+    seq: u64,
+    /// JSONL lines written so far (diagnostics).
+    pub events_written: u64,
+}
+
+impl Tracer {
+    /// Build a tracer; when `trace_path` is set the JSONL log is
+    /// created eagerly (parent directories included) so path problems
+    /// surface at init, not at the first span.
+    pub fn new(trace_path: Option<&str>) -> std::io::Result<Self> {
+        let writer = match trace_path {
+            Some(p) => {
+                if let Some(parent) = Path::new(p).parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                }
+                Some(BufWriter::new(File::create(p)?))
+            }
+            None => None,
+        };
+        Ok(Tracer { ring: VecDeque::with_capacity(RING_CAP), writer, seq: 0, events_written: 0 })
+    }
+
+    /// Record one finished span.
+    pub fn record(&mut self, name: &'static str, wall_ns: u64, sim_s: f64) {
+        let sim_s = if sim_s.is_finite() { sim_s } else { 0.0 };
+        let rec = SpanRecord { seq: self.seq, name, wall_ns, sim_s };
+        self.seq += 1;
+        if self.ring.len() == RING_CAP {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(rec);
+        if let Some(w) = &mut self.writer {
+            // Span names are static ASCII identifiers: no escaping.
+            let ok = writeln!(
+                w,
+                "{{\"seq\":{},\"span\":\"{}\",\"wall_ns\":{},\"sim_s\":{}}}",
+                rec.seq, rec.name, rec.wall_ns, rec.sim_s
+            );
+            if ok.is_ok() {
+                self.events_written += 1;
+            }
+        }
+    }
+
+    /// Copy of the in-memory ring, oldest first.
+    pub fn recent(&self) -> Vec<SpanRecord> {
+        self.ring.iter().copied().collect()
+    }
+
+    /// Total spans recorded (including ones evicted from the ring).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Flush the JSONL log (called from `obs::finish`).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        match &mut self.writer {
+            Some(w) => w.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_ordered() {
+        let mut t = Tracer::new(None).unwrap();
+        for i in 0..(RING_CAP as u64 + 10) {
+            t.record("x", i, 0.0);
+        }
+        let recent = t.recent();
+        assert_eq!(recent.len(), RING_CAP);
+        assert_eq!(recent[0].seq, 10, "oldest records evicted first");
+        assert_eq!(recent.last().unwrap().seq, RING_CAP as u64 + 9);
+        assert_eq!(t.recorded(), RING_CAP as u64 + 10);
+    }
+
+    #[test]
+    fn jsonl_lines_are_written() {
+        let dir = std::env::temp_dir().join("fedluar_obs_trace_test");
+        let path = dir.join("trace.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        {
+            let mut t = Tracer::new(Some(&path_s)).unwrap();
+            t.record("wire.encode", 1234, 0.0);
+            t.record("link.transit", 99, 2.5);
+            t.flush().unwrap();
+            assert_eq!(t.events_written, 2);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "{\"seq\":0,\"span\":\"wire.encode\",\"wall_ns\":1234,\"sim_s\":0}");
+        assert!(lines[1].contains("\"sim_s\":2.5"));
+    }
+
+    #[test]
+    fn non_finite_sim_clamps_to_zero() {
+        let mut t = Tracer::new(None).unwrap();
+        t.record("x", 1, f64::NAN);
+        assert_eq!(t.recent()[0].sim_s, 0.0);
+    }
+}

@@ -139,7 +139,10 @@ impl Engine {
             &mup_l,
             &wd_l,
         ];
-        let result = self.train.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let result = {
+            let _sp = crate::obs::span("pjrt.train_exec");
+            self.train.execute::<&Literal>(&args)?[0][0].to_literal_sync()?
+        };
         let (delta_lit, loss_lit) = result.to_tuple2()?;
         let delta = delta_lit.to_vec::<f32>()?;
         let loss = loss_lit.to_vec::<f32>()?[0];
@@ -160,7 +163,10 @@ impl Engine {
         let xs = features_literal(feats, &self.feat_dims(&[m.eval_batch]))?;
         let ys = i32_literal(labels, &[m.eval_batch])?;
         let args: Vec<&Literal> = vec![&p_lit, &xs, &ys];
-        let result = self.eval.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let result = {
+            let _sp = crate::obs::span("pjrt.eval_exec");
+            self.eval.execute::<&Literal>(&args)?[0][0].to_literal_sync()?
+        };
         let (loss_lit, correct_lit) = result.to_tuple2()?;
         let out = EvalOutput {
             loss_sum: loss_lit.to_vec::<f32>()?[0],
@@ -234,7 +240,10 @@ impl Engine {
         let u_lit = vec_f32_literal(&stacked, &[a, m.dim])?;
         let p_lit = vec_f32_literal(params, &[m.dim])?;
         let args: Vec<&Literal> = vec![&u_lit, &p_lit];
-        let result = self.agg.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let result = {
+            let _sp = crate::obs::span("pjrt.agg_exec");
+            self.agg.execute::<&Literal>(&args)?[0][0].to_literal_sync()?
+        };
         let (mean_lit, ussq_lit, wssq_lit) = result.to_tuple3()?;
         let out = AggOutput {
             mean: mean_lit.to_vec::<f32>()?,

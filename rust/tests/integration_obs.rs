@@ -1,0 +1,433 @@
+//! Observability integration (engine-free): the obs/ telemetry
+//! subsystem driven through the production wire / link / async-runtime
+//! / LUAR code paths, pinning the ISSUE's acceptance invariants:
+//!
+//! * **read-only telemetry** — an `obs: level=full` run produces a
+//!   bit-identical History (and parameter vector) to a `level=off`
+//!   run: instrumentation never touches an RNG, the sim clock, or
+//!   model state;
+//! * **Figure 3 agreement** — per-layer upload counts summed from the
+//!   layer telemetry rows equal `CommAccountant::layer_upload_rounds`
+//!   exactly, and the derived frequencies equal `layer_frequencies`;
+//! * **artifacts** — a full-level run emits all three artifact kinds
+//!   (span JSONL whose every line parses, a non-empty Prometheus-style
+//!   exposition plus JSON summary, and the 8-column layer CSV).
+//!
+//! The obs context is thread-local and each #[test] runs on its own
+//! thread, so tests cannot bleed telemetry into each other.
+
+use fedluar::comm::CommAccountant;
+use fedluar::config::{RecycleMode, SelectionScheme};
+use fedluar::fl::{AsyncRuntime, UploadPayload};
+use fedluar::json::Json;
+use fedluar::luar::LuarState;
+use fedluar::metrics::{History, RoundRecord};
+use fedluar::model::ModelMeta;
+use fedluar::net::{wire, LinkDist, NetCfg, NetSim, RoundMode, Staleness};
+use fedluar::obs::{self, ObsCfg, ObsLevel};
+use fedluar::rng::Rng;
+use fedluar::tensor;
+use std::path::PathBuf;
+
+const LAYERS: usize = 6;
+const LAYER_SIZE: usize = 512;
+const NUM_CLIENTS: usize = 16;
+const ACTIVE: usize = 8;
+
+fn synth_meta() -> ModelMeta {
+    let mut rows = Vec::new();
+    for l in 0..LAYERS {
+        let off = l * LAYER_SIZE;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{LAYER_SIZE},
+               "arrays":[{{"name":"w","shape":[8,64],"offset":{off},"size":{LAYER_SIZE}}}]}}"#
+        ));
+    }
+    let dim = LAYERS * LAYER_SIZE;
+    let doc = format!(
+        r#"{{"model":"osim","dim":{dim},"num_classes":10,
+            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
+            "eval_batch":64,"agg_clients":8,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
+}
+
+fn fake_delta(seed: u64, client: usize, gen: u64, dim: usize) -> (Vec<f32>, f32) {
+    let mut rng = Rng::seed_from_u64(
+        seed ^ (client as u64).wrapping_mul(0x9e37_79b9) ^ gen.wrapping_mul(0x85eb_ca6b),
+    );
+    let delta: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let loss = 1.0 + rng.f32();
+    (delta, loss)
+}
+
+/// Trimmed mirror of `fl::Server`'s async FedLUAR loop (same shape as
+/// `tests/integration_async.rs`), including the per-layer telemetry
+/// call `Server::finish_aggregation` makes — so the layer rows, the
+/// comm ledger, and the history all flow from one `upload_layers`.
+struct SimServer {
+    meta: ModelMeta,
+    seed: u64,
+    delta_sel: usize,
+    net: NetSim,
+    luar: LuarState,
+    params: Vec<f32>,
+    comm: CommAccountant,
+    history: History,
+    rng: Rng,
+    round: usize,
+    sim_seconds: f64,
+    rt: Option<AsyncRuntime>,
+}
+
+fn edge_fleet() -> LinkDist {
+    LinkDist::LogNormal { up_mbps: 10.0, down_mbps: 50.0, sigma: 0.75, rtt_s: 0.05 }
+}
+
+impl SimServer {
+    fn new(seed: u64) -> Self {
+        let meta = synth_meta();
+        let mode = RoundMode::Async { concurrency: 4, staleness: Staleness::Poly { a: 0.5 } };
+        let net = NetSim::new(
+            NetCfg { link_dist: edge_fleet(), round_mode: mode, compute_s: 0.1 },
+            NUM_CLIENTS,
+            42,
+        );
+        let dim = meta.dim;
+        let layers = meta.num_layers();
+        SimServer {
+            meta,
+            seed,
+            delta_sel: 2,
+            net,
+            luar: LuarState::new(layers, dim),
+            params: vec![0.0; dim],
+            comm: CommAccountant::new(layers),
+            history: History::default(),
+            rng: Rng::seed_from_u64(seed ^ 0xc0ffee),
+            round: 0,
+            sim_seconds: 0.0,
+            rt: None,
+        }
+    }
+
+    fn cohort(&self, gen: u64) -> Vec<usize> {
+        (0..ACTIVE).map(|i| ((gen as usize) * ACTIVE + i) % NUM_CLIENTS).collect()
+    }
+
+    fn dispatch_next(&mut self) {
+        let (mut gen, mut idx) = {
+            let rt = self.rt.as_ref().unwrap();
+            (rt.sample_gen, rt.sample_idx as usize)
+        };
+        if idx >= ACTIVE {
+            gen += 1;
+            idx = 0;
+        }
+        let client = self.cohort(gen)[idx];
+        {
+            let rt = self.rt.as_mut().unwrap();
+            rt.sample_gen = gen;
+            rt.sample_idx = (idx + 1) as u64;
+        }
+        let upload_layers = self.luar.upload_set(self.meta.num_layers());
+        let bcast =
+            wire::encode_broadcast(&self.params, &self.meta, &self.luar.recycle_set).unwrap();
+        let (mut delta, loss) = fake_delta(self.seed, client, gen, self.meta.dim);
+        for &l in &self.luar.recycle_set {
+            let lm = &self.meta.layers[l];
+            delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+        }
+        let frame =
+            wire::encode_update(&delta, &self.meta, &upload_layers, &wire::WireHint::Dense)
+                .unwrap();
+        let decoded = match wire::decode_update(frame.as_bytes(), &self.meta).unwrap() {
+            wire::Decoded::Vector(v) => v,
+            wire::Decoded::Scalar(_) => unreachable!("dense flavor only"),
+        };
+        let secs = self.net.client_secs(client, bcast.len() as u64, frame.len() as u64);
+        let rt = self.rt.as_mut().unwrap();
+        let payload = UploadPayload {
+            client,
+            version: rt.version,
+            gen,
+            delta: decoded,
+            loss,
+            frame_len: frame.len() as u64,
+            bcast_len: bcast.len() as u64,
+        };
+        rt.dispatch(payload, secs);
+    }
+
+    fn run_async_round(&mut self) {
+        if self.rt.is_none() {
+            self.rt = Some(AsyncRuntime::new(NUM_CLIENTS, 4, ACTIVE, Staleness::Poly { a: 0.5 }));
+        }
+        loop {
+            while self.rt.as_ref().unwrap().wants_dispatch() {
+                self.dispatch_next();
+            }
+            self.rt.as_mut().unwrap().absorb_instant();
+            if self.rt.as_ref().unwrap().ready() {
+                let batch = self.rt.as_mut().unwrap().take_aggregation();
+                let n = batch.uploads.len();
+                let mut refs_owned: Vec<Vec<f32>> = Vec::with_capacity(n);
+                let mut weights: Vec<f32> = Vec::with_capacity(n);
+                let mut loss_sum = 0.0f64;
+                let mut up_total = 0u64;
+                for u in batch.uploads {
+                    loss_sum += u.payload.loss as f64;
+                    up_total += u.payload.frame_len;
+                    weights.push(u.weight);
+                    refs_owned.push(u.payload.delta);
+                }
+                let upload_layers = self.luar.upload_set(self.meta.num_layers());
+                self.finish(
+                    &refs_owned,
+                    &weights,
+                    &upload_layers,
+                    loss_sum,
+                    up_total,
+                    batch.down_bytes,
+                    batch.round_secs,
+                    batch.mean_gap,
+                );
+                return;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        &mut self,
+        deltas: &[Vec<f32>],
+        weights: &[f32],
+        upload_layers: &[usize],
+        loss_sum: f64,
+        up_bytes_total: u64,
+        down_total: u64,
+        round_secs: f64,
+        mean_gap: f64,
+    ) {
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let uniform = weights.iter().all(|&w| w == 1.0);
+        let mut mean = vec![0.0f32; self.meta.dim];
+        if uniform {
+            tensor::mean_rows_par(&refs, &mut mean);
+        } else {
+            let wsum: f32 = weights.iter().sum();
+            let norm: Vec<f32> = weights.iter().map(|w| w / wsum).collect();
+            tensor::weighted_mean_rows(&refs, &norm, &mut mean);
+        }
+        let mut u_ssq = Vec::with_capacity(self.meta.num_layers());
+        let mut w_ssq = Vec::with_capacity(self.meta.num_layers());
+        for lm in &self.meta.layers {
+            let r = lm.offset..lm.offset + lm.size;
+            u_ssq.push(tensor::ssq(&mean[r.clone()]) as f32);
+            w_ssq.push(tensor::ssq(&self.params[r]) as f32);
+        }
+        self.luar.update_scores(&u_ssq, &w_ssq);
+        self.luar.set_age_step(1 + mean_gap.round() as u32);
+        let kappa = self.luar.compose_update(&mut mean, &self.meta, RecycleMode::Recycle);
+        let grad_norms: Vec<f64> = u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
+        self.luar.select_next(SelectionScheme::Luar, self.delta_sel, &grad_norms, &mut self.rng);
+
+        // The same per-layer telemetry call `Server::finish_aggregation`
+        // makes, fed by the same upload_layers the comm ledger records.
+        if obs::enabled() {
+            let wsum: f32 = weights.iter().sum();
+            let discount = (wsum / weights.len().max(1) as f32) as f64;
+            obs::record_layer_round(
+                self.round,
+                &self.meta,
+                upload_layers,
+                &self.luar.scores,
+                &self.luar.staleness,
+                up_bytes_total,
+                discount,
+            );
+            obs::gauge("luar.kappa", kappa);
+            obs::snapshot(self.round as u64);
+        }
+
+        tensor::axpy(1.0, &mean, &mut self.params);
+        self.comm.record_wire_round(
+            deltas.len() as u64,
+            upload_layers,
+            up_bytes_total,
+            wire::dense_frame_len(&self.meta),
+            down_total,
+        );
+        self.sim_seconds += round_secs;
+        self.round += 1;
+        self.history.push(RoundRecord {
+            round: self.round,
+            train_loss: loss_sum / deltas.len().max(1) as f64,
+            test_loss: tensor::ssq(&self.params),
+            test_acc: self.params[0] as f64,
+            up_bytes: self.comm.up_bytes,
+            comm_ratio: self.comm.comm_ratio(),
+            kappa,
+            sim_seconds: self.sim_seconds,
+            wire_bytes: up_bytes_total,
+            tail_s: 0.0,
+            arrivals: deltas.len(),
+            version_gap: mean_gap,
+        });
+    }
+
+    fn run(&mut self, rounds: usize) {
+        while self.round < rounds {
+            self.run_async_round();
+        }
+    }
+}
+
+fn assert_bit_identical(a: &SimServer, b: &SimServer, what: &str) {
+    assert_eq!(a.history.records.len(), b.history.records.len(), "{what}");
+    for (x, y) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.kappa.to_bits(), y.kappa.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.up_bytes, y.up_bytes, "{what} round {}", x.round);
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{what} round {}", x.round);
+        assert_eq!(
+            x.sim_seconds.to_bits(),
+            y.sim_seconds.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.version_gap.to_bits(),
+            y.version_gap.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+    }
+    for (i, (x, y)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i} diverged");
+    }
+    assert_eq!(a.luar.recycle_set, b.luar.recycle_set, "{what}");
+    assert_eq!(a.comm.layer_upload_rounds, b.comm.layer_upload_rounds, "{what}");
+}
+
+// ------------------------------------------------------------------ tests
+
+/// `obs: level=off` vs `level=full`: telemetry must be read-only, so
+/// the History, the parameter vector, the recycle set, and the comm
+/// ledger are all bit-identical (the ISSUE's acceptance criterion).
+#[test]
+fn off_vs_full_runs_are_bit_identical() {
+    obs::init(&ObsCfg::default()).unwrap();
+    let mut off = SimServer::new(7);
+    off.run(10);
+
+    let dir = std::env::temp_dir().join("fedluar_obs_equiv_test");
+    obs::init(&ObsCfg {
+        level: ObsLevel::Full,
+        trace_path: Some(dir.join("trace.jsonl").to_str().unwrap().to_string()),
+        metrics_path: None,
+        layer_csv: None,
+    })
+    .unwrap();
+    let mut full = SimServer::new(7);
+    full.run(10);
+    assert!(obs::spans_recorded() > 0, "full run must actually trace");
+    assert!(obs::counter_value("async.dispatched") > 0);
+    obs::finish().unwrap();
+
+    assert_bit_identical(&off, &full, "off vs full");
+}
+
+/// The layer telemetry reproduces Figure 3 exactly: per-layer upload
+/// counts summed over the rows equal `CommAccountant`'s
+/// `layer_upload_rounds`, and the derived frequencies equal
+/// `layer_frequencies`.
+#[test]
+fn layer_rows_agree_with_comm_accountant_exactly() {
+    obs::init(&ObsCfg { level: ObsLevel::Metrics, ..ObsCfg::default() }).unwrap();
+    let mut s = SimServer::new(11);
+    s.run(12);
+
+    let rows = obs::layer_rows();
+    assert_eq!(rows.len(), 12 * LAYERS, "one row per (round, layer)");
+    let mut uploads = vec![0u64; LAYERS];
+    let mut bytes = vec![0u64; LAYERS];
+    for r in &rows {
+        if r.uploaded {
+            uploads[r.layer] += 1;
+            assert_eq!(r.recycle_age, 0, "uploaded layers carry age 0");
+        } else {
+            assert_eq!(r.wire_bytes, 0, "recycled layers cost no wire bytes");
+        }
+        bytes[r.layer] += r.wire_bytes;
+    }
+    assert_eq!(uploads, s.comm.layer_upload_rounds, "Figure 3 counts must agree exactly");
+    let freqs = s.comm.layer_frequencies();
+    for (l, &u) in uploads.iter().enumerate() {
+        let f = u as f64 / s.comm.rounds as f64;
+        assert!((f - freqs[l]).abs() < 1e-12, "layer {l} frequency {f} vs {}", freqs[l]);
+    }
+    // recycling actually happened, so the counts are non-trivial
+    assert!(uploads.iter().any(|&u| u < 12), "some layer must have been recycled");
+    assert!(bytes.iter().sum::<u64>() > 0);
+    obs::finish().unwrap();
+}
+
+/// A full-level run emits all three artifact kinds, each well-formed:
+/// JSONL trace (every line parses), non-empty exposition + JSON
+/// summary, and the 8-column layer CSV.
+#[test]
+fn full_run_emits_wellformed_artifacts() {
+    let dir = std::env::temp_dir().join("fedluar_obs_artifacts_test");
+    let trace = dir.join("trace.jsonl").to_str().unwrap().to_string();
+    let prom = dir.join("metrics.prom").to_str().unwrap().to_string();
+    let csv = dir.join("layers.csv").to_str().unwrap().to_string();
+    obs::init(&ObsCfg {
+        level: ObsLevel::Full,
+        trace_path: Some(trace.clone()),
+        metrics_path: Some(prom.clone()),
+        layer_csv: Some(csv.clone()),
+    })
+    .unwrap();
+    let mut s = SimServer::new(3);
+    s.run(6);
+    let written = obs::finish().unwrap();
+    assert_eq!(written.len(), 4, "trace + prom + json + layer csv: {written:?}");
+
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    assert!(trace_text.lines().count() > 0, "trace must hold spans");
+    for line in trace_text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e}"));
+        j.get("span").unwrap().as_str().unwrap();
+        j.get("wall_ns").unwrap().as_f64().unwrap();
+    }
+    // the traced spans cover the instrumented hot paths
+    for name in ["wire.encode", "wire.decode", "link.transit", "sched.pop", "luar.select"] {
+        assert!(trace_text.contains(&format!("\"span\":\"{name}\"")), "missing span {name}");
+    }
+
+    let prom_text = std::fs::read_to_string(&prom).unwrap();
+    assert!(!prom_text.is_empty());
+    assert!(prom_text.contains("fedluar_async_dispatched"));
+    assert!(prom_text.contains("fedluar_async_version_gap_bucket"));
+    assert!(prom_text.contains("fedluar_wire_encode_ns_count"));
+
+    let json_path = prom.strip_suffix(".prom").unwrap().to_string() + ".json";
+    let summary = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+    summary.get("counters").unwrap();
+    summary.get("histograms").unwrap();
+
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    let mut lines = csv_text.lines();
+    assert_eq!(lines.next().unwrap().split(',').count(), 8, "8-column layer CSV");
+    for line in lines {
+        assert_eq!(line.split(',').count(), 8, "{line}");
+    }
+    assert_eq!(csv_text.lines().count(), 1 + 6 * LAYERS);
+}
