@@ -94,12 +94,27 @@ fn main() {
         std::hint::black_box(f.len());
     });
 
+    // delta: residual framing against a correlated reference (the
+    // cross-round regime --delta-frames charges the ledger for)
+    let cur: Vec<f32> = base.iter().map(|&r| r * (1.0 + 1e-3)).collect();
+    b.bench("delta_encode_correlated", elems, || {
+        let f = wire::encode_update_delta(&cur, &meta, &all, &base, 7).unwrap();
+        std::hint::black_box(f.len());
+    });
+    let delta = wire::encode_update_delta(&cur, &meta, &all, &base, 7).unwrap();
+    b.bench("delta_decode_correlated", elems, || {
+        let v = wire::decode_update_delta(delta.as_bytes(), &meta, &base).unwrap();
+        std::hint::black_box(&v);
+    });
+
     b.compare("dense_encode", "quantized16_encode");
+    b.compare("dense_encode", "delta_encode_correlated");
     println!(
-        "\nwire bytes: dense {} | sparse10 {} | quant16 {} — the codec overhead the\n\
-         ledger now measures instead of estimating.",
+        "\nwire bytes: dense {} | sparse10 {} | quant16 {} | delta {} — the codec\n\
+         overhead the ledger now measures instead of estimating.",
         dense.len(),
         sparse.len(),
-        quant.len()
+        quant.len(),
+        delta.len()
     );
 }

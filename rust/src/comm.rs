@@ -24,6 +24,16 @@ pub struct CommAccountant {
     /// Upload bytes if every round had been full FedAvg (denominator
     /// of the Comm column).
     pub fedavg_up_bytes: u64,
+    /// Bytes residual (delta) framing shaved off the self-contained
+    /// baseline, both directions (0 unless `net.delta_frames`). The
+    /// `up_bytes`/`down_bytes` ledgers already record the smaller delta
+    /// frames; this tracks the stacked saving explicitly.
+    pub delta_bytes_saved: u64,
+    /// Transmissions that shipped self-contained while delta framing
+    /// was on: first contact, evicted/stale references, checkpoint
+    /// resume, non-dense upload flavors, or a delta frame that would
+    /// not have been smaller.
+    pub delta_fallbacks: u64,
 }
 
 impl CommAccountant {
@@ -34,7 +44,17 @@ impl CommAccountant {
             down_bytes: 0,
             layer_upload_rounds: vec![0; num_layers],
             fedavg_up_bytes: 0,
+            delta_bytes_saved: 0,
+            delta_fallbacks: 0,
         }
+    }
+
+    /// Record one aggregation round's residual-framing outcome:
+    /// `bytes_saved` versus the self-contained baseline and how many
+    /// transmissions fell back to self-contained frames.
+    pub fn record_delta(&mut self, bytes_saved: u64, fallbacks: u64) {
+        self.delta_bytes_saved += bytes_saved;
+        self.delta_fallbacks += fallbacks;
     }
 
     /// Record one round.
@@ -195,6 +215,16 @@ mod tests {
         assert_eq!(acc.down_bytes, 480);
         assert_eq!(acc.layer_upload_rounds, vec![1, 1, 0]);
         assert!((acc.comm_ratio() - 365.0 / 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_ledger_accumulates() {
+        let mut acc = CommAccountant::new(2);
+        assert_eq!((acc.delta_bytes_saved, acc.delta_fallbacks), (0, 0));
+        acc.record_delta(120, 3);
+        acc.record_delta(80, 0);
+        assert_eq!(acc.delta_bytes_saved, 200);
+        assert_eq!(acc.delta_fallbacks, 3);
     }
 
     #[test]

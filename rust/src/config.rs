@@ -409,6 +409,7 @@ impl RunConfig {
              lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
              mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
              client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n\
+             delta_frames = {}\n\
              obs_level = {}\nobs_trace = {}\nobs_metrics = {}\nobs_layer_csv = {}\n",
             self.model,
             self.rounds,
@@ -437,6 +438,7 @@ impl RunConfig {
             self.net.link_dist.spec_string(),
             self.net.round_mode.spec_string(),
             self.net.compute_s,
+            self.net.delta_frames,
             self.obs.level.name(),
             self.obs.trace_path.as_deref().unwrap_or("none"),
             self.obs.metrics_path.as_deref().unwrap_or("none"),
@@ -523,6 +525,11 @@ impl RunConfig {
         if let Some(v) = kv.get("compute_s") {
             cfg.net.compute_s = v.parse().context("bad compute_s")?;
         }
+        // Residual framing is opt-in; configs written before the key
+        // existed parse as `false`.
+        if let Some(v) = kv.get("delta_frames") {
+            cfg.net.delta_frames = v.parse().context("bad delta_frames")?;
+        }
         // obs: block (flat keys); `none` leaves a path unset.
         if let Some(v) = kv.get("obs_level") {
             cfg.obs.level = ObsLevel::parse(v)?;
@@ -572,6 +579,7 @@ mod tests {
         };
         cfg.net.round_mode = RoundMode::Deadline { deadline_s: 2.5 };
         cfg.net.compute_s = 0.5;
+        cfg.net.delta_frames = true;
         let text = cfg.save_kv();
         let back = RunConfig::load_kv(&text).unwrap();
         assert_eq!(back.method, cfg.method);
@@ -599,6 +607,17 @@ mod tests {
         let legacy = "model = mlp\nrounds = 3\n";
         assert_eq!(RunConfig::load_kv(legacy).unwrap().obs.level, ObsLevel::Off);
         assert!(RunConfig::load_kv("model = mlp\nobs_level = loud\n").is_err());
+    }
+
+    #[test]
+    fn delta_frames_key_parses_and_defaults_off() {
+        // legacy configs written before the key existed parse as off
+        let legacy = "model = mlp\nrounds = 3\n";
+        assert!(!RunConfig::load_kv(legacy).unwrap().net.delta_frames);
+        let base = RunConfig::benchmark("mlp").unwrap().save_kv();
+        let cfg = RunConfig::load_kv(&format!("{base}delta_frames = true\n")).unwrap();
+        assert!(cfg.net.delta_frames);
+        assert!(RunConfig::load_kv(&format!("{base}delta_frames = sideways\n")).is_err());
     }
 
     #[test]

@@ -16,19 +16,30 @@
 //! remaining schedule exactly, in-flight stragglers included. v1
 //! checkpoints still load (the appended fields keep their defaults).
 //!
+//! Format v3 appends the comm ledger's residual-framing counters
+//! (`delta_bytes_saved` / `delta_fallbacks`) and, when the run uses
+//! `net.delta_frames`, the full `DeltaFrameState`: the broadcast
+//! reference ring, per-client last-received versions, and per-client
+//! uplink reference snapshots. v1/v2 checkpoints still load; a
+//! delta-framed run resumed from one starts with empty references, so
+//! its model trajectory is unchanged and every post-resume first
+//! contact is counted in `fl.delta_fallbacks` (the documented
+//! fallback case). `save_checkpoint_as` writes the older formats so
+//! the migration path stays testable.
+//!
 //! Not captured (documented limits): per-client compressor state
 //! (error-feedback residuals, LBGM anchors) and MOON's previous local
 //! models — resuming a run that uses those restarts their state, which
 //! changes trajectories for FedBAT/LBGM/MOON runs but not for
 //! FedAvg/FedLUAR.
 
-use super::{AbsorbedUpload, AsyncRuntime, AsyncState, Server, UploadPayload};
+use super::{AbsorbedUpload, AsyncRuntime, AsyncState, RefState, Server, UploadPayload};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FLCK";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 struct Writer {
     buf: Vec<u8>,
@@ -169,11 +180,25 @@ impl<'a> Reader<'a> {
 }
 
 impl Server {
-    /// Write the full resumable state to `path`.
+    /// Write the full resumable state to `path` (current format).
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_checkpoint_as(path, VERSION)
+    }
+
+    /// Write a checkpoint in an explicit (possibly older) format
+    /// version — the migration tests save v2 files and assert this
+    /// build still resumes them exactly. Refuses to drop state the
+    /// requested format cannot carry (an async runtime needs v2+).
+    pub fn save_checkpoint_as(&self, path: impl AsRef<Path>, version: u32) -> Result<()> {
+        if version == 0 || version > VERSION {
+            bail!("cannot write checkpoint version {version} (this build writes 1..={VERSION})");
+        }
+        if version < 2 && self.async_rt.is_some() {
+            bail!("checkpoint v1 cannot carry async runtime state");
+        }
         let mut w = Writer::new();
         w.buf.extend_from_slice(MAGIC);
-        w.u32(VERSION);
+        w.u32(version);
         w.str(&self.cfg.model);
         w.str(&self.cfg.method.spec_string());
         w.u64(self.round as u64);
@@ -199,17 +224,46 @@ impl Server {
         // coordinator rng
         let st = self.rng_state();
         w.u64s(&st);
-        // --- v2: simulated clock + counters ---------------------------
-        w.f64(self.sim_seconds);
-        w.f64(self.train_loss_ema);
-        w.u64(self.failed_clients);
-        w.u64(self.dropped_stragglers);
-        // --- v2: async runtime (in-flight queue included) -------------
-        match &self.async_rt {
-            None => w.buf.push(0),
-            Some(rt) => {
-                w.buf.push(1);
-                write_async_state(&mut w, &rt.state());
+        if version >= 2 {
+            // --- v2: simulated clock + counters -----------------------
+            w.f64(self.sim_seconds);
+            w.f64(self.train_loss_ema);
+            w.u64(self.failed_clients);
+            w.u64(self.dropped_stragglers);
+            // --- v2: async runtime (in-flight queue included) ---------
+            match &self.async_rt {
+                None => w.buf.push(0),
+                Some(rt) => {
+                    w.buf.push(1);
+                    write_async_state(&mut w, &rt.state());
+                }
+            }
+        }
+        if version >= 3 {
+            // --- v3: residual-framing ledger + references -------------
+            w.u64(self.comm.delta_bytes_saved);
+            w.u64(self.comm.delta_fallbacks);
+            match &self.delta_state {
+                None => w.buf.push(0),
+                Some(st) => {
+                    w.buf.push(1);
+                    let (bcast_refs, down_versions, up_refs) = st.snapshot();
+                    w.u64(bcast_refs.len() as u64);
+                    for r in bcast_refs {
+                        write_ref_state(&mut w, r);
+                    }
+                    w.u64s(down_versions);
+                    w.u64(up_refs.len() as u64);
+                    for r in up_refs {
+                        match r {
+                            None => w.buf.push(0),
+                            Some(r) => {
+                                w.buf.push(1);
+                                write_ref_state(&mut w, r);
+                            }
+                        }
+                    }
+                }
             }
         }
         if let Some(parent) = path.as_ref().parent() {
@@ -296,12 +350,64 @@ impl Server {
                 self.async_rt = None;
             }
         }
+        // Pre-v3 files carry no references or delta counters: a
+        // delta-framed server resumes with empty ones (trajectory
+        // unchanged, post-resume first contacts count as fallbacks).
+        if let Some(st) = &mut self.delta_state {
+            *st = super::DeltaFrameState::new(self.cfg.num_clients);
+        }
+        self.comm.delta_bytes_saved = 0;
+        self.comm.delta_fallbacks = 0;
+        if version >= 3 {
+            self.comm.delta_bytes_saved = r.u64()?;
+            self.comm.delta_fallbacks = r.u64()?;
+            let has_delta = r.take(1)?[0];
+            if has_delta == 1 {
+                let n_bcast = r.u64()? as usize;
+                let mut bcast_refs = Vec::with_capacity(n_bcast);
+                for _ in 0..n_bcast {
+                    bcast_refs.push(read_ref_state(&mut r)?);
+                }
+                let down_versions = r.u64s()?;
+                let n_up = r.u64()? as usize;
+                let mut up_refs = Vec::with_capacity(n_up);
+                for _ in 0..n_up {
+                    match r.take(1)?[0] {
+                        0 => up_refs.push(None),
+                        _ => up_refs.push(Some(read_ref_state(&mut r)?)),
+                    }
+                }
+                if down_versions.len() != self.cfg.num_clients {
+                    bail!(
+                        "checkpoint tracks {} delta-framing clients, server has {}",
+                        down_versions.len(),
+                        self.cfg.num_clients
+                    );
+                }
+                // References are ledger-only: a server running without
+                // `net.delta_frames` ignores them (the restored comm
+                // counters keep the ledger history either way).
+                if let Some(st) = &mut self.delta_state {
+                    st.restore(bcast_refs, down_versions, up_refs);
+                }
+            }
+        }
         // Dispatch-side memos are derived state: drop them so the first
         // post-restore dispatch rebuilds against the restored model.
         self.async_bcast = None;
         self.async_cohort = None;
         Ok(())
     }
+}
+
+fn write_ref_state(w: &mut Writer, r: &RefState) {
+    w.u64(r.version);
+    w.f32s(&r.data);
+    w.u64s(&r.layer_hash);
+}
+
+fn read_ref_state(r: &mut Reader) -> Result<RefState> {
+    Ok(RefState { version: r.u64()?, data: r.f32s()?, layer_hash: r.u64s()? })
 }
 
 fn write_payload(w: &mut Writer, p: &UploadPayload) {

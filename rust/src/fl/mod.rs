@@ -35,7 +35,15 @@
 //!   refill immediately with freshly sampled clients.
 //!
 //! `checkpoint.rs` adds save/resume of the full server state,
-//! including the async runtime's in-flight queue (format v2).
+//! including the async runtime's in-flight queue (format v2) and the
+//! residual-framing references (format v3).
+//!
+//! With `net.delta_frames` on, both directions re-frame against
+//! per-client reference snapshots (`DeltaFrameState`, wire flavor
+//! `Delta`): uplinks against the client's previous decoded upload,
+//! downlinks against the params the client last received. Framing is
+//! lossless and ledger-only — trajectories and the simulated clock are
+//! bit-identical to dense runs (see docs/wire.md).
 
 mod async_rt;
 mod checkpoint;
@@ -99,6 +107,211 @@ pub struct Server {
     /// The generation's failure-filtered cohort (deterministic in
     /// (gen, seed)), sampled once per generation. Same cache policy.
     async_cohort: Option<(u64, Vec<usize>)>,
+    /// Residual-framing references (`Some` iff `net.delta_frames`):
+    /// per-client uplink snapshots, the broadcast ring, and the round's
+    /// savings/fallback/gap accumulators drained by the absorb half.
+    pub delta_state: Option<DeltaFrameState>,
+}
+
+/// Broadcast versions kept as downlink delta references; older clients
+/// fall back to self-contained frames.
+pub const DELTA_BCAST_RING: usize = 4;
+/// Maximum model-version gap an uplink reference may span before the
+/// client re-sends self-contained (bounds reference memory staleness).
+pub const DELTA_MAX_REF_GAP: u64 = 8;
+
+/// One reference snapshot for residual framing: the values a delta
+/// frame is coded against, the model version they belong to, and the
+/// per-layer FNV hashes the wire check validates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefState {
+    pub version: u64,
+    pub data: Vec<f32>,
+    pub layer_hash: Vec<u64>,
+}
+
+impl RefState {
+    pub fn new(version: u64, data: Vec<f32>, meta: &ModelMeta) -> Self {
+        let layer_hash = wire::layer_hashes(&data, meta);
+        RefState { version, data, layer_hash }
+    }
+}
+
+/// Server-side residual-framing bookkeeping. Delta framing is
+/// *accounting-transparent*: the link schedule is always timed against
+/// self-contained frame lengths, so model trajectories and simulated
+/// clocks are bit-identical to dense-framed runs — only the comm
+/// ledger's bytes shrink (asserted in `tests/integration_delta.rs`).
+#[derive(Debug, Clone)]
+pub struct DeltaFrameState {
+    /// Per-client uplink reference: the client's previous decoded
+    /// upload (what both ends can reconstruct without extra traffic).
+    up_refs: Vec<Option<RefState>>,
+    /// Recent broadcast params keyed by model version (downlink
+    /// references), newest last, capped at `DELTA_BCAST_RING`.
+    bcast_refs: Vec<RefState>,
+    /// Last model version each client received (`u64::MAX` = never).
+    down_versions: Vec<u64>,
+    /// Ledger lengths already encoded this broadcast version, keyed by
+    /// reference version — the broadcast delta is encoded once per
+    /// (version, ref_version) pair, not once per client.
+    bcast_memo: Option<(u64, Vec<(u64, u64, bool)>)>,
+    round_saved: u64,
+    round_fallbacks: u64,
+    gap_sum: f64,
+    gap_count: u64,
+}
+
+impl DeltaFrameState {
+    pub fn new(num_clients: usize) -> Self {
+        DeltaFrameState {
+            up_refs: vec![None; num_clients],
+            bcast_refs: Vec::new(),
+            down_versions: vec![u64::MAX; num_clients],
+            bcast_memo: None,
+            round_saved: 0,
+            round_fallbacks: 0,
+            gap_sum: 0.0,
+            gap_count: 0,
+        }
+    }
+
+    /// Snapshot the broadcast params for `version` as a downlink
+    /// reference (idempotent per version; evicts the oldest entry).
+    pub fn note_bcast(&mut self, version: u64, params: &[f32], meta: &ModelMeta) {
+        if self.bcast_refs.iter().any(|r| r.version == version) {
+            return;
+        }
+        self.bcast_refs.push(RefState::new(version, params.to_vec(), meta));
+        if self.bcast_refs.len() > DELTA_BCAST_RING {
+            self.bcast_refs.remove(0);
+        }
+        if !matches!(self.bcast_memo, Some((v, _)) if v == version) {
+            self.bcast_memo = Some((version, Vec::new()));
+        }
+    }
+
+    /// Ledger bytes of this client's downlink at `version`: the delta
+    /// frame against the params the client last saw when both snapshots
+    /// are still in the ring (memoized per reference version), else the
+    /// self-contained length `self_len` (counted as a fallback).
+    pub fn bcast_ledger_len(
+        &mut self,
+        client: usize,
+        version: u64,
+        meta: &ModelMeta,
+        recycle_set: &[usize],
+        self_len: u64,
+    ) -> Result<u64> {
+        let ref_version = self.down_versions[client];
+        self.down_versions[client] = version;
+        let have_refs = ref_version != u64::MAX
+            && self.bcast_refs.iter().any(|r| r.version == ref_version)
+            && self.bcast_refs.iter().any(|r| r.version == version);
+        if !have_refs {
+            self.round_fallbacks += 1;
+            return Ok(self_len);
+        }
+        if !matches!(self.bcast_memo, Some((v, _)) if v == version) {
+            self.bcast_memo = Some((version, Vec::new()));
+        }
+        let memo_hit = self
+            .bcast_memo
+            .as_ref()
+            .and_then(|(_, m)| m.iter().find(|&&(rv, _, _)| rv == ref_version).copied());
+        let (len, is_delta) = match memo_hit {
+            Some((_, len, is_delta)) => (len, is_delta),
+            None => {
+                let cur = self.bcast_refs.iter().find(|r| r.version == version).unwrap();
+                let reference =
+                    self.bcast_refs.iter().find(|r| r.version == ref_version).unwrap();
+                let frame = wire::encode_broadcast_delta(
+                    &cur.data,
+                    meta,
+                    recycle_set,
+                    &reference.data,
+                    ref_version,
+                )?;
+                let dlen = frame.len() as u64;
+                let (len, is_delta) =
+                    if dlen < self_len { (dlen, true) } else { (self_len, false) };
+                if let Some((_, m)) = &mut self.bcast_memo {
+                    m.push((ref_version, len, is_delta));
+                }
+                (len, is_delta)
+            }
+        };
+        if is_delta {
+            self.round_saved += self_len - len;
+            self.gap_sum += (version - ref_version) as f64;
+            self.gap_count += 1;
+        } else {
+            self.round_fallbacks += 1;
+        }
+        Ok(len)
+    }
+
+    /// The uplink reference version usable for `client` at `version`,
+    /// if any (present and within `DELTA_MAX_REF_GAP`).
+    pub fn usable_up_ref_version(&self, client: usize, version: u64) -> Option<u64> {
+        let r = self.up_refs[client].as_ref()?;
+        (version.saturating_sub(r.version) <= DELTA_MAX_REF_GAP).then_some(r.version)
+    }
+
+    /// The uplink reference snapshot for `client`.
+    pub fn up_ref(&self, client: usize) -> Option<&RefState> {
+        self.up_refs[client].as_ref()
+    }
+
+    /// Install `update` (the decoded upload at `version`) as the
+    /// client's next uplink reference.
+    pub fn record_upload(&mut self, client: usize, version: u64, update: &[f32], meta: &ModelMeta) {
+        self.up_refs[client] = Some(RefState::new(version, update.to_vec(), meta));
+    }
+
+    /// Account one uplink transmission: `self_len` is the dense-subset
+    /// baseline; `ledger_len` what the ledger records; `gap` the
+    /// reference version gap of a delta frame (`None` = fallback).
+    pub fn note_uplink(&mut self, self_len: u64, ledger_len: u64, gap: Option<u64>) {
+        match gap {
+            Some(g) => {
+                self.round_saved += self_len.saturating_sub(ledger_len);
+                self.gap_sum += g as f64;
+                self.gap_count += 1;
+            }
+            None => self.round_fallbacks += 1,
+        }
+    }
+
+    /// Drain the round's accumulators: (bytes saved, fallbacks, mean
+    /// reference gap of the round's delta frames).
+    pub fn drain_round(&mut self) -> (u64, u64, f64) {
+        let saved = std::mem::take(&mut self.round_saved);
+        let fallbacks = std::mem::take(&mut self.round_fallbacks);
+        let gap =
+            if self.gap_count == 0 { 0.0 } else { self.gap_sum / self.gap_count as f64 };
+        self.gap_sum = 0.0;
+        self.gap_count = 0;
+        (saved, fallbacks, gap)
+    }
+
+    /// Checkpoint access: broadcast ring, per-client downlink versions,
+    /// per-client uplink references.
+    pub(crate) fn snapshot(&self) -> (&[RefState], &[u64], &[Option<RefState>]) {
+        (&self.bcast_refs, &self.down_versions, &self.up_refs)
+    }
+
+    pub(crate) fn restore(
+        &mut self,
+        bcast_refs: Vec<RefState>,
+        down_versions: Vec<u64>,
+        up_refs: Vec<Option<RefState>>,
+    ) {
+        self.bcast_refs = bcast_refs;
+        self.down_versions = down_versions;
+        self.up_refs = up_refs;
+        self.bcast_memo = None;
+    }
 }
 
 /// Per-model-version dispatch artifacts reused across async dispatches.
@@ -174,6 +387,7 @@ impl Server {
             async_rt: None,
             async_bcast: None,
             async_cohort: None,
+            delta_state: cfg.net.delta_frames.then(|| DeltaFrameState::new(cfg.num_clients)),
             cfg,
         })
     }
@@ -206,21 +420,27 @@ impl Server {
 
     /// One client's dispatch: local training through the AOT graph,
     /// LUAR layer skipping / baseline compression, wire encode, and
-    /// the server-side decode. Returns (decoded update, measured frame
-    /// bytes, training loss). `t` indexes the local-batch schedule (the
-    /// round in barrier modes, the sample generation in async mode).
+    /// the server-side decode. Returns (decoded update, ledger frame
+    /// bytes, self-contained frame bytes, training loss) — the two
+    /// lengths differ only under `net.delta_frames`, where the ledger
+    /// counts the residual frame but the link schedule is still timed
+    /// against the self-contained one. `t` indexes the local-batch
+    /// schedule (the round in barrier modes, the sample generation in
+    /// async mode); `version` keys the residual references (== t in
+    /// barrier modes, the runtime's model version in async mode).
     #[allow(clippy::too_many_arguments)]
     fn client_upload(
         &mut self,
         client: usize,
         slot: usize,
         t: usize,
+        version: u64,
         lr: f32,
         shared_broadcast: Option<&[f32]>,
         anchor_g: Option<&[f32]>,
         upload_layers: &[usize],
         meta: &ModelMeta,
-    ) -> Result<(Vec<f32>, u64, f32)> {
+    ) -> Result<(Vec<f32>, u64, u64, f32)> {
         let _sp = obs::span("fl.client_upload");
         let mu_g = self.cfg.client_opt.mu_global;
         let mu_p = self.cfg.client_opt.mu_prev;
@@ -283,13 +503,55 @@ impl Server {
         // layer-id lists, and index overheads included), and the
         // aggregate consumes the decoded bytes.
         let frame = wire::encode_update(&delta, meta, upload_layers, &hint)?;
-        let delta_srv = match wire::decode_update(frame.as_bytes(), meta)? {
+        let self_len = frame.len() as u64;
+        let mut ledger_len = self_len;
+        let mut delta_srv = match wire::decode_update(frame.as_bytes(), meta)? {
             wire::Decoded::Vector(v) => v,
             // LBGM scalar: the server's per-client anchor times the
             // coefficient — which is the in-place reconstruction.
             wire::Decoded::Scalar(_) => delta,
         };
-        Ok((delta_srv, frame.len() as u64, out.loss))
+        // Residual framing (delta_frames): re-frame a dense upload
+        // against the client's previous decoded upload when that
+        // reference is fresh enough, and make the reframed (lossless)
+        // decode the aggregated one. Everything else — lossy flavors,
+        // first contact, stale references — ships self-contained and
+        // counts a fallback.
+        if let Some(st) = &self.delta_state {
+            let dense = matches!(hint, wire::WireHint::Dense);
+            let usable = dense
+                .then(|| st.usable_up_ref_version(client, version))
+                .flatten();
+            if let Some(ref_version) = usable {
+                let reference = st.up_ref(client).expect("usable ref exists").data.clone();
+                let dframe = wire::encode_update_delta(
+                    &delta_srv,
+                    meta,
+                    upload_layers,
+                    &reference,
+                    ref_version,
+                )?;
+                if (dframe.len() as u64) < self_len {
+                    let (decoded, _) =
+                        wire::decode_update_delta(dframe.as_bytes(), meta, &reference)?;
+                    ledger_len = dframe.len() as u64;
+                    delta_srv = decoded;
+                    let st = self.delta_state.as_mut().expect("checked above");
+                    st.note_uplink(self_len, ledger_len, Some(version - ref_version));
+                } else {
+                    let st = self.delta_state.as_mut().expect("checked above");
+                    st.note_uplink(self_len, self_len, None);
+                }
+            } else {
+                let st = self.delta_state.as_mut().expect("checked above");
+                st.note_uplink(self_len, self_len, None);
+            }
+            if dense {
+                let st = self.delta_state.as_mut().expect("checked above");
+                st.record_upload(client, version, &delta_srv, meta);
+            }
+        }
+        Ok((delta_srv, ledger_len, self_len, out.loss))
     }
 
     // ------------------------------------------------------------------
@@ -386,6 +648,21 @@ impl Server {
             self.luar.select_next(luar_scheme.unwrap(), next_delta, &grad_norms, &mut self.rng);
         }
 
+        // --- residual-framing round accounting ------------------------
+        // Drained once per aggregation so the ledger and counters see
+        // per-round totals; `delta_ref_gap` is the mean version gap the
+        // round's delta frames were coded across (0 without framing).
+        let (delta_saved, delta_fallbacks, delta_ref_gap) = match &mut self.delta_state {
+            Some(st) => st.drain_round(),
+            None => (0, 0, 0.0),
+        };
+        if delta_saved > 0 {
+            obs::counter("fl.delta_bytes_saved", delta_saved);
+        }
+        if delta_fallbacks > 0 {
+            obs::counter("fl.delta_fallbacks", delta_fallbacks);
+        }
+
         // --- per-layer telemetry (Figure 3 / kappa decomposition) -----
         // Scores are the values selection actually used (stale for
         // recycled layers); ages are post-compose; the uploaded flag
@@ -417,6 +694,7 @@ impl Server {
                 &ages,
                 up_bytes_total,
                 discount,
+                delta_ref_gap,
             );
             obs::gauge("luar.kappa", kappa);
             obs::observe("agg.mean_gap", mean_gap);
@@ -441,6 +719,7 @@ impl Server {
             fedavg_frame,
             down_total,
         );
+        self.comm.record_delta(delta_saved, delta_fallbacks);
         self.sim_seconds += round_secs;
 
         let train_loss = loss_sum / loss_count.max(1) as f64;
@@ -519,27 +798,43 @@ impl Server {
         // Downlink frame: broadcast params + the R_t layer-id list.
         // FedMut's per-client mutations have identical length, so one
         // encode measures every client's download.
-        let bcast_frame = {
-            let tmp;
-            let params: &[f32] = match &shared_broadcast {
-                Some(b) => b,
-                None => {
-                    tmp = self.opt.broadcast(0);
-                    &tmp
-                }
-            };
-            wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+        let bcast_params: Vec<f32> = match &shared_broadcast {
+            Some(b) => b.clone(),
+            None => self.opt.broadcast(0),
         };
+        let bcast_frame = wire::encode_broadcast(&bcast_params, &meta, &self.luar.recycle_set)?;
+        // Residual framing: snapshot this round's params as a downlink
+        // reference, then price each client's download against the
+        // params it last received. Ledger-only — the link schedule
+        // below is still timed by the self-contained frame.
+        let bcast_self_len = bcast_frame.len() as u64;
+        let mut down_total = 0u64;
+        if let Some(st) = &mut self.delta_state {
+            st.note_bcast(t as u64, &bcast_params, &meta);
+            for &client in &actives {
+                down_total += st.bcast_ledger_len(
+                    client,
+                    t as u64,
+                    &meta,
+                    &self.luar.recycle_set,
+                    bcast_self_len,
+                )?;
+            }
+        } else {
+            down_total = (actives.len() as u64) * bcast_self_len;
+        }
 
         let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
         let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
+        let mut timing_lens: Vec<u64> = Vec::with_capacity(actives.len());
         let mut loss_sum = 0.0f64;
         let mut up_bytes_total = 0u64;
         for (slot, &client) in actives.iter().enumerate() {
-            let (delta_srv, frame_len, loss) = self.client_upload(
+            let (delta_srv, ledger_len, self_len, loss) = self.client_upload(
                 client,
                 slot,
                 t,
+                t as u64,
                 lr,
                 shared_broadcast.as_deref(),
                 anchor_g.as_deref(),
@@ -547,16 +842,16 @@ impl Server {
                 &meta,
             )?;
             loss_sum += loss as f64;
-            up_bytes_total += frame_len;
-            frame_lens.push(frame_len);
+            up_bytes_total += ledger_len;
+            frame_lens.push(ledger_len);
+            timing_lens.push(self_len);
             deltas.push(delta_srv);
         }
 
         // --- network simulation: who makes this round's aggregate? ----
-        let outcome = self.net.round(&actives, bcast_frame.len() as u64, &frame_lens);
+        let outcome = self.net.round(&actives, bcast_self_len, &timing_lens);
         self.last_frame_lens = frame_lens;
         self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
-        let down_total = (actives.len() as u64) * bcast_frame.len() as u64;
 
         self.finish_aggregation(
             &deltas,
@@ -705,18 +1000,18 @@ impl Server {
             } else {
                 (0..meta.num_layers()).collect()
             };
-            let frame = {
-                let tmp;
-                let params: &[f32] = match &shared {
-                    Some(b) => b,
-                    None => {
-                        tmp = self.opt.broadcast(0);
-                        &tmp
-                    }
-                };
-                wire::encode_broadcast(params, &meta, &self.luar.recycle_set)?
+            let bcast_params: Vec<f32> = match &shared {
+                Some(b) => b.clone(),
+                None => self.opt.broadcast(0),
             };
+            let frame = wire::encode_broadcast(&bcast_params, &meta, &self.luar.recycle_set)?;
             obs::counter("fl.bcast_encodes", 1);
+            // Residual framing: snapshot this version's params once as
+            // a downlink reference (same once-per-version cadence as
+            // the encode memo).
+            if let Some(st) = &mut self.delta_state {
+                st.note_bcast(version, &bcast_params, &meta);
+            }
             self.async_bcast =
                 Some(AsyncBcastCache { version, shared, anchor, frame, upload_layers });
         }
@@ -725,17 +1020,33 @@ impl Server {
         let cache = self.async_bcast.take().expect("bcast cache populated above");
         // FedMut pairs mutations by parity of the dispatch sequence.
         let slot = self.async_rt.as_ref().unwrap().dispatched() as usize;
-        let (delta_srv, frame_len, loss) = self.client_upload(
+        let (delta_srv, ledger_len, self_len, loss) = self.client_upload(
             client,
             slot,
             t,
+            version,
             lr,
             cache.shared.as_deref(),
             cache.anchor.as_deref(),
             &cache.upload_layers,
             &meta,
         )?;
-        let secs = self.net.client_secs(client, cache.frame.len() as u64, frame_len);
+        // Downlink ledger bytes for this dispatch (residual framing
+        // prices the delta against the client's last-seen version); the
+        // link is always timed by the self-contained lengths, so the
+        // event schedule is bit-identical to a dense-framed run.
+        let bcast_self_len = cache.frame.len() as u64;
+        let bcast_ledger = match &mut self.delta_state {
+            Some(st) => st.bcast_ledger_len(
+                client,
+                version,
+                &meta,
+                &self.luar.recycle_set,
+                bcast_self_len,
+            )?,
+            None => bcast_self_len,
+        };
+        let secs = self.net.client_secs(client, bcast_self_len, self_len);
         let rt = self.async_rt.as_mut().unwrap();
         let payload = UploadPayload {
             client,
@@ -743,8 +1054,8 @@ impl Server {
             gen,
             delta: delta_srv,
             loss,
-            frame_len,
-            bcast_len: cache.frame.len() as u64,
+            frame_len: ledger_len,
+            bcast_len: bcast_ledger,
         };
         rt.dispatch(payload, secs);
         self.async_bcast = Some(cache);

@@ -59,11 +59,13 @@ pub fn select_layers(
 }
 
 /// Indices of the k smallest values (stable order by value then index).
+///
+/// `total_cmp` gives NaN a fixed place at the top of the order (above
+/// +inf), so a NaN score — e.g. an all-zero parameter norm — can never
+/// silently tie and make the selection depend on layer index order.
 fn smallest_k(values: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..values.len()).collect();
-    idx.sort_by(|&a, &b| {
-        values[a].partial_cmp(&values[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| values[a].total_cmp(&values[b]).then(a.cmp(&b)));
     idx.truncate(k);
     idx
 }
@@ -160,6 +162,46 @@ mod tests {
             select_layers(SelectionScheme::Deterministic, 2, &s, &obs, &[0.25; 4], &[0.0; 4], &mut r);
         assert_eq!(sel1, vec![1, 0], "unobserved layer 2 must be excluded");
         assert_eq!(sel1, sel2);
+    }
+
+    #[test]
+    fn nan_scores_sort_last_not_equal() {
+        // Regression: partial_cmp(..).unwrap_or(Equal) let a NaN norm
+        // tie with everything, so selection degraded to index order
+        // and a NaN layer at index 0 was always "smallest".
+        let mut r = rng();
+        let obs = vec![true; 4];
+        let sel = select_layers(
+            SelectionScheme::GradNorm,
+            2,
+            &[1.0; 4],
+            &obs,
+            &[0.25; 4],
+            &[f64::NAN, 0.5, f64::NAN, 0.1],
+            &mut r,
+        );
+        assert_eq!(sel, vec![3, 1], "finite norms must win over NaN");
+        // All-NaN input stays deterministic: index order, sized k.
+        let all = select_layers(
+            SelectionScheme::GradNorm,
+            2,
+            &[1.0; 4],
+            &obs,
+            &[0.25; 4],
+            &[f64::NAN; 4],
+            &mut r,
+        );
+        assert_eq!(all, vec![0, 1]);
+    }
+
+    #[test]
+    fn deterministic_scheme_excludes_nan_scores() {
+        let mut r = rng();
+        let obs = vec![true; 4];
+        let s = vec![f64::NAN, 0.3, 0.7, 0.1];
+        let sel =
+            select_layers(SelectionScheme::Deterministic, 2, &s, &obs, &[0.25; 4], &[0.0; 4], &mut r);
+        assert_eq!(sel, vec![3, 1], "NaN score must sort after finite scores");
     }
 
     #[test]

@@ -52,6 +52,7 @@ USAGE:
                [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
                [--mu-prev F] [--eval-every N] [--out results/run.csv]
                [--link-dist SPEC] [--round-mode SPEC] [--compute-s F]
+               [--delta-frames [BOOL]]
                [--obs off|metrics|full] [--obs-trace FILE]
                [--obs-metrics FILE] [--obs-layer-csv FILE]
                [--config FILE]
@@ -83,7 +84,13 @@ frames, so the Comm column measures real bytes):
                                     for no discount; s=poly => (1+gap)^-a); a
                                     round record = one closed model version
   --compute-s   mean local-compute seconds per client per round
-  (config files also accept deadline_s = F and buffer_k = N)
+  --delta-frames  residual (delta) framing: encode uplinks/broadcasts
+                  against per-client reference snapshots, self-contained
+                  fallback when no valid reference exists. Lossless and
+                  ledger-only — trajectories match dense framing bit for
+                  bit, only recorded bytes shrink (docs/wire.md)
+  (config files also accept deadline_s = F, buffer_k = N, and
+   delta_frames = true|false)
 
 OBSERVABILITY (the obs: config block; telemetry is read-only — an
 `--obs full` run is bit-identical to `--obs off`):
@@ -134,6 +141,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.net.round_mode = RoundMode::parse(spec)?;
     }
     cfg.net.compute_s = args.get_f64("compute-s", cfg.net.compute_s)?;
+    // Bare `--delta-frames` enables; `--delta-frames false` disables a
+    // config-file setting.
+    if let Some(v) = args.get_parse::<bool>("delta-frames")? {
+        cfg.net.delta_frames = v;
+    }
     if let Some(v) = args.get("obs") {
         cfg.obs.level = ObsLevel::parse(v)?;
     }

@@ -48,6 +48,13 @@ pub struct NetCfg {
     /// Mean local-compute seconds per client per round (scaled by each
     /// client's `compute_mult`); 0 models communication-bound rounds.
     pub compute_s: f64,
+    /// Residual (delta) framing: encode uplink updates and downlink
+    /// broadcasts against per-client reference snapshots
+    /// (`wire::Flavor::Delta`), falling back to self-contained frames
+    /// when no valid reference exists. Lossless and ledger-only: model
+    /// trajectories and the link schedule are bit-identical to dense
+    /// framing — only the recorded bytes shrink (see docs/wire.md).
+    pub delta_frames: bool,
 }
 
 impl Default for NetCfg {
@@ -56,6 +63,7 @@ impl Default for NetCfg {
             link_dist: LinkDist::default(),
             round_mode: RoundMode::Sync,
             compute_s: 0.0,
+            delta_frames: false,
         }
     }
 }
@@ -109,6 +117,7 @@ mod tests {
         assert_eq!(cfg.round_mode, RoundMode::Sync);
         assert_eq!(cfg.link_dist, LinkDist::default());
         assert_eq!(cfg.compute_s, 0.0);
+        assert!(!cfg.delta_frames, "delta framing is opt-in");
     }
 
     #[test]
@@ -125,6 +134,7 @@ mod tests {
             },
             round_mode: RoundMode::Sync,
             compute_s: 0.0,
+            delta_frames: false,
         };
         let sim = NetSim::new(cfg, 64, 9);
         let actives: Vec<usize> = (0..64).collect();
@@ -145,6 +155,7 @@ mod tests {
             link_dist: LinkDist::default(),
             round_mode: RoundMode::Sync,
             compute_s: 2.0,
+            delta_frames: false,
         };
         let sim = NetSim::new(cfg, 4, 1);
         let with = sim.client_secs(0, 0, 0);

@@ -44,6 +44,13 @@
 //! * `Broadcast` — downlink frame: full f32 params, with the delta
 //!   layer-id list (R_t) riding in the header's layer-id slot — the
 //!   bytes the paper's §3.2 broadcast actually pays.
+//! * `Delta`     — cross-round residual framing (uplink or downlink):
+//!   each coded layer is either raw f32s or an XOR-vs-reference byte
+//!   stream, whichever is smaller, against a reference snapshot keyed
+//!   by model version and guarded by an FNV hash of the reference.
+//!   Lossless by construction (XOR of f32 bit patterns), so
+//!   delta-framed runs are bit-identical to dense-framed ones — only
+//!   the byte counts differ. See `docs/wire.md`.
 
 use crate::model::ModelMeta;
 use crate::obs;
@@ -67,6 +74,7 @@ pub enum Flavor {
     Broadcast = 6,
     SeededMask = 7,
     Bitmap = 8,
+    Delta = 9,
 }
 
 impl Flavor {
@@ -81,6 +89,7 @@ impl Flavor {
             6 => Flavor::Broadcast,
             7 => Flavor::SeededMask,
             8 => Flavor::Bitmap,
+            9 => Flavor::Delta,
             other => bail!("unknown wire flavor {other}"),
         })
     }
@@ -287,6 +296,128 @@ pub fn dense_frame_len(meta: &ModelMeta) -> u64 {
     (HEADER_LEN + 2 * meta.num_layers() + 4 * meta.dim) as u64
 }
 
+/// Exact wire bytes of a self-contained `Dense` upload of the listed
+/// layers — the baseline a delta uplink frame is measured (and the
+/// link schedule timed) against.
+pub fn dense_subset_len(meta: &ModelMeta, layers: &[usize]) -> u64 {
+    let body: usize = layers.iter().map(|&l| meta.layers[l].size).sum();
+    (HEADER_LEN + 2 * layers.len() + 4 * body) as u64
+}
+
+/// Exact wire bytes of a self-contained `Broadcast` frame carrying
+/// `n_ids` recycle-set layer ids — the downlink delta baseline.
+pub fn broadcast_frame_len(meta: &ModelMeta, n_ids: usize) -> u64 {
+    (HEADER_LEN + 2 * n_ids + 4 * meta.dim) as u64
+}
+
+// ----------------------------------------------------------- delta coding
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Per-layer FNV-1a hashes over the f32 bit patterns of `values` —
+/// what `fl::RefState` stores to validate a reference snapshot without
+/// keeping a second copy.
+pub fn layer_hashes(values: &[f32], meta: &ModelMeta) -> Vec<u64> {
+    meta.layers
+        .iter()
+        .map(|lm| {
+            let mut h = FNV_OFFSET;
+            for &x in &values[lm.offset..lm.offset + lm.size] {
+                h = fnv1a_bytes(h, &x.to_bits().to_le_bytes());
+            }
+            h
+        })
+        .collect()
+}
+
+/// Combine per-layer hashes over the coded layer set into the single
+/// reference check a delta frame carries.
+pub fn combine_layer_hashes(hashes: &[u64], layers: &[usize]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &l in layers {
+        h = fnv1a_bytes(h, &hashes[l].to_le_bytes());
+    }
+    h
+}
+
+/// Significant-byte classes for one XOR residual word: 2-bit code ->
+/// {0, 2, 3, 4} little-endian bytes on the wire. Values close to their
+/// reference zero the sign/exponent byte (and usually the top mantissa
+/// bits), so the workhorse class is 3 bytes; identical values cost two
+/// bits.
+const DELTA_CODE_BYTES: [usize; 4] = [0, 2, 3, 4];
+
+fn delta_code_of(d: u32) -> u32 {
+    if d == 0 {
+        0
+    } else if d < 1 << 16 {
+        1
+    } else if d < 1 << 24 {
+        2
+    } else {
+        3
+    }
+}
+
+/// Wire bytes the XOR-residual stream would cost for one layer.
+fn delta_coded_len(cur: &[f32], reference: &[f32]) -> usize {
+    let mut n = cur.len().div_ceil(4); // packed 2-bit codes
+    for (&c, &r) in cur.iter().zip(reference) {
+        n += DELTA_CODE_BYTES[delta_code_of(c.to_bits() ^ r.to_bits()) as usize];
+    }
+    n
+}
+
+/// One coded layer: a tag byte picking raw f32s or the XOR-residual
+/// stream, whichever is smaller — so a delta frame never exceeds its
+/// self-contained baseline by more than the tag + payload prefix.
+fn delta_code_layer(cur: &[f32], reference: &[f32], out: &mut Vec<u8>) {
+    if delta_coded_len(cur, reference) < 4 * cur.len() {
+        out.push(1);
+        pack_bits(
+            cur.iter().zip(reference).map(|(&c, &r)| delta_code_of(c.to_bits() ^ r.to_bits())),
+            2,
+            out,
+        );
+        for (&c, &r) in cur.iter().zip(reference) {
+            let d = c.to_bits() ^ r.to_bits();
+            let n = DELTA_CODE_BYTES[delta_code_of(d) as usize];
+            out.extend_from_slice(&d.to_le_bytes()[..n]);
+        }
+    } else {
+        out.push(0);
+        push_f32s(out, cur);
+    }
+}
+
+fn delta_decode_layer(cur: &mut Cur, reference: &[f32], out: &mut [f32]) -> Result<()> {
+    match cur.take(1)?[0] {
+        0 => {
+            let vals = cur.f32s(out.len())?;
+            out.copy_from_slice(&vals);
+        }
+        1 => {
+            let codes = unpack_bits(cur, 2, reference.len())?;
+            for ((slot, &r), code) in out.iter_mut().zip(reference).zip(codes) {
+                let n = DELTA_CODE_BYTES[code as usize];
+                let mut b = [0u8; 4];
+                b[..n].copy_from_slice(cur.take(n)?);
+                *slot = f32::from_bits(u32::from_le_bytes(b) ^ r.to_bits());
+            }
+        }
+        other => bail!("unknown delta layer tag {other}"),
+    }
+    Ok(())
+}
+
 /// Number of bits per quantized element for `levels` levels.
 fn level_bits(levels: u32) -> u32 {
     32 - (levels.max(2) - 1).leading_zeros()
@@ -355,11 +486,21 @@ pub fn encode_update(
                     meta.num_layers()
                 );
             }
+            // A single-level grid cannot represent anything but its
+            // own lo; the degenerate-layer contract is `step == 0.0`
+            // on a >= 2-level grid, so reject the hint outright rather
+            // than encode indices that alias every value to lo.
+            if *levels < 2 {
+                bail!("quantized flavor needs >= 2 levels, got {levels}");
+            }
             let bits = level_bits(*levels);
             out = header(Flavor::Quantized, meta.dim, layers)?;
             push_u32(&mut out, *levels);
             for &l in layers {
                 let (lo, step) = ranges[l];
+                if step.is_nan() || step < 0.0 || !lo.is_finite() {
+                    bail!("quantized layer {l} has invalid range (lo {lo}, step {step})");
+                }
                 push_f32(&mut out, lo);
                 push_f32(&mut out, step);
                 let sl = meta.layer(update, l);
@@ -473,6 +614,158 @@ pub fn encode_broadcast(
     Ok(seal(out, recycle_set.len()))
 }
 
+/// Delta payload prefix: inner flavor (u8) + reference version (u64) +
+/// reference hash (u64). With one tag byte per coded layer this bounds
+/// a delta frame at `self-contained + 17 + n_coded_layers` bytes.
+pub const DELTA_PREFIX_LEN: usize = 1 + 8 + 8;
+
+fn delta_prefix(
+    out: &mut Vec<u8>,
+    inner: Flavor,
+    reference: &[f32],
+    meta: &ModelMeta,
+    coded_layers: &[usize],
+    ref_version: u64,
+) {
+    out.push(inner as u8);
+    out.extend_from_slice(&ref_version.to_le_bytes());
+    let check = combine_layer_hashes(&layer_hashes(reference, meta), coded_layers);
+    out.extend_from_slice(&check.to_le_bytes());
+}
+
+/// Encode an uplink update as a `Delta` frame: each listed layer coded
+/// against the same layer of `reference` (the previous decoded upload
+/// this client's `RefState` tracks, at model version `ref_version`).
+/// Lossless: decode with the same reference reproduces `update`
+/// bit-exactly. Callers fall back to a self-contained `Dense` frame
+/// (and count `fl.delta_fallbacks`) when no valid reference exists.
+pub fn encode_update_delta(
+    update: &[f32],
+    meta: &ModelMeta,
+    layers: &[usize],
+    reference: &[f32],
+    ref_version: u64,
+) -> Result<WireFrame> {
+    let _sp = obs::span("wire.encode");
+    if update.len() != meta.dim {
+        bail!("update len {} != model dim {}", update.len(), meta.dim);
+    }
+    if reference.len() != meta.dim {
+        bail!("reference len {} != model dim {}", reference.len(), meta.dim);
+    }
+    for &l in layers {
+        if l >= meta.num_layers() {
+            bail!("layer id {l} out of range");
+        }
+    }
+    let mut out = header(Flavor::Delta, meta.dim, layers)?;
+    delta_prefix(&mut out, Flavor::Dense, reference, meta, layers, ref_version);
+    for &l in layers {
+        delta_code_layer(meta.layer(update, l), meta.layer(reference, l), &mut out);
+    }
+    Ok(seal(out, layers.len()))
+}
+
+/// Decode a delta uplink frame against the local reference snapshot.
+/// Returns the full-dim update (zeros in unlisted layers) and the
+/// reference version the frame was coded against. Fails loudly if the
+/// local reference hashes differently from the encoder's.
+pub fn decode_update_delta(
+    frame: &[u8],
+    meta: &ModelMeta,
+    reference: &[f32],
+) -> Result<(Vec<f32>, u64)> {
+    let _sp = obs::span("wire.decode");
+    let Parsed { flavor, layer_ids, mut cur } = parse_header(frame, meta)?;
+    if flavor != Flavor::Delta {
+        bail!("expected delta frame, got {flavor:?}");
+    }
+    if reference.len() != meta.dim {
+        bail!("reference len {} != model dim {}", reference.len(), meta.dim);
+    }
+    let inner = Flavor::from_u8(cur.take(1)?[0])?;
+    if inner != Flavor::Dense {
+        bail!("delta frame carries {inner:?}, expected a Dense uplink");
+    }
+    let ref_version = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let check = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let local = combine_layer_hashes(&layer_hashes(reference, meta), &layer_ids);
+    if check != local {
+        bail!("delta reference mismatch (frame {check:#018x}, local {local:#018x})");
+    }
+    let mut v = vec![0.0f32; meta.dim];
+    for &l in &layer_ids {
+        let lm = &meta.layers[l];
+        let (rs, re) = (lm.offset, lm.offset + lm.size);
+        let mut sl = vec![0.0f32; lm.size];
+        delta_decode_layer(&mut cur, &reference[rs..re], &mut sl)?;
+        v[rs..re].copy_from_slice(&sl);
+    }
+    Ok((v, ref_version))
+}
+
+/// Encode the downlink broadcast as a `Delta` frame against the params
+/// the receiving client last saw (`reference`, at `ref_version`). All
+/// model layers are coded; the recycle-set ids ride in the header's
+/// layer-id slot exactly as in a self-contained `Broadcast` frame.
+pub fn encode_broadcast_delta(
+    params: &[f32],
+    meta: &ModelMeta,
+    recycle_set: &[usize],
+    reference: &[f32],
+    ref_version: u64,
+) -> Result<WireFrame> {
+    let _sp = obs::span("wire.encode_bcast");
+    if params.len() != meta.dim {
+        bail!("params len {} != model dim {}", params.len(), meta.dim);
+    }
+    if reference.len() != meta.dim {
+        bail!("reference len {} != model dim {}", reference.len(), meta.dim);
+    }
+    let all: Vec<usize> = (0..meta.num_layers()).collect();
+    let mut out = header(Flavor::Delta, meta.dim, recycle_set)?;
+    delta_prefix(&mut out, Flavor::Broadcast, reference, meta, &all, ref_version);
+    for &l in &all {
+        delta_code_layer(meta.layer(params, l), meta.layer(reference, l), &mut out);
+    }
+    Ok(seal(out, recycle_set.len()))
+}
+
+/// Decode a delta downlink frame: (params, recycle layer-id list,
+/// reference version).
+pub fn decode_broadcast_delta(
+    frame: &[u8],
+    meta: &ModelMeta,
+    reference: &[f32],
+) -> Result<(Vec<f32>, Vec<usize>, u64)> {
+    let Parsed { flavor, layer_ids, mut cur } = parse_header(frame, meta)?;
+    if flavor != Flavor::Delta {
+        bail!("expected delta frame, got {flavor:?}");
+    }
+    if reference.len() != meta.dim {
+        bail!("reference len {} != model dim {}", reference.len(), meta.dim);
+    }
+    let inner = Flavor::from_u8(cur.take(1)?[0])?;
+    if inner != Flavor::Broadcast {
+        bail!("delta frame carries {inner:?}, expected a Broadcast downlink");
+    }
+    let ref_version = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let check = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let all: Vec<usize> = (0..meta.num_layers()).collect();
+    let local = combine_layer_hashes(&layer_hashes(reference, meta), &all);
+    if check != local {
+        bail!("delta reference mismatch (frame {check:#018x}, local {local:#018x})");
+    }
+    let mut params = vec![0.0f32; meta.dim];
+    for lm in &meta.layers {
+        let (rs, re) = (lm.offset, lm.offset + lm.size);
+        let mut sl = vec![0.0f32; lm.size];
+        delta_decode_layer(&mut cur, &reference[rs..re], &mut sl)?;
+        params[rs..re].copy_from_slice(&sl);
+    }
+    Ok((params, layer_ids, ref_version))
+}
+
 // ---------------------------------------------------------------- decode
 
 struct Parsed<'a> {
@@ -540,12 +833,24 @@ pub fn decode_update(frame: &[u8], meta: &ModelMeta) -> Result<Decoded> {
         }
         Flavor::Quantized => {
             let levels = cur.u32()?;
+            if levels < 2 {
+                bail!("quantized frame declares {levels} levels (needs >= 2)");
+            }
             let bits = level_bits(levels);
             for &l in &layer_ids {
                 let lm = &meta.layers[l];
                 let lo = cur.f32()?;
                 let step = cur.f32()?;
+                if step.is_nan() || step < 0.0 || !lo.is_finite() {
+                    bail!("quantized layer {l} has invalid range (lo {lo}, step {step})");
+                }
                 let qs = unpack_bits(&mut cur, bits, lm.size)?;
+                // A degenerate (constant) layer encodes all-zero
+                // indices; anything else means the frame and range
+                // disagree, so fail loudly instead of aliasing to lo.
+                if step == 0.0 && qs.iter().any(|&q| q != 0) {
+                    bail!("degenerate quantized layer {l} carries nonzero indices");
+                }
                 for (slot, q) in v[lm.offset..lm.offset + lm.size].iter_mut().zip(qs) {
                     *slot = if step > 0.0 { lo + (q as f32) * step } else { lo };
                 }
@@ -638,6 +943,7 @@ pub fn decode_update(frame: &[u8], meta: &ModelMeta) -> Result<Decoded> {
             }
         }
         Flavor::Broadcast => bail!("broadcast frame on the uplink"),
+        Flavor::Delta => bail!("delta frame needs a reference; use decode_update_delta"),
     }
     Ok(Decoded::Vector(v))
 }
@@ -830,6 +1136,156 @@ mod tests {
             f.len(),
             HEADER_LEN + 2 * meta.num_layers() + 4 + meta.dim.div_ceil(8) + 4 * kept
         );
+    }
+
+    #[test]
+    fn quantized_single_level_hint_rejected_both_sides() {
+        let meta = toy_meta();
+        let u = vec![0.5f32; meta.dim];
+        for levels in [0u32, 1] {
+            let hint =
+                WireHint::Quantized { levels, ranges: vec![(0.0, 0.0); meta.num_layers()] };
+            assert!(
+                encode_update(&u, &meta, &all_layers(&meta), &hint).is_err(),
+                "levels={levels} must be rejected on encode"
+            );
+        }
+        // A frame that *declares* < 2 levels must be rejected on
+        // decode too: craft one from a valid frame by patching the
+        // levels word (first payload u32 after header + 2 ids).
+        let mut q = crate::compress::Quantize::new(8);
+        let mut rng = crate::rng::Rng::seed_from_u64(21);
+        use crate::compress::UpdateCompressor;
+        let mut w = toy_update(21, meta.dim);
+        q.compress(0, &mut w, &meta, 0, &mut rng);
+        let f = encode_update(&w, &meta, &all_layers(&meta), &q.wire_hint()).unwrap();
+        let mut bytes = f.as_bytes().to_vec();
+        let levels_at = HEADER_LEN + 2 * meta.num_layers();
+        bytes[levels_at..levels_at + 4].copy_from_slice(&1u32.to_le_bytes());
+        assert!(decode_update(&bytes, &meta).is_err(), "1-level frame must be rejected");
+    }
+
+    #[test]
+    fn quantized_degenerate_layer_with_nonzero_indices_rejected() {
+        // A constant layer encodes step == 0.0 and all-zero indices;
+        // flip an index bit and the decoder must refuse to alias it.
+        let meta = toy_meta();
+        let mut u = vec![0.25f32; meta.dim];
+        let mut q = crate::compress::Quantize::new(8);
+        let mut rng = crate::rng::Rng::seed_from_u64(22);
+        use crate::compress::UpdateCompressor;
+        q.compress(0, &mut u, &meta, 0, &mut rng);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &q.wire_hint()).unwrap();
+        assert_eq!(
+            decode_update(f.as_bytes(), &meta).map(|d| vec_of(&d).to_vec()).unwrap(),
+            u,
+            "constant layers must round-trip before corruption"
+        );
+        let mut bytes = f.as_bytes().to_vec();
+        // layer 0 payload: levels u32, lo f32, step f32, then packed
+        // indices — set the first packed byte.
+        let idx_at = HEADER_LEN + 2 * meta.num_layers() + 4 + 8;
+        bytes[idx_at] = 0xff;
+        assert!(
+            decode_update(&bytes, &meta).is_err(),
+            "nonzero indices under step == 0.0 must be rejected"
+        );
+    }
+
+    #[test]
+    fn delta_uplink_correlated_roundtrip_saves_bytes() {
+        let meta = toy_meta();
+        let reference = toy_update(30, meta.dim);
+        // A few elements move slightly, the rest are unchanged — the
+        // cross-round correlation delta framing exists to exploit.
+        let mut cur_up = reference.clone();
+        for (i, v) in cur_up.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v *= 1.0 + 1e-3;
+            }
+        }
+        let f =
+            encode_update_delta(&cur_up, &meta, &all_layers(&meta), &reference, 4).unwrap();
+        assert_eq!(f.flavor().unwrap(), Flavor::Delta);
+        assert!(
+            (f.len() as u64) < dense_subset_len(&meta, &all_layers(&meta)),
+            "correlated delta frame {} must beat dense {}",
+            f.len(),
+            dense_subset_len(&meta, &all_layers(&meta))
+        );
+        let (v, ref_version) = decode_update_delta(f.as_bytes(), &meta, &reference).unwrap();
+        assert_eq!(v, cur_up, "delta round-trip must be bit-exact");
+        assert_eq!(ref_version, 4);
+    }
+
+    #[test]
+    fn delta_uplink_uncorrelated_bounded_and_exact() {
+        let meta = toy_meta();
+        let reference = toy_update(31, meta.dim);
+        let cur_up = toy_update(32, meta.dim); // unrelated to reference
+        let layers = all_layers(&meta);
+        let f = encode_update_delta(&cur_up, &meta, &layers, &reference, 9).unwrap();
+        let bound = dense_subset_len(&meta, &layers) as usize + DELTA_PREFIX_LEN + layers.len();
+        assert!(f.len() <= bound, "delta frame {} exceeds bound {bound}", f.len());
+        let (v, _) = decode_update_delta(f.as_bytes(), &meta, &reference).unwrap();
+        assert_eq!(v, cur_up);
+    }
+
+    #[test]
+    fn delta_subset_zero_fills_missing_layers() {
+        let meta = toy_meta();
+        let reference = toy_update(33, meta.dim);
+        let mut cur_up = reference.clone();
+        for v in cur_up.iter_mut() {
+            *v += 1e-4;
+        }
+        let f = encode_update_delta(&cur_up, &meta, &[1], &reference, 2).unwrap();
+        let (v, _) = decode_update_delta(f.as_bytes(), &meta, &reference).unwrap();
+        let lm = &meta.layers[1];
+        assert_eq!(&v[lm.offset..lm.offset + lm.size], &cur_up[lm.offset..lm.offset + lm.size]);
+        assert!(v[..lm.offset].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn delta_reference_mismatch_rejected() {
+        let meta = toy_meta();
+        let reference = toy_update(34, meta.dim);
+        let cur_up = toy_update(35, meta.dim);
+        let f =
+            encode_update_delta(&cur_up, &meta, &all_layers(&meta), &reference, 1).unwrap();
+        let mut wrong = reference.clone();
+        wrong[0] += 1.0;
+        assert!(
+            decode_update_delta(f.as_bytes(), &meta, &wrong).is_err(),
+            "a drifted reference must be refused, never silently mis-decoded"
+        );
+        // plain decode_update must refuse delta frames outright
+        assert!(decode_update(f.as_bytes(), &meta).is_err());
+    }
+
+    #[test]
+    fn delta_broadcast_roundtrip_carries_recycle_ids() {
+        let meta = toy_meta();
+        let reference = toy_update(36, meta.dim);
+        let mut params = reference.clone();
+        for v in params.iter_mut() {
+            *v *= 1.0 + 1e-3; // one small relative server step
+        }
+        let f = encode_broadcast_delta(&params, &meta, &[0], &reference, 7).unwrap();
+        assert!(
+            (f.len() as u64) < broadcast_frame_len(&meta, 1),
+            "delta broadcast {} must beat dense {}",
+            f.len(),
+            broadcast_frame_len(&meta, 1)
+        );
+        let (p, ids, ref_version) =
+            decode_broadcast_delta(f.as_bytes(), &meta, &reference).unwrap();
+        assert_eq!(p, params, "broadcast delta must be bit-exact");
+        assert_eq!(ids, vec![0]);
+        assert_eq!(ref_version, 7);
+        // an uplink-flavored delta frame must be refused on the downlink
+        let up = encode_update_delta(&params, &meta, &all_layers(&meta), &reference, 7).unwrap();
+        assert!(decode_broadcast_delta(up.as_bytes(), &meta, &reference).is_err());
     }
 
     #[test]

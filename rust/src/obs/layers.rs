@@ -38,11 +38,17 @@ pub struct LayerRound {
     /// Mean staleness-discount weight of the round's aggregate (1.0 in
     /// the barrier modes / `s=const`).
     pub stale_discount: f64,
+    /// Mean model-version gap the round's residual (delta) frames were
+    /// coded across (0 when `net.delta_frames` is off or every frame
+    /// shipped self-contained). Round-level, repeated per layer row.
+    pub delta_ref_gap: f64,
 }
 
-pub const CSV_HEADER: &str = "round,layer,name,score,uploaded,recycle_age,wire_bytes,stale_discount";
+pub const CSV_HEADER: &str =
+    "round,layer,name,score,uploaded,recycle_age,wire_bytes,stale_discount,delta_ref_gap";
 
 /// Build the per-layer rows for one aggregation round.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn build_rows(
     round: usize,
     meta: &ModelMeta,
@@ -51,6 +57,7 @@ pub(crate) fn build_rows(
     ages: &[u32],
     up_bytes_total: u64,
     stale_discount: f64,
+    delta_ref_gap: f64,
 ) -> Vec<LayerRound> {
     let uploaded_params: u64 =
         upload_layers.iter().map(|&l| meta.layers[l].size as u64).sum();
@@ -73,6 +80,7 @@ pub(crate) fn build_rows(
                 recycle_age: ages.get(l).copied().unwrap_or(0),
                 wire_bytes,
                 stale_discount,
+                delta_ref_gap,
             }
         })
         .collect()
@@ -90,7 +98,7 @@ pub(crate) fn write_csv(rows: &[LayerRound], path: impl AsRef<Path>) -> std::io:
     for r in rows {
         writeln!(
             f,
-            "{},{},{},{:.6},{},{},{},{:.6}",
+            "{},{},{},{:.6},{},{},{},{:.6},{:.6}",
             r.round,
             r.layer,
             r.name,
@@ -98,7 +106,8 @@ pub(crate) fn write_csv(rows: &[LayerRound], path: impl AsRef<Path>) -> std::io:
             u8::from(r.uploaded),
             r.recycle_age,
             r.wire_bytes,
-            r.stale_discount
+            r.stale_discount,
+            r.delta_ref_gap
         )?;
     }
     Ok(())
@@ -130,7 +139,7 @@ mod tests {
     #[test]
     fn rows_apportion_bytes_to_uploaded_layers() {
         let m = meta();
-        let rows = build_rows(3, &m, &[0], &[0.5, 0.25], &[0, 2], 600, 0.9);
+        let rows = build_rows(3, &m, &[0], &[0.5, 0.25], &[0, 2], 600, 0.9, 0.0);
         assert_eq!(rows.len(), 2);
         assert!(rows[0].uploaded && !rows[1].uploaded);
         assert_eq!(rows[0].wire_bytes, 600, "only uploaded layers carry bytes");
@@ -143,15 +152,22 @@ mod tests {
     #[test]
     fn bytes_split_proportional_to_param_count() {
         let m = meta();
-        let rows = build_rows(0, &m, &[0, 1], &[0.0, 0.0], &[0, 0], 1000, 1.0);
+        let rows = build_rows(0, &m, &[0, 1], &[0.0, 0.0], &[0, 0], 1000, 1.0, 0.0);
         assert_eq!(rows[0].wire_bytes, 600); // 6 of 10 params
         assert_eq!(rows[1].wire_bytes, 400);
     }
 
     #[test]
+    fn delta_ref_gap_repeats_per_row() {
+        let m = meta();
+        let rows = build_rows(2, &m, &[0, 1], &[0.0, 0.0], &[0, 0], 100, 1.0, 1.5);
+        assert!(rows.iter().all(|r| r.delta_ref_gap == 1.5));
+    }
+
+    #[test]
     fn csv_shape() {
         let m = meta();
-        let rows = build_rows(1, &m, &[1], &[0.5, 0.25], &[3, 0], 100, 1.0);
+        let rows = build_rows(1, &m, &[1], &[0.5, 0.25], &[3, 0], 100, 1.0, 2.0);
         let dir = std::env::temp_dir().join("fedluar_obs_layers_test");
         let path = dir.join("layers.csv");
         write_csv(&rows, &path).unwrap();
@@ -160,9 +176,10 @@ mod tests {
         assert_eq!(lines[0], CSV_HEADER);
         assert_eq!(lines.len(), 3);
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 8, "{line}");
+            assert_eq!(line.split(',').count(), 9, "{line}");
         }
         assert!(lines[1].starts_with("1,0,a,0.500000,0,3,0,"));
         assert!(lines[2].starts_with("1,1,b,0.250000,1,0,100,"));
+        assert!(lines[1].ends_with(",2.000000"));
     }
 }

@@ -224,7 +224,10 @@ pub fn snapshot(version: u64) {
 }
 
 /// Record one aggregation round's per-layer telemetry (see
-/// `layers::LayerRound` for the column semantics).
+/// `layers::LayerRound` for the column semantics). `delta_ref_gap` is
+/// the round's mean residual-framing reference gap (0 when
+/// `net.delta_frames` is off or every frame fell back).
+#[allow(clippy::too_many_arguments)]
 pub fn record_layer_round(
     round: usize,
     meta: &ModelMeta,
@@ -233,6 +236,7 @@ pub fn record_layer_round(
     ages: &[u32],
     up_bytes_total: u64,
     stale_discount: f64,
+    delta_ref_gap: f64,
 ) {
     if !enabled() {
         return;
@@ -246,6 +250,7 @@ pub fn record_layer_round(
             ages,
             up_bytes_total,
             stale_discount,
+            delta_ref_gap,
         );
         c.layer_rows.extend(rows);
     });

@@ -100,7 +100,7 @@ impl SimServer {
     fn new(mode: RoundMode, dist: LinkDist, luar_delta: Option<usize>, seed: u64) -> Self {
         let meta = synth_meta();
         let net = NetSim::new(
-            NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1 },
+            NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1, delta_frames: false },
             NUM_CLIENTS,
             42,
         );

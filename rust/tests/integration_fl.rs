@@ -268,6 +268,120 @@ fn client_failures_thin_the_round() {
     assert!(s.history.final_acc() > 0.2, "acc {}", s.history.final_acc());
 }
 
+/// Residual framing on the real round loop is ledger-only: FedAvg and
+/// FedLUAR runs with `delta_frames` on finish in the identical model
+/// state as their dense twins, with strictly fewer uplink ledger bytes
+/// and every fallback counted.
+#[test]
+fn delta_framing_matches_dense_run_exactly() {
+    if !have_artifacts() {
+        return;
+    }
+    for method in [Method::FedAvg, Method::luar(2)] {
+        let mut dense = Server::new(quick_cfg(method.clone())).unwrap();
+        dense.run().unwrap();
+        let mut cfg = quick_cfg(method.clone());
+        cfg.net.delta_frames = true;
+        let mut framed = Server::new(cfg).unwrap();
+        framed.run().unwrap();
+        let (xa, ..) = dense.opt.snapshot();
+        let (xb, ..) = framed.opt.snapshot();
+        assert_eq!(xa, xb, "{method:?}: delta framing must not move the model");
+        assert_eq!(dense.luar.recycle_set, framed.luar.recycle_set, "{method:?}");
+        for (d, f) in dense.history.records.iter().zip(&framed.history.records) {
+            assert_eq!(d.train_loss.to_bits(), f.train_loss.to_bits(), "{method:?}");
+            assert_eq!(d.sim_seconds.to_bits(), f.sim_seconds.to_bits(), "{method:?}");
+        }
+        // per direction the ledger can only shrink (the codec falls
+        // back per frame); across both it must strictly shrink
+        assert!(framed.comm.up_bytes <= dense.comm.up_bytes, "{method:?}");
+        assert!(framed.comm.down_bytes <= dense.comm.down_bytes, "{method:?}");
+        let gap = (dense.comm.up_bytes - framed.comm.up_bytes)
+            + (dense.comm.down_bytes - framed.comm.down_bytes);
+        assert!(
+            gap > 0,
+            "{method:?}: delta framing saved nothing over {} dense bytes",
+            dense.comm.up_bytes + dense.comm.down_bytes
+        );
+        assert_eq!(framed.comm.delta_bytes_saved, gap, "{method:?}: saved-bytes ledger");
+        // round 1 alone is active_clients first contacts per direction
+        assert!(
+            framed.comm.delta_fallbacks >= 2 * framed.cfg.active_clients as u64,
+            "{method:?}: first-contact fallbacks uncounted"
+        );
+        assert_eq!(dense.comm.delta_fallbacks, 0, "{method:?}");
+    }
+}
+
+/// Migration: a v2 checkpoint (no residual-framing section) loads into
+/// a delta-framed build and resumes onto the exact model trajectory —
+/// the reference state starts cold, so the post-resume first contacts
+/// are counted as fallbacks rather than breaking the run.
+#[test]
+fn checkpoint_v2_migrates_into_delta_framed_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let framed_cfg = || {
+        let mut cfg = quick_cfg(Method::luar(2));
+        cfg.net.delta_frames = true;
+        cfg
+    };
+    let mut full = Server::new(framed_cfg()).unwrap();
+    full.run().unwrap();
+    let mut cfg = framed_cfg();
+    cfg.rounds = 4;
+    let mut first = Server::new(cfg).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_v2_migrate.bin");
+    first.save_checkpoint_as(&path, 2).unwrap();
+    let mut resumed = Server::new(framed_cfg()).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 4);
+    assert_eq!(resumed.comm.delta_fallbacks, 0, "v2 carries no residual counters");
+    resumed.run().unwrap();
+    let (xa, ..) = resumed.opt.snapshot();
+    let (xb, ..) = full.opt.snapshot();
+    assert_eq!(xa, xb, "v2-resumed params diverged from straight-through run");
+    assert_eq!(resumed.luar.recycle_set, full.luar.recycle_set);
+    assert!(
+        resumed.comm.delta_fallbacks >= resumed.cfg.active_clients as u64,
+        "cold post-resume references must be counted as fallbacks"
+    );
+}
+
+/// A v3 checkpoint persists the reference state and residual counters:
+/// resume is exact down to the comm ledger, not just the trajectory.
+#[test]
+fn checkpoint_v3_resumes_delta_ledger_exactly() {
+    if !have_artifacts() {
+        return;
+    }
+    let framed_cfg = || {
+        let mut cfg = quick_cfg(Method::luar(2));
+        cfg.net.delta_frames = true;
+        cfg
+    };
+    let mut full = Server::new(framed_cfg()).unwrap();
+    full.run().unwrap();
+    let mut cfg = framed_cfg();
+    cfg.rounds = 4;
+    let mut first = Server::new(cfg).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_v3_delta.bin");
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = Server::new(framed_cfg()).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    resumed.run().unwrap();
+    let (xa, ..) = resumed.opt.snapshot();
+    let (xb, ..) = full.opt.snapshot();
+    assert_eq!(xa, xb, "v3-resumed params diverged from straight-through run");
+    assert_eq!(resumed.comm.up_bytes, full.comm.up_bytes, "uplink ledger must be exact");
+    assert_eq!(resumed.comm.down_bytes, full.comm.down_bytes, "downlink ledger must be exact");
+    assert_eq!(resumed.comm.delta_bytes_saved, full.comm.delta_bytes_saved);
+    assert_eq!(resumed.comm.delta_fallbacks, full.comm.delta_fallbacks);
+}
+
 #[test]
 fn adaptive_delta_respects_theorem_bound() {
     if !have_artifacts() {

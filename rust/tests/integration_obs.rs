@@ -93,7 +93,12 @@ impl SimServer {
         let meta = synth_meta();
         let mode = RoundMode::Async { concurrency: 4, staleness: Staleness::Poly { a: 0.5 } };
         let net = NetSim::new(
-            NetCfg { link_dist: edge_fleet(), round_mode: mode, compute_s: 0.1 },
+            NetCfg {
+                link_dist: edge_fleet(),
+                round_mode: mode,
+                compute_s: 0.1,
+                delta_frames: false,
+            },
             NUM_CLIENTS,
             42,
         );
@@ -249,6 +254,7 @@ impl SimServer {
                 &self.luar.staleness,
                 up_bytes_total,
                 discount,
+                0.0,
             );
             obs::gauge("luar.kappa", kappa);
             obs::snapshot(self.round as u64);
@@ -425,9 +431,9 @@ fn full_run_emits_wellformed_artifacts() {
 
     let csv_text = std::fs::read_to_string(&csv).unwrap();
     let mut lines = csv_text.lines();
-    assert_eq!(lines.next().unwrap().split(',').count(), 8, "8-column layer CSV");
+    assert_eq!(lines.next().unwrap().split(',').count(), 9, "9-column layer CSV");
     for line in lines {
-        assert_eq!(line.split(',').count(), 8, "{line}");
+        assert_eq!(line.split(',').count(), 9, "{line}");
     }
     assert_eq!(csv_text.lines().count(), 1 + 6 * LAYERS);
 }

@@ -6,6 +6,7 @@
 use fedluar::comm::CommAccountant;
 use fedluar::compress::{Binarize, DropoutAvg, LowRank, Quantize, UpdateCompressor};
 use fedluar::config::{RecycleMode, SelectionScheme};
+use fedluar::fl::{DeltaFrameState, DELTA_MAX_REF_GAP};
 use fedluar::luar::{select_layers, LuarState};
 use fedluar::model::ModelMeta;
 use fedluar::net::wire::{self, WireHint};
@@ -392,6 +393,165 @@ fn prop_all_wire_flavors_roundtrip_with_exact_ledger() {
         for (name, f) in &frames {
             assert!(f.len() >= wire::HEADER_LEN, "seed {seed}: {name} under-sized");
         }
+    }
+}
+
+/// `Flavor::Delta` uplink frames round-trip bit-exactly over
+/// randomized shapes, layer subsets, reference gaps, and correlation
+/// regimes; the frame is bounded by its self-contained baseline plus
+/// the delta prefix and per-layer tags; a drifted reference is
+/// rejected loudly.
+#[test]
+fn prop_delta_uplink_roundtrip_over_shapes_and_gaps() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(8000 + seed);
+        let meta = rand_meta(&mut rng);
+        let n = meta.num_layers();
+        let k = rng.gen_range(1, n + 1);
+        let mut subset = rng.sample_indices(n, k);
+        subset.sort_unstable();
+        let reference: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // half the cases are round-over-round correlated (the regime
+        // delta framing exists for), half are fresh draws
+        let correlated = rng.gen_bool(0.5);
+        let cur: Vec<f32> = reference
+            .iter()
+            .map(|&r| {
+                if correlated {
+                    r * (1.0 + 1e-3 * rng.normal_f32(0.0, 1.0))
+                } else {
+                    rng.normal_f32(0.0, 1.0)
+                }
+            })
+            .collect();
+        let gap = rng.gen_range(1, DELTA_MAX_REF_GAP as usize + 1) as u64;
+        let version = 100u64;
+        let f =
+            wire::encode_update_delta(&cur, &meta, &subset, &reference, version - gap).unwrap();
+        let self_len = wire::dense_subset_len(&meta, &subset);
+        assert!(
+            f.len() as u64 <= self_len + wire::DELTA_PREFIX_LEN as u64 + subset.len() as u64,
+            "seed {seed}: delta frame {} vs bound {self_len}+",
+            f.len()
+        );
+        let (back, rv) = wire::decode_update_delta(f.as_bytes(), &meta, &reference).unwrap();
+        assert_eq!(rv, version - gap, "seed {seed}: reference version");
+        for l in 0..n {
+            let lm = &meta.layers[l];
+            let r = lm.offset..lm.offset + lm.size;
+            if subset.contains(&l) {
+                let same = back[r.clone()]
+                    .iter()
+                    .zip(&cur[r.clone()])
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "seed {seed}: layer {l} not bit-exact");
+            } else {
+                assert!(back[r].iter().all(|&x| x == 0.0), "seed {seed}: layer {l} not zero");
+            }
+        }
+        // corrupting the reference inside a coded layer must be caught
+        let lm = &meta.layers[subset[0]];
+        let mut drifted = reference.clone();
+        drifted[lm.offset] += 1.0;
+        assert!(
+            wire::decode_update_delta(f.as_bytes(), &meta, &drifted).is_err(),
+            "seed {seed}: drifted reference must be rejected"
+        );
+    }
+}
+
+/// Downlink `Flavor::Delta` frames carry the recycle-set ids and
+/// reproduce the params bit-exactly against the matching reference.
+#[test]
+fn prop_delta_broadcast_roundtrip_over_shapes() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(8500 + seed);
+        let meta = rand_meta(&mut rng);
+        let n = meta.num_layers();
+        let k = rng.gen_range(0, n + 1);
+        let mut recycle = rng.sample_indices(n, k);
+        recycle.sort_unstable();
+        let reference: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let params: Vec<f32> =
+            reference.iter().map(|&r| r * (1.0 + 1e-3 * rng.normal_f32(0.0, 1.0))).collect();
+        let f = wire::encode_broadcast_delta(&params, &meta, &recycle, &reference, 7).unwrap();
+        let (back, ids, rv) =
+            wire::decode_broadcast_delta(f.as_bytes(), &meta, &reference).unwrap();
+        assert_eq!(rv, 7, "seed {seed}");
+        assert_eq!(ids, recycle, "seed {seed}: recycle ids");
+        let same = back.iter().zip(&params).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "seed {seed}: params not bit-exact");
+        let self_len = wire::broadcast_frame_len(&meta, recycle.len());
+        assert!(
+            f.len() as u64 <= self_len + wire::DELTA_PREFIX_LEN as u64 + n as u64,
+            "seed {seed}: delta broadcast {} vs bound {self_len}+",
+            f.len()
+        );
+        // correlated broadcasts beat the self-contained baseline once
+        // the model is big enough to amortize the 17-byte prefix
+        if meta.dim >= 64 {
+            assert!(
+                (f.len() as u64) < self_len,
+                "seed {seed}: correlated broadcast must save bytes"
+            );
+        }
+    }
+}
+
+/// `DeltaFrameState` policy: first contact always falls back, a usable
+/// reference within `DELTA_MAX_REF_GAP` engages, savings never exceed
+/// the self-contained baseline, and `drain_round` zeroes the ledger.
+#[test]
+fn prop_delta_refstate_fallbacks_and_savings() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(9000 + seed);
+        // dim >= 64 so a correlated broadcast always amortizes the
+        // delta prefix and the warm path reliably engages
+        let meta = loop {
+            let m = rand_meta(&mut rng);
+            if m.dim >= 64 {
+                break m;
+            }
+        };
+        let clients = rng.gen_range(2, 6);
+        let mut st = DeltaFrameState::new(clients);
+        // uplink: no reference yet -> None; in-gap reference -> Some
+        assert!(st.usable_up_ref_version(0, 5).is_none(), "seed {seed}: first contact");
+        let u: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        st.record_upload(0, 5, &u, &meta);
+        assert_eq!(st.usable_up_ref_version(0, 5 + DELTA_MAX_REF_GAP), Some(5));
+        assert!(
+            st.usable_up_ref_version(0, 6 + DELTA_MAX_REF_GAP).is_none(),
+            "seed {seed}: stale reference must not engage"
+        );
+        assert!(st.usable_up_ref_version(1, 5).is_none(), "seed {seed}: other client");
+        // downlink: version 0 broadcast is everyone's first contact
+        let p0: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let self_len = wire::broadcast_frame_len(&meta, 0);
+        st.note_bcast(0, &p0, &meta);
+        for c in 0..clients {
+            let len = st.bcast_ledger_len(c, 0, &meta, &[], self_len).unwrap();
+            assert_eq!(len, self_len, "seed {seed}: first contact ships self-contained");
+        }
+        let (saved, fallbacks, gap) = st.drain_round();
+        assert_eq!((saved, fallbacks), (0, clients as u64), "seed {seed}");
+        assert_eq!(gap, 0.0, "seed {seed}");
+        // next version: every client has the v0 reference
+        let p1: Vec<f32> = p0.iter().map(|&x| x * (1.0 + 1e-3)).collect();
+        st.note_bcast(1, &p1, &meta);
+        let mut total = 0u64;
+        for c in 0..clients {
+            let len = st.bcast_ledger_len(c, 1, &meta, &[], self_len).unwrap();
+            assert!(len <= self_len, "seed {seed}: ledger never exceeds baseline");
+            total += len;
+        }
+        let (saved, fallbacks, gap) = st.drain_round();
+        assert_eq!(fallbacks, 0, "seed {seed}: warm references must engage");
+        assert_eq!(saved, clients as u64 * self_len - total, "seed {seed}: saved arithmetic");
+        assert!(saved > 0, "seed {seed}: correlated broadcast saves bytes");
+        assert_eq!(gap, 1.0, "seed {seed}: one-version reference gap");
+        // drained: a second drain reports nothing
+        assert_eq!(st.drain_round(), (0, 0, 0.0), "seed {seed}");
     }
 }
 
