@@ -91,6 +91,7 @@ fn telemetry_demo() -> anyhow::Result<()> {
         trace_path: Some("results/quickstart/trace.jsonl".into()),
         metrics_path: Some("results/quickstart/metrics.prom".into()),
         layer_csv: Some("results/quickstart/layers.csv".into()),
+        clients_csv: Some("results/quickstart/clients.csv".into()),
     })?;
 
     let mut luar = LuarState::new(num_layers, meta.dim);

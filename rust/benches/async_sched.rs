@@ -9,7 +9,9 @@ use fedluar::bench_harness::Bench;
 use fedluar::fl::{AsyncRuntime, UploadPayload};
 use fedluar::model::ModelMeta;
 use fedluar::net::sched::{simulate_round, RoundMode};
-use fedluar::net::{wire, AsyncQueue, Staleness};
+use fedluar::net::{
+    speed_cohort, wire, AsyncQueue, ClientStats, LinkDist, LinkFleet, Staleness,
+};
 use fedluar::rng::Rng;
 use std::path::PathBuf;
 
@@ -127,4 +129,55 @@ fn main() {
         std::hint::black_box(cached.as_bytes().first());
     });
     b.compare("bcast_cached_reuse", "bcast_encode_per_dispatch");
+
+    // 5) straggler-aware sampling: the per-round cohort-draw cost of
+    //    the telemetry-weighted sampler vs the legacy uniform draw at
+    //    fleet scale (256 clients, 32 per cohort), plus the simulated
+    //    wall-clock each schedule buys on a bimodal straggler fleet —
+    //    the draw costs microseconds, the biased schedule saves
+    //    simulated minutes.
+    const FLEET: usize = 256;
+    const COHORT: usize = 32;
+    let fleet = LinkFleet::new(
+        &LinkDist::Bimodal {
+            fast_frac: 0.75,
+            fast_up_mbps: 80.0,
+            slow_up_mbps: 1.0,
+            down_mbps: 100.0,
+            rtt_s: 0.0,
+        },
+        FLEET,
+        42,
+    );
+    let frame = 1u64 << 20; // 1 MiB upload
+    let mut stats = ClientStats::new(FLEET);
+    for c in 0..FLEET {
+        stats.record_dispatch(c, fleet.link(c).upload_secs(frame), frame);
+    }
+    let mut round = 0usize;
+    b.bench("cohort_uniform_draw_256", None, || {
+        let mut r = Rng::seed_from_u64(17 ^ 0xc11e_0000 ^ round as u64);
+        std::hint::black_box(r.sample_indices(FLEET, COHORT));
+        round += 1;
+    });
+    let mut round = 0usize;
+    b.bench("cohort_speed_draw_256", None, || {
+        std::hint::black_box(speed_cohort(&stats, 1.0, round, COHORT, 17));
+        round += 1;
+    });
+    b.compare("cohort_uniform_draw_256", "cohort_speed_draw_256");
+
+    let round_secs = |cohort: &[usize]| {
+        cohort.iter().map(|&c| fleet.link(c).upload_secs(frame)).fold(0.0f64, f64::max)
+    };
+    let (mut uni, mut spd) = (0.0f64, 0.0f64);
+    for t in 0..50usize {
+        let mut r = Rng::seed_from_u64(17 ^ 0xc11e_0000 ^ t as u64);
+        uni += round_secs(&r.sample_indices(FLEET, COHORT));
+        spd += round_secs(&speed_cohort(&stats, 1.0, t, COHORT, 17));
+    }
+    println!(
+        "  -> simulated wall-clock over 50 bimodal rounds: \
+         uniform {uni:.1}s vs speed:pow=1 {spd:.1}s"
+    );
 }

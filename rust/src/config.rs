@@ -8,7 +8,7 @@
 //! method/optimizer specs use compact strings like `luar:delta=2`.
 
 use crate::data::{SynthKind, SynthSpec};
-use crate::net::{LinkDist, NetCfg, RoundMode};
+use crate::net::{LinkDist, NetCfg, RoundMode, SamplerCfg};
 use crate::obs::{ObsCfg, ObsLevel};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -298,17 +298,19 @@ pub struct RunConfig {
     /// survivors).
     pub client_failure_rate: f64,
     /// Network simulation block: link fleet distribution, round-closing
-    /// policy, local-compute time (`link_dist`, `round_mode`,
-    /// `deadline_s`, `buffer_k`, `compute_s` config keys). Round modes:
-    /// `sync`, `deadline:s=F`, `buffered:k=N`, and the barrier-free
+    /// policy, local-compute time, and the cohort-draw policy
+    /// (`link_dist`, `round_mode`, `deadline_s`, `buffer_k`,
+    /// `compute_s`, `sampler` config keys). Round modes: `sync`,
+    /// `deadline:s=F`, `buffered:k=N`, and the barrier-free
     /// `async:c=N,s=const|poly[,a=F]` (`c=all` pins concurrency to
-    /// `active_clients`).
+    /// `active_clients`). Samplers: `uniform`, `speed:pow=F`,
+    /// `staleness:cap=N`.
     pub net: NetCfg,
     /// Observability block: telemetry level and artifact paths (flat
     /// config keys `obs_level`, `obs_trace`, `obs_metrics`,
-    /// `obs_layer_csv`; `none` clears a path). Telemetry never
-    /// perturbs the simulation — `off` and `full` runs are
-    /// bit-identical (`tests/integration_obs.rs`).
+    /// `obs_layer_csv`, `obs_clients_csv`; `none` clears a path).
+    /// Telemetry never perturbs the simulation — `off` and `full` runs
+    /// are bit-identical (`tests/integration_obs.rs`).
     pub obs: ObsCfg,
 }
 
@@ -409,8 +411,9 @@ impl RunConfig {
              lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
              mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
              client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n\
-             delta_frames = {}\n\
-             obs_level = {}\nobs_trace = {}\nobs_metrics = {}\nobs_layer_csv = {}\n",
+             delta_frames = {}\nsampler = {}\n\
+             obs_level = {}\nobs_trace = {}\nobs_metrics = {}\nobs_layer_csv = {}\n\
+             obs_clients_csv = {}\n",
             self.model,
             self.rounds,
             self.num_clients,
@@ -439,10 +442,12 @@ impl RunConfig {
             self.net.round_mode.spec_string(),
             self.net.compute_s,
             self.net.delta_frames,
+            self.net.sampler.spec_string(),
             self.obs.level.name(),
             self.obs.trace_path.as_deref().unwrap_or("none"),
             self.obs.metrics_path.as_deref().unwrap_or("none"),
             self.obs.layer_csv.as_deref().unwrap_or("none"),
+            self.obs.clients_csv.as_deref().unwrap_or("none"),
         )
     }
 
@@ -530,6 +535,11 @@ impl RunConfig {
         if let Some(v) = kv.get("delta_frames") {
             cfg.net.delta_frames = v.parse().context("bad delta_frames")?;
         }
+        // Biased sampling is opt-in; configs written before the key
+        // existed parse as `uniform` (the legacy cohort stream).
+        if let Some(v) = kv.get("sampler") {
+            cfg.net.sampler = SamplerCfg::parse(v)?;
+        }
         // obs: block (flat keys); `none` leaves a path unset.
         if let Some(v) = kv.get("obs_level") {
             cfg.obs.level = ObsLevel::parse(v)?;
@@ -543,6 +553,9 @@ impl RunConfig {
         }
         if let Some(v) = kv.get("obs_layer_csv") {
             cfg.obs.layer_csv = path(v);
+        }
+        if let Some(v) = kv.get("obs_clients_csv") {
+            cfg.obs.clients_csv = path(v);
         }
         Ok(cfg)
     }
@@ -580,6 +593,7 @@ mod tests {
         cfg.net.round_mode = RoundMode::Deadline { deadline_s: 2.5 };
         cfg.net.compute_s = 0.5;
         cfg.net.delta_frames = true;
+        cfg.net.sampler = SamplerCfg::Speed { pow: 1.5 };
         let text = cfg.save_kv();
         let back = RunConfig::load_kv(&text).unwrap();
         assert_eq!(back.method, cfg.method);
@@ -618,6 +632,22 @@ mod tests {
         let cfg = RunConfig::load_kv(&format!("{base}delta_frames = true\n")).unwrap();
         assert!(cfg.net.delta_frames);
         assert!(RunConfig::load_kv(&format!("{base}delta_frames = sideways\n")).is_err());
+    }
+
+    #[test]
+    fn sampler_key_parses_and_defaults_uniform() {
+        // legacy configs written before the key existed parse as uniform
+        let legacy = "model = mlp\nrounds = 3\n";
+        assert_eq!(RunConfig::load_kv(legacy).unwrap().net.sampler, SamplerCfg::Uniform);
+        let base = RunConfig::benchmark("mlp").unwrap().save_kv();
+        let cfg = RunConfig::load_kv(&format!("{base}sampler = speed:pow=2\n")).unwrap();
+        assert_eq!(cfg.net.sampler, SamplerCfg::Speed { pow: 2.0 });
+        let cfg = RunConfig::load_kv(&format!("{base}sampler = staleness:cap=3\n")).unwrap();
+        assert_eq!(cfg.net.sampler, SamplerCfg::Staleness { cap: 3 });
+        assert!(RunConfig::load_kv(&format!("{base}sampler = psychic\n")).is_err());
+        // staleness requires its cap; speed rejects nonpositive bias
+        assert!(RunConfig::load_kv(&format!("{base}sampler = staleness\n")).is_err());
+        assert!(RunConfig::load_kv(&format!("{base}sampler = speed:pow=0\n")).is_err());
     }
 
     #[test]

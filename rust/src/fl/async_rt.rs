@@ -116,6 +116,12 @@ pub struct AsyncRuntime {
     /// Absorbed uploads per aggregation (one server "round").
     pub agg_goal: usize,
     pub staleness: Staleness,
+    /// Bounded staleness (`sampler = staleness:cap=N`): uploads with
+    /// `version_gap > cap` are held out of the aggregation mean and the
+    /// weighted combine (their bytes and clock are still paid). `None`
+    /// (the default) keeps every upload in — exactly the legacy
+    /// behavior. Config, not state: never serialized.
+    pub stale_cap: Option<u64>,
     queue: AsyncQueue,
     pending: BTreeMap<u64, UploadPayload>,
     /// Absorbed uploads waiting for the next aggregation.
@@ -147,6 +153,7 @@ impl AsyncRuntime {
             concurrency: concurrency.max(1),
             agg_goal: agg_goal.max(1),
             staleness,
+            stale_cap: None,
             queue: AsyncQueue::new(),
             pending: BTreeMap::new(),
             buffer: Vec::new(),
@@ -159,6 +166,19 @@ impl AsyncRuntime {
             sample_gen: 0,
             sample_idx: 0,
         }
+    }
+
+    /// Builder: attach a bounded-staleness cap (chainable so every
+    /// legacy `new`/`from_state` call site stays unchanged).
+    pub fn with_stale_cap(mut self, cap: Option<u64>) -> Self {
+        self.stale_cap = cap;
+        self
+    }
+
+    /// Whether an absorbed upload's gap passes the bounded-staleness
+    /// cap (always true without one).
+    pub fn within_cap(&self, version_gap: u64) -> bool {
+        self.stale_cap.map(|cap| version_gap <= cap).unwrap_or(true)
     }
 
     /// Uploads currently in flight.
@@ -231,7 +251,18 @@ impl AsyncRuntime {
         self.version += 1;
         let down_bytes = std::mem::take(&mut self.down_since_agg);
         let n = uploads.len();
-        let mean_gap = if n > 0 {
+        // Bounded staleness: the mean is taken over the uploads the cap
+        // admits. If the cap holds *every* upload out, fall back to all
+        // of them — the caller includes them all too, so an aggregation
+        // is never empty.
+        let admitted: Vec<f64> = uploads
+            .iter()
+            .filter(|u| self.within_cap(u.version_gap))
+            .map(|u| u.version_gap as f64)
+            .collect();
+        let mean_gap = if !admitted.is_empty() {
+            admitted.iter().sum::<f64>() / admitted.len() as f64
+        } else if n > 0 {
             uploads.iter().map(|u| u.version_gap as f64).sum::<f64>() / n as f64
         } else {
             0.0
@@ -277,6 +308,7 @@ impl AsyncRuntime {
             concurrency: concurrency.max(1),
             agg_goal: agg_goal.max(1),
             staleness,
+            stale_cap: None,
             queue: AsyncQueue::from_events(&st.events),
             pending: st.pending.into_iter().collect(),
             buffer: st.buffer,
@@ -429,6 +461,35 @@ mod tests {
             assert_eq!(x.version_gap, y.version_gap);
             assert_eq!(x.weight, y.weight);
         }
+    }
+
+    #[test]
+    fn stale_cap_bounds_the_mean_gap() {
+        // no cap: legacy behavior, mean over everything
+        let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Const);
+        assert!(rt.within_cap(u64::MAX));
+        rt.version = 5;
+        rt.dispatch(payload(0, 5, 1), 1.0); // gap 0 at absorb
+        rt.dispatch(payload(1, 1, 1), 1.0); // gap 4 at absorb
+        rt.absorb_instant();
+        assert_eq!(rt.take_aggregation().mean_gap, 2.0);
+
+        // cap=2 holds the gap-4 upload out of the mean
+        let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Const).with_stale_cap(Some(2));
+        assert!(rt.within_cap(2) && !rt.within_cap(3));
+        rt.version = 5;
+        rt.dispatch(payload(0, 5, 1), 1.0);
+        rt.dispatch(payload(1, 1, 1), 1.0);
+        rt.absorb_instant();
+        assert_eq!(rt.take_aggregation().mean_gap, 0.0);
+
+        // all uploads over the cap: fall back to the mean over all
+        let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Const).with_stale_cap(Some(1));
+        rt.version = 5;
+        rt.dispatch(payload(0, 1, 1), 1.0);
+        rt.dispatch(payload(1, 3, 1), 1.0);
+        rt.absorb_instant();
+        assert_eq!(rt.take_aggregation().mean_gap, 3.0);
     }
 
     #[test]

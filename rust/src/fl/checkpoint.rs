@@ -27,6 +27,14 @@
 //! fallback case). `save_checkpoint_as` writes the older formats so
 //! the migration path stays testable.
 //!
+//! Format v4 appends the per-client sampler telemetry
+//! (`Server::sampler_stats`: dispatch/absorb/held counts, upload-time
+//! and byte sums) plus the in-progress async cohort memo — under
+//! `sampler = speed` the cohort depends on the telemetry at first
+//! sampling, so resume must restore rather than resample it. v1–v3
+//! checkpoints still load with a cold table: uniform runs are
+//! unaffected, a resumed speed run re-warms from scratch.
+//!
 //! Not captured (documented limits): per-client compressor state
 //! (error-feedback residuals, LBGM anchors) and MOON's previous local
 //! models — resuming a run that uses those restarts their state, which
@@ -39,7 +47,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FLCK";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 struct Writer {
     buf: Vec<u8>,
@@ -266,6 +274,25 @@ impl Server {
                 }
             }
         }
+        if version >= 4 {
+            // --- v4: per-client sampler telemetry ---------------------
+            w.u64s(&self.sampler_stats.dispatches);
+            w.u64s(&self.sampler_stats.absorbed);
+            w.u64s(&self.sampler_stats.held_stale);
+            w.f64s(&self.sampler_stats.upload_secs_sum);
+            w.u64s(&self.sampler_stats.up_bytes);
+            // In-progress async cohort memo: under `speed` the cohort
+            // depends on the telemetry at first sampling, so a resumed
+            // run must restore it rather than resample.
+            match &self.async_cohort {
+                None => w.buf.push(0),
+                Some((gen, cohort)) => {
+                    w.buf.push(1);
+                    w.u64(*gen);
+                    w.usizes(cohort);
+                }
+            }
+        }
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -345,7 +372,10 @@ impl Server {
                         self.cfg.num_clients
                     );
                 }
-                self.async_rt = Some(AsyncRuntime::from_state(c, goal, staleness, state));
+                self.async_rt = Some(
+                    AsyncRuntime::from_state(c, goal, staleness, state)
+                        .with_stale_cap(self.cfg.net.sampler.stale_cap()),
+                );
             } else {
                 self.async_rt = None;
             }
@@ -394,8 +424,46 @@ impl Server {
         }
         // Dispatch-side memos are derived state: drop them so the first
         // post-restore dispatch rebuilds against the restored model.
+        // (v4 below restores the cohort memo over the cleared value —
+        // under `speed` it depends on the telemetry at first sampling
+        // and must not be resampled.)
         self.async_bcast = None;
         self.async_cohort = None;
+        // Pre-v4 files carry no sampler telemetry: resume with a cold
+        // table (uniform runs are unaffected; a resumed speed run
+        // re-warms from scratch).
+        self.sampler_stats = crate::net::ClientStats::new(self.cfg.num_clients);
+        if version >= 4 {
+            let dispatches = r.u64s()?;
+            let absorbed = r.u64s()?;
+            let held_stale = r.u64s()?;
+            let upload_secs_sum = r.f64s()?;
+            let up_bytes = r.u64s()?;
+            if dispatches.len() != self.cfg.num_clients
+                || absorbed.len() != self.cfg.num_clients
+                || held_stale.len() != self.cfg.num_clients
+                || upload_secs_sum.len() != self.cfg.num_clients
+                || up_bytes.len() != self.cfg.num_clients
+            {
+                bail!(
+                    "checkpoint tracks sampler telemetry for {} clients, server has {}",
+                    dispatches.len(),
+                    self.cfg.num_clients
+                );
+            }
+            self.sampler_stats = crate::net::ClientStats {
+                dispatches,
+                absorbed,
+                held_stale,
+                upload_secs_sum,
+                up_bytes,
+            };
+            if r.take(1)?[0] == 1 {
+                let gen = r.u64()?;
+                let cohort = r.usizes()?;
+                self.async_cohort = Some((gen, cohort));
+            }
+        }
         Ok(())
     }
 }

@@ -57,7 +57,7 @@ use crate::data::FedDataset;
 use crate::luar::{DeltaController, LuarState};
 use crate::metrics::{AbsorbRecord, History, RoundRecord};
 use crate::model::{artifacts_dir, ModelMeta};
-use crate::net::{wire, NetSim, RoundMode, Staleness};
+use crate::net::{links, wire, ClientStats, NetSim, RoundMode, SamplerCfg, Staleness};
 use crate::obs;
 use crate::optim::ServerOpt;
 use crate::rng::Rng;
@@ -104,13 +104,22 @@ pub struct Server {
     /// version instead of once per dispatch. Derived state only:
     /// rebuilt lazily, cleared on checkpoint load, never serialized.
     async_bcast: Option<AsyncBcastCache>,
-    /// The generation's failure-filtered cohort (deterministic in
-    /// (gen, seed)), sampled once per generation. Same cache policy.
+    /// The generation's failure-filtered cohort, sampled once per
+    /// generation. Deterministic in (gen, seed) under `uniform`, but
+    /// under `speed` it also reads the mutable telemetry table — so
+    /// unlike `async_bcast` this memo IS serialized (checkpoint v4)
+    /// and restored rather than resampled on resume.
     async_cohort: Option<(u64, Vec<usize>)>,
     /// Residual-framing references (`Some` iff `net.delta_frames`):
     /// per-client uplink snapshots, the broadcast ring, and the round's
     /// savings/fallback/gap accumulators drained by the absorb half.
     pub delta_state: Option<DeltaFrameState>,
+    /// Per-client participation + upload-latency telemetry, recorded on
+    /// every dispatch/absorb regardless of policy (so `speed` sampling
+    /// is measurable before it is enabled). Read by the speed-biased
+    /// cohort draw, exported as `*_clients.csv`, persisted in
+    /// checkpoint format v4.
+    pub sampler_stats: ClientStats,
 }
 
 /// Broadcast versions kept as downlink delta references; older clients
@@ -388,6 +397,7 @@ impl Server {
             async_bcast: None,
             async_cohort: None,
             delta_state: cfg.net.delta_frames.then(|| DeltaFrameState::new(cfg.num_clients)),
+            sampler_stats: ClientStats::new(cfg.num_clients),
             cfg,
         })
     }
@@ -699,6 +709,10 @@ impl Server {
             obs::gauge("luar.kappa", kappa);
             obs::observe("agg.mean_gap", mean_gap);
             obs::counter("agg.rounds", 1);
+            // Per-client rows (the `*_clients.csv` export): replace the
+            // snapshot each aggregation so `obs::finish` writes the
+            // final cumulative table.
+            obs::record_client_rounds(&self.sampler_stats, &self.net.fleet);
             obs::snapshot(self.round as u64);
         }
 
@@ -766,7 +780,16 @@ impl Server {
         let meta = self.engine.meta.clone();
         let lr = cfg.lr_at(t);
         let a = cfg.active_clients;
-        let mut actives = self.ds.sample_clients(t, a, cfg.seed);
+        // Cohort draw. `uniform` (and `staleness`, which only shapes
+        // async absorption) keep the legacy sample stream literally —
+        // the bit-exactness contract the equivalence suite pins. Only
+        // `speed` diverges, onto its own salted RNG stream.
+        let mut actives = match cfg.net.sampler {
+            SamplerCfg::Speed { pow } => {
+                crate::net::speed_cohort(&self.sampler_stats, pow, t, a, cfg.seed)
+            }
+            _ => self.ds.sample_clients(t, a, cfg.seed),
+        };
         // Failure injection: each active client independently fails
         // before uploading with the configured probability; the server
         // aggregates over survivors (never fewer than one).
@@ -846,10 +869,18 @@ impl Server {
             frame_lens.push(ledger_len);
             timing_lens.push(self_len);
             deltas.push(delta_srv);
+            // Per-client telemetry: the upload latency the link schedule
+            // will charge (self-contained length — framing-invariant).
+            self.record_dispatch_telemetry(client, self_len);
         }
 
         // --- network simulation: who makes this round's aggregate? ----
         let outcome = self.net.round(&actives, bcast_self_len, &timing_lens);
+        for (slot, &client) in actives.iter().enumerate() {
+            if outcome.included[slot] {
+                self.sampler_stats.record_absorbed(client);
+            }
+        }
         self.last_frame_lens = frame_lens;
         self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
 
@@ -887,8 +918,10 @@ impl Server {
             if self.cfg.client_failure_rate >= 1.0 {
                 anyhow::bail!("async mode cannot progress with client_failure_rate >= 1");
             }
-            self.async_rt =
-                Some(AsyncRuntime::new(self.cfg.num_clients, c, goal, staleness));
+            self.async_rt = Some(
+                AsyncRuntime::new(self.cfg.num_clients, c, goal, staleness)
+                    .with_stale_cap(self.cfg.net.sampler.stale_cap()),
+            );
         }
         loop {
             // Refill to the concurrency cap: each freed slot dispatches
@@ -927,6 +960,26 @@ impl Server {
     fn absorb_async_batch(&mut self, batch: AggBatch) -> Result<()> {
         let AggBatch { uploads, round_secs, down_bytes, mean_gap, tail_s } = batch;
         let n = uploads.len();
+        // Bounded staleness (`sampler = staleness:cap=N`): uploads over
+        // the cap are held out of the weighted combine (their bytes and
+        // clock are already paid). Without a cap every upload is
+        // included — the legacy behavior, bit-exactly. If the cap holds
+        // *everything* out, include everything instead: an aggregation
+        // is never empty (mirrors `take_aggregation`'s mean fallback).
+        let rt = self.async_rt.as_ref().expect("async batch implies runtime");
+        let mut included: Vec<bool> =
+            uploads.iter().map(|u| rt.within_cap(u.version_gap)).collect();
+        if !included.iter().any(|&i| i) {
+            included.iter_mut().for_each(|i| *i = true);
+        }
+        for (u, &inc) in uploads.iter().zip(&included) {
+            if inc {
+                self.sampler_stats.record_absorbed(u.payload.client);
+            } else {
+                self.sampler_stats.record_held(u.payload.client);
+                obs::counter("async.held_stale", 1);
+            }
+        }
         let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut weights: Vec<f32> = Vec::with_capacity(n);
         let mut frame_lens: Vec<u64> = Vec::with_capacity(n);
@@ -939,7 +992,6 @@ impl Server {
             weights.push(u.weight);
             deltas.push(u.payload.delta);
         }
-        let included = vec![true; n];
         // Layer bookkeeping uses the upload set at aggregation time;
         // stale uploads encoded an older R and simply carry zeros in
         // the layers recycled since (their frame bytes are measured
@@ -1047,6 +1099,9 @@ impl Server {
             None => bcast_self_len,
         };
         let secs = self.net.client_secs(client, bcast_self_len, self_len);
+        // Per-client telemetry keyed by the same self-contained length
+        // the link schedule was just timed with.
+        self.record_dispatch_telemetry(client, self_len);
         let rt = self.async_rt.as_mut().unwrap();
         let payload = UploadPayload {
             client,
@@ -1079,7 +1134,21 @@ impl Server {
             let cached = matches!(&self.async_cohort, Some((g, _)) if *g == gen);
             if !cached {
                 let a = self.cfg.active_clients;
-                let mut cohort = self.ds.sample_clients(gen as usize, a, self.cfg.seed);
+                // Same policy split as the sync draw: only `speed`
+                // leaves the legacy stream. The memo keys on gen; under
+                // `speed` the cohort also depends on the telemetry at
+                // first sampling, so checkpoint v4 persists the
+                // in-progress cohort to keep resume exact.
+                let mut cohort = match self.cfg.net.sampler {
+                    SamplerCfg::Speed { pow } => crate::net::speed_cohort(
+                        &self.sampler_stats,
+                        pow,
+                        gen as usize,
+                        a,
+                        self.cfg.seed,
+                    ),
+                    _ => self.ds.sample_clients(gen as usize, a, self.cfg.seed),
+                };
                 if self.cfg.client_failure_rate > 0.0 {
                     let mut frng = Rng::seed_from_u64(self.cfg.seed ^ 0xfa11 ^ (gen << 16));
                     let before = cohort.len();
@@ -1102,6 +1171,20 @@ impl Server {
             let rt = self.async_rt.as_mut().unwrap();
             rt.sample_gen += 1;
             rt.sample_idx = 0;
+        }
+    }
+
+    /// Record one dispatch in the per-client telemetry table and the
+    /// link-speed-bucketed upload-latency histograms. Pure arithmetic on
+    /// already-computed values — touches no RNG and no clock, so
+    /// telemetry-off and telemetry-on runs stay bit-identical.
+    fn record_dispatch_telemetry(&mut self, client: usize, self_len: u64) {
+        let link = *self.net.fleet.link(client);
+        let upload_secs = link.upload_secs(self_len);
+        self.sampler_stats.record_dispatch(client, upload_secs, self_len);
+        if obs::enabled() {
+            let bucket = links::speed_bucket(link.up_bps);
+            obs::observe(links::speed_bucket_metric(bucket), upload_secs);
         }
     }
 

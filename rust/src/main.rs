@@ -17,7 +17,7 @@ use fedluar::config::{ClientOptCfg, Method, RunConfig, ServerOptCfg};
 use fedluar::exp;
 use fedluar::fl::Server;
 use fedluar::model::{artifacts_dir, ModelMeta};
-use fedluar::net::{LinkDist, RoundMode};
+use fedluar::net::{LinkDist, RoundMode, SamplerCfg};
 use fedluar::obs;
 use fedluar::obs::ObsLevel;
 
@@ -52,10 +52,10 @@ USAGE:
                [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
                [--mu-prev F] [--eval-every N] [--out results/run.csv]
                [--link-dist SPEC] [--round-mode SPEC] [--compute-s F]
-               [--delta-frames [BOOL]]
+               [--delta-frames [BOOL]] [--sampler SPEC]
                [--obs off|metrics|full] [--obs-trace FILE]
                [--obs-metrics FILE] [--obs-layer-csv FILE]
-               [--config FILE]
+               [--obs-clients-csv FILE] [--config FILE]
   fedluar info --model <name>
   fedluar exp  <table1|table2|table3|table4|table5|delta-sweep|alpha-sweep|
                 client-sweep|fig1|fig3|curves|list> [--quick] [...]
@@ -89,8 +89,16 @@ frames, so the Comm column measures real bytes):
                   fallback when no valid reference exists. Lossless and
                   ledger-only — trajectories match dense framing bit for
                   bit, only recorded bytes shrink (docs/wire.md)
-  (config files also accept deadline_s = F, buffer_k = N, and
-   delta_frames = true|false)
+  --sampler     uniform             legacy cohort draw, bit-exact (default)
+              | speed:pow=1         bias the draw toward clients with lower
+                                    measured mean upload latency (weight
+                                    mean_upload_s^-pow; unmeasured clients get
+                                    the mean weight, a cold table is uniform)
+              | staleness:cap=2     bounded staleness: async uploads with
+                                    version gap > cap are held out of the
+                                    aggregation mean (bytes/clock still paid)
+  (config files also accept deadline_s = F, buffer_k = N,
+   delta_frames = true|false, and sampler = SPEC)
 
 OBSERVABILITY (the obs: config block; telemetry is read-only — an
 `--obs full` run is bit-identical to `--obs off`):
@@ -103,8 +111,12 @@ OBSERVABILITY (the obs: config block; telemetry is read-only — an
   --obs-layer-csv per-layer rounds    (default <out-stem>_layers.csv:
                                        score, uploaded, recycle age, wire
                                        bytes — Figure 3 / kappa decomposition)
-  (config files accept obs_level / obs_trace / obs_metrics / obs_layer_csv;
-   the value `none` clears a path)
+  --obs-clients-csv per-client table  (default <out-stem>_clients.csv:
+                                       link speed + bucket, dispatches,
+                                       absorbed, held_stale, mean upload
+                                       seconds, bytes — sampler fairness)
+  (config files accept obs_level / obs_trace / obs_metrics / obs_layer_csv /
+   obs_clients_csv; the value `none` clears a path)
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -146,6 +158,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(v) = args.get_parse::<bool>("delta-frames")? {
         cfg.net.delta_frames = v;
     }
+    if let Some(spec) = args.get("sampler") {
+        cfg.net.sampler = SamplerCfg::parse(spec)?;
+    }
     if let Some(v) = args.get("obs") {
         cfg.obs.level = ObsLevel::parse(v)?;
     }
@@ -157,6 +172,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get("obs-layer-csv") {
         cfg.obs.layer_csv = Some(v.to_string());
+    }
+    if let Some(v) = args.get("obs-clients-csv") {
+        cfg.obs.clients_csv = Some(v.to_string());
     }
     let out = args.get_or("out", "results/run.csv").to_string();
     args.check_unused()?;
@@ -171,6 +189,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         if cfg.obs.layer_csv.is_none() {
             cfg.obs.layer_csv = Some(format!("{stem}_layers.csv"));
         }
+        if cfg.obs.clients_csv.is_none() {
+            cfg.obs.clients_csv = Some(format!("{stem}_clients.csv"));
+        }
         if cfg.obs.level == ObsLevel::Full && cfg.obs.trace_path.is_none() {
             cfg.obs.trace_path = Some(format!("{stem}_trace.jsonl"));
         }
@@ -178,12 +199,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     obs::init(&cfg.obs)?;
 
     println!(
-        "# fedluar run: {} / {} / {} / net {} over {}",
+        "# fedluar run: {} / {} / {} / net {} over {} / sampler {}",
         cfg.model,
         cfg.method.label(),
         cfg.server_opt.label(),
         cfg.net.round_mode.spec_string(),
-        cfg.net.link_dist.spec_string()
+        cfg.net.link_dist.spec_string(),
+        cfg.net.sampler.spec_string()
     );
     let mut server = Server::new(cfg)?;
     let t0 = std::time::Instant::now();

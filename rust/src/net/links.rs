@@ -117,6 +117,51 @@ impl LinkDist {
     }
 }
 
+/// Number of fixed link-speed buckets the per-client upload-latency
+/// histograms are keyed by.
+pub const SPEED_BUCKETS: usize = 5;
+
+/// Metric names must be `&'static str` for the registry, so the
+/// per-bucket histogram series is a fixed array (decade buckets on
+/// uplink bandwidth; the docs/observability.md catalog mirrors this).
+const SPEED_BUCKET_METRICS: [&str; SPEED_BUCKETS] = [
+    "client.upload_s.up_lt_1m",
+    "client.upload_s.up_1m_10m",
+    "client.upload_s.up_10m_100m",
+    "client.upload_s.up_100m_1g",
+    "client.upload_s.up_ge_1g",
+];
+
+/// Short bucket labels for the `*_clients.csv` `speed_bucket` column.
+const SPEED_BUCKET_LABELS: [&str; SPEED_BUCKETS] =
+    ["<1M", "1M-10M", "10M-100M", "100M-1G", ">=1G"];
+
+/// Decade bucket index for an uplink bandwidth in bits/second:
+/// `<1 Mbps, 1–10, 10–100, 100–1000, >=1000`.
+pub fn speed_bucket(up_bps: f64) -> usize {
+    if up_bps < 1e6 {
+        0
+    } else if up_bps < 1e7 {
+        1
+    } else if up_bps < 1e8 {
+        2
+    } else if up_bps < 1e9 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Histogram metric name for a bucket index.
+pub fn speed_bucket_metric(bucket: usize) -> &'static str {
+    SPEED_BUCKET_METRICS[bucket]
+}
+
+/// Human label for a bucket index (CSV column value).
+pub fn speed_bucket_label(bucket: usize) -> &'static str {
+    SPEED_BUCKET_LABELS[bucket]
+}
+
 /// One client's link: fixed for the whole run (heterogeneity is
 /// per-device, not per-round).
 #[derive(Debug, Clone, Copy)]
@@ -269,6 +314,25 @@ mod tests {
         // slow cohort also computes slower
         let i = (0..256).find(|&i| fleet.link(i).up_bps == 2e6).unwrap();
         assert_eq!(fleet.link(i).compute_mult, 2.0);
+    }
+
+    #[test]
+    fn speed_buckets_partition_the_decades() {
+        assert_eq!(speed_bucket(0.0), 0);
+        assert_eq!(speed_bucket(999_999.0), 0);
+        assert_eq!(speed_bucket(1e6), 1);
+        assert_eq!(speed_bucket(2e6), 1);
+        assert_eq!(speed_bucket(20e6), 2);
+        assert_eq!(speed_bucket(80e6), 2);
+        assert_eq!(speed_bucket(100e6), 3);
+        assert_eq!(speed_bucket(1e9), 4);
+        // every bucket has a distinct metric name and label
+        let names: std::collections::BTreeSet<_> =
+            (0..SPEED_BUCKETS).map(speed_bucket_metric).collect();
+        assert_eq!(names.len(), SPEED_BUCKETS);
+        let labels: std::collections::BTreeSet<_> =
+            (0..SPEED_BUCKETS).map(speed_bucket_label).collect();
+        assert_eq!(labels.len(), SPEED_BUCKETS);
     }
 
     #[test]

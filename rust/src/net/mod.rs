@@ -12,15 +12,22 @@
 //!   `Staleness` maps version gaps to aggregation weights; the control
 //!   flow lives in `fl::AsyncRuntime`).
 //!
+//! * `sampler` — pluggable cohort-draw policies (`uniform` /
+//!   `speed:pow=F` / `staleness:cap=N`) plus the per-client telemetry
+//!   table (`ClientStats`) the speed-biased policy reads.
+//!
 //! `NetCfg` is the `net:` block of a run config (flat keys
-//! `link_dist`, `round_mode`, `deadline_s`, `buffer_k`, `compute_s`);
-//! `NetSim` is the per-run instance the FL server drives each round.
+//! `link_dist`, `round_mode`, `deadline_s`, `buffer_k`, `compute_s`,
+//! `sampler`); `NetSim` is the per-run instance the FL server drives
+//! each round.
 
 pub mod links;
+pub mod sampler;
 pub mod sched;
 pub mod wire;
 
 pub use links::{ClientLink, LinkDist, LinkFleet};
+pub use sampler::{speed_cohort, speed_weights, ClientStats, SamplerCfg};
 pub use sched::{Arrival, AsyncQueue, RoundMode, RoundOutcome, Staleness};
 pub use wire::{Decoded, WireFrame, WireHint};
 
@@ -55,6 +62,10 @@ pub struct NetCfg {
     /// trajectories and the link schedule are bit-identical to dense
     /// framing — only the recorded bytes shrink (see docs/wire.md).
     pub delta_frames: bool,
+    /// Cohort-draw policy (`uniform` keeps the legacy stream
+    /// bit-exactly; `speed:pow=F` biases by measured upload latency;
+    /// `staleness:cap=N` bounds the async aggregation mean).
+    pub sampler: SamplerCfg,
 }
 
 impl Default for NetCfg {
@@ -64,6 +75,7 @@ impl Default for NetCfg {
             round_mode: RoundMode::Sync,
             compute_s: 0.0,
             delta_frames: false,
+            sampler: SamplerCfg::Uniform,
         }
     }
 }
@@ -118,6 +130,7 @@ mod tests {
         assert_eq!(cfg.link_dist, LinkDist::default());
         assert_eq!(cfg.compute_s, 0.0);
         assert!(!cfg.delta_frames, "delta framing is opt-in");
+        assert_eq!(cfg.sampler, SamplerCfg::Uniform, "biased sampling is opt-in");
     }
 
     #[test]
@@ -135,6 +148,7 @@ mod tests {
             round_mode: RoundMode::Sync,
             compute_s: 0.0,
             delta_frames: false,
+            sampler: SamplerCfg::Uniform,
         };
         let sim = NetSim::new(cfg, 64, 9);
         let actives: Vec<usize> = (0..64).collect();
@@ -156,6 +170,7 @@ mod tests {
             round_mode: RoundMode::Sync,
             compute_s: 2.0,
             delta_frames: false,
+            sampler: SamplerCfg::Uniform,
         };
         let sim = NetSim::new(cfg, 4, 1);
         let with = sim.client_secs(0, 0, 0);

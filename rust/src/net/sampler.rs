@@ -1,0 +1,323 @@
+//! Pluggable client samplers for the round/async schedulers, plus the
+//! per-client telemetry table the speed-biased sampler reads.
+//!
+//! Three policies (`net.sampler` config key / `--sampler` flag):
+//!
+//! * `uniform`         — the legacy cohort draw, untouched: exactly the
+//!   `DataSim::sample_clients` stream, bit-for-bit (the equivalence
+//!   suite and `prop_sampler_uniform_matches_legacy` pin this);
+//! * `speed:pow=F`     — bias the draw by measured mean upload latency:
+//!   weight `w_i = mean_upload_secs_i^(-pow)` (Konečný et al., 2016's
+//!   straggler-aware lever). Clients never yet measured get the fleet
+//!   mean of the measured clients, so cold starts stay near-uniform and
+//!   every client keeps positive mass — starvation-free by
+//!   construction;
+//! * `staleness:cap=N` — cohort draw stays uniform; async absorption
+//!   holds uploads with version gap > N out of the aggregation mean
+//!   (bounded staleness; see `fl::AsyncRuntime::stale_cap`).
+//!
+//! The telemetry (`ClientStats`) is recorded on every dispatch from the
+//! *self-contained* frame length — the same length the link schedule is
+//! timed against — so residual (delta) framing never perturbs the
+//! sampler, and a `speed` run composes with `delta_frames` unchanged.
+
+use super::parse_kv;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// RNG salt for the speed-biased cohort draw. Deliberately distinct
+/// from the legacy `0xc11e_0000` sample-stream salt so the two streams
+/// never collide; the golden_sampler.csv generator replicates it.
+pub const SPEED_SAMPLER_SALT: u64 = 0x5eed_0000;
+
+/// Floor on a measured mean latency (seconds) before weighting, so a
+/// zero-latency degenerate link cannot produce an infinite weight.
+const MIN_MEAN_SECS: f64 = 1e-9;
+
+/// Which policy draws each round's cohort (`net.sampler`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerCfg {
+    /// Legacy uniform draw (default; bit-identical to pre-sampler runs).
+    Uniform,
+    /// Bias the draw by measured mean upload latency to the power `-pow`.
+    Speed { pow: f64 },
+    /// Uniform draw + hold async uploads with version gap > `cap` out
+    /// of the aggregation mean.
+    Staleness { cap: u64 },
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        SamplerCfg::Uniform
+    }
+}
+
+impl SamplerCfg {
+    /// Parse a compact sampler spec: `uniform`, `speed:pow=1`,
+    /// `staleness:cap=4`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, parse_kv(a)?),
+            None => (spec, Default::default()),
+        };
+        let cfg = match name {
+            "uniform" => SamplerCfg::Uniform,
+            "speed" => {
+                let pow = match args.get("pow") {
+                    Some(v) => match v.parse::<f64>() {
+                        Ok(x) => x,
+                        Err(e) => bail!("sampler pow={v}: {e}"),
+                    },
+                    None => 1.0,
+                };
+                if !(pow.is_finite() && pow > 0.0) {
+                    bail!("sampler speed:pow must be finite and > 0, got {pow}");
+                }
+                SamplerCfg::Speed { pow }
+            }
+            "staleness" => {
+                let cap = match args.get("cap") {
+                    Some(v) => match v.parse::<u64>() {
+                        Ok(x) => x,
+                        Err(e) => bail!("sampler cap={v}: {e}"),
+                    },
+                    None => bail!("sampler staleness requires cap=N"),
+                };
+                SamplerCfg::Staleness { cap }
+            }
+            other => bail!("unknown sampler {other}"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn spec_string(&self) -> String {
+        match self {
+            SamplerCfg::Uniform => "uniform".into(),
+            SamplerCfg::Speed { pow } => format!("speed:pow={pow}"),
+            SamplerCfg::Staleness { cap } => format!("staleness:cap={cap}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerCfg::Uniform => "uniform",
+            SamplerCfg::Speed { .. } => "speed",
+            SamplerCfg::Staleness { .. } => "staleness",
+        }
+    }
+
+    /// The bounded-staleness cap, when this policy sets one.
+    pub fn stale_cap(&self) -> Option<u64> {
+        match self {
+            SamplerCfg::Staleness { cap } => Some(*cap),
+            _ => None,
+        }
+    }
+}
+
+/// Per-client participation + link telemetry, updated on every dispatch
+/// and absorb. This is the table the `speed` sampler reads, the
+/// `*_clients.csv` export serializes, and checkpoint v4 persists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientStats {
+    /// Times the client was handed work (sync: made the cohort; async:
+    /// a dispatch started). Reconciles exactly against the scheduler's
+    /// dispatch log — the fairness observable.
+    pub dispatches: Vec<u64>,
+    /// Uploads actually folded into an aggregation.
+    pub absorbed: Vec<u64>,
+    /// Async uploads held out of the mean by `staleness:cap=N`.
+    pub held_stale: Vec<u64>,
+    /// Sum of simulated upload seconds over dispatches (self-contained
+    /// frame lengths; see module docs).
+    pub upload_secs_sum: Vec<f64>,
+    /// Sum of self-contained upload bytes over dispatches.
+    pub up_bytes: Vec<u64>,
+}
+
+impl ClientStats {
+    pub fn new(num_clients: usize) -> Self {
+        ClientStats {
+            dispatches: vec![0; num_clients],
+            absorbed: vec![0; num_clients],
+            held_stale: vec![0; num_clients],
+            upload_secs_sum: vec![0.0; num_clients],
+            up_bytes: vec![0; num_clients],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dispatches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dispatches.is_empty()
+    }
+
+    pub fn record_dispatch(&mut self, client: usize, upload_secs: f64, bytes: u64) {
+        self.dispatches[client] += 1;
+        self.upload_secs_sum[client] += upload_secs;
+        self.up_bytes[client] += bytes;
+    }
+
+    pub fn record_absorbed(&mut self, client: usize) {
+        self.absorbed[client] += 1;
+    }
+
+    pub fn record_held(&mut self, client: usize) {
+        self.held_stale[client] += 1;
+    }
+
+    /// Mean measured upload latency, `None` until the first dispatch.
+    pub fn mean_upload_secs(&self, client: usize) -> Option<f64> {
+        if self.dispatches[client] == 0 {
+            None
+        } else {
+            Some(self.upload_secs_sum[client] / self.dispatches[client] as f64)
+        }
+    }
+}
+
+/// Speed-sampler weights: a valid probability distribution over the
+/// fleet — finite, non-negative, summing to 1 — for *any* telemetry
+/// state (`prop_sampler_weights_are_a_distribution` sweeps this).
+/// Unmeasured clients get the mean of the measured means; with nothing
+/// measured the distribution is exactly uniform.
+pub fn speed_weights(stats: &ClientStats, pow: f64) -> Vec<f64> {
+    let n = stats.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let uniform = vec![1.0 / n as f64; n];
+    let means: Vec<Option<f64>> = (0..n)
+        .map(|c| stats.mean_upload_secs(c).map(|m| m.max(MIN_MEAN_SECS)))
+        .collect();
+    let measured: Vec<f64> = means.iter().filter_map(|m| *m).collect();
+    if measured.is_empty() {
+        return uniform;
+    }
+    let fill = measured.iter().sum::<f64>() / measured.len() as f64;
+    let weights: Vec<f64> = means.iter().map(|m| m.unwrap_or(fill).powf(-pow)).collect();
+    let total: f64 = weights.iter().sum();
+    if !total.is_finite() || total <= 0.0 || weights.iter().any(|w| !w.is_finite()) {
+        // pathological telemetry (overflow/underflow): fail safe to
+        // uniform rather than feeding garbage to the weighted draw
+        return uniform;
+    }
+    weights.into_iter().map(|w| w / total).collect()
+}
+
+/// Draw one speed-biased cohort. Seeded per round with a salt distinct
+/// from the legacy stream; always returns `active.min(n)` distinct
+/// clients because `speed_weights` keeps every client's mass positive.
+pub fn speed_cohort(
+    stats: &ClientStats,
+    pow: f64,
+    round: usize,
+    active: usize,
+    seed: u64,
+) -> Vec<usize> {
+    let weights = speed_weights(stats, pow);
+    let mut rng = Rng::seed_from_u64(seed ^ SPEED_SAMPLER_SALT ^ round as u64);
+    rng.weighted_sample_without_replacement(&weights, active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        for spec in ["uniform", "speed:pow=1", "speed:pow=2.5", "staleness:cap=4"] {
+            let s = SamplerCfg::parse(spec).unwrap();
+            let again = SamplerCfg::parse(&s.spec_string()).unwrap();
+            assert_eq!(s, again, "{spec}");
+        }
+        assert_eq!(SamplerCfg::parse("uniform").unwrap(), SamplerCfg::default());
+        assert_eq!(SamplerCfg::parse("speed").unwrap(), SamplerCfg::Speed { pow: 1.0 });
+        assert!(SamplerCfg::parse("warp").is_err());
+        assert!(SamplerCfg::parse("speed:pow=0").is_err());
+        assert!(SamplerCfg::parse("speed:pow=abc").is_err());
+        assert!(SamplerCfg::parse("staleness").is_err(), "cap is required");
+        assert!(SamplerCfg::parse("staleness:cap=x").is_err());
+    }
+
+    #[test]
+    fn stale_cap_only_for_staleness() {
+        assert_eq!(SamplerCfg::Uniform.stale_cap(), None);
+        assert_eq!(SamplerCfg::Speed { pow: 1.0 }.stale_cap(), None);
+        assert_eq!(SamplerCfg::Staleness { cap: 3 }.stale_cap(), Some(3));
+    }
+
+    #[test]
+    fn cold_stats_give_uniform_weights() {
+        let stats = ClientStats::new(8);
+        let w = speed_weights(&stats, 1.0);
+        assert_eq!(w, vec![1.0 / 8.0; 8]);
+    }
+
+    #[test]
+    fn slow_clients_lose_mass() {
+        let mut stats = ClientStats::new(3);
+        stats.record_dispatch(0, 1.0, 1000);
+        stats.record_dispatch(1, 10.0, 1000);
+        // client 2 unmeasured -> mean of {1, 10} = 5.5
+        let w = speed_weights(&stats, 1.0);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[2] && w[2] > w[1], "ordering fast > unmeasured > slow: {w:?}");
+        // higher pow sharpens the bias
+        let sharp = speed_weights(&stats, 2.0);
+        assert!(sharp[0] / sharp[1] > w[0] / w[1]);
+    }
+
+    #[test]
+    fn mean_latency_averages_over_dispatches() {
+        let mut stats = ClientStats::new(2);
+        assert_eq!(stats.mean_upload_secs(0), None);
+        stats.record_dispatch(0, 2.0, 10);
+        stats.record_dispatch(0, 4.0, 30);
+        assert_eq!(stats.mean_upload_secs(0), Some(3.0));
+        assert_eq!(stats.up_bytes[0], 40);
+        assert_eq!(stats.dispatches[0], 2);
+    }
+
+    #[test]
+    fn speed_cohort_is_deterministic_and_distinct() {
+        let mut stats = ClientStats::new(16);
+        for c in 0..16 {
+            stats.record_dispatch(c, 0.5 + c as f64, 100);
+        }
+        let a = speed_cohort(&stats, 1.0, 3, 6, 42);
+        let b = speed_cohort(&stats, 1.0, 3, 6, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 6, "cohort must be distinct clients");
+        // different round or seed -> different stream
+        assert_ne!(speed_cohort(&stats, 1.0, 4, 6, 42), a);
+    }
+
+    #[test]
+    fn fast_clients_dominate_participation() {
+        let mut stats = ClientStats::new(8);
+        for c in 0..8 {
+            // clients 0..4 are 20x faster than 4..8
+            let secs = if c < 4 { 0.1 } else { 2.0 };
+            stats.record_dispatch(c, secs, 100);
+        }
+        let mut fast = 0usize;
+        let mut total = 0usize;
+        for round in 0..200 {
+            for &c in &speed_cohort(&stats, 1.0, round, 4, 7) {
+                total += 1;
+                if c < 4 {
+                    fast += 1;
+                }
+            }
+        }
+        assert_eq!(total, 800);
+        assert!(fast > 550, "fast cohort drew only {fast}/800");
+    }
+}

@@ -1,0 +1,151 @@
+//! Per-client participation and link telemetry: one row per client
+//! with the fleet's uplink speed (and its decade bucket — the same
+//! bucketing that keys the `client.upload_s.*` histograms), the
+//! sampler's dispatch / absorbed / held-stale counts, the measured
+//! mean upload latency, and the cumulative uplink bytes.
+//!
+//! Unlike the per-layer rows (which accumulate per round), the client
+//! table is cumulative: `obs::record_client_rounds` *replaces* the
+//! stored rows at each aggregation, so `obs::finish` writes the final
+//! totals to the `clients_csv` config path. `dispatches` reconciles
+//! exactly against the scheduler's dispatch log, which makes sampler
+//! fairness auditable from the CSV alone
+//! (`tests/integration_sampler.rs` pins this).
+
+use crate::net::{links, ClientStats, LinkFleet};
+use std::io::Write;
+use std::path::Path;
+
+/// One client's cumulative telemetry as of the latest aggregation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientRound {
+    pub client: usize,
+    /// Uplink bandwidth in Mbps (fixed per run by the link fleet).
+    pub up_mbps: f64,
+    /// Decade bucket label (`links::speed_bucket_label`).
+    pub speed_bucket: &'static str,
+    /// Times the scheduler dispatched work to this client.
+    pub dispatches: u64,
+    /// Uploads that entered an aggregate.
+    pub absorbed: u64,
+    /// Uploads held out of the async mean by `sampler=staleness:cap=N`.
+    pub held_stale: u64,
+    /// Mean simulated upload seconds over all dispatches (0 when the
+    /// client was never dispatched).
+    pub mean_upload_s: f64,
+    /// Cumulative uplink bytes across all dispatches.
+    pub up_bytes: u64,
+}
+
+pub const CSV_HEADER: &str =
+    "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,mean_upload_s,up_bytes";
+
+/// Build one row per client from the sampler telemetry + link fleet.
+pub(crate) fn build_rows(stats: &ClientStats, fleet: &LinkFleet) -> Vec<ClientRound> {
+    let n = stats.len().min(fleet.len());
+    (0..n)
+        .map(|c| {
+            let up_bps = fleet.link(c).up_bps;
+            ClientRound {
+                client: c,
+                up_mbps: up_bps / 1e6,
+                speed_bucket: links::speed_bucket_label(links::speed_bucket(up_bps)),
+                dispatches: stats.dispatches[c],
+                absorbed: stats.absorbed[c],
+                held_stale: stats.held_stale[c],
+                mean_upload_s: stats.mean_upload_secs(c).unwrap_or(0.0),
+                up_bytes: stats.up_bytes[c],
+            }
+        })
+        .collect()
+}
+
+/// Write the client table as a CSV.
+pub(crate) fn write_csv(rows: &[ClientRound], path: impl AsRef<Path>) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{CSV_HEADER}")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{:.3},{},{},{},{},{:.6},{}",
+            r.client,
+            r.up_mbps,
+            r.speed_bucket,
+            r.dispatches,
+            r.absorbed,
+            r.held_stale,
+            r.mean_upload_s,
+            r.up_bytes
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkDist;
+
+    fn fixture() -> (ClientStats, LinkFleet) {
+        let fleet = LinkFleet::new(
+            &LinkDist::Bimodal {
+                fast_frac: 0.5,
+                fast_up_mbps: 50.0,
+                slow_up_mbps: 2.0,
+                down_mbps: 100.0,
+                rtt_s: 0.0,
+            },
+            4,
+            5,
+        );
+        let mut stats = ClientStats::new(4);
+        stats.record_dispatch(0, 2.0, 100);
+        stats.record_dispatch(0, 4.0, 100);
+        stats.record_absorbed(0);
+        stats.record_dispatch(2, 1.0, 50);
+        stats.record_held(2);
+        (stats, fleet)
+    }
+
+    #[test]
+    fn rows_join_stats_with_fleet() {
+        let (stats, fleet) = fixture();
+        let rows = build_rows(&stats, &fleet);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].dispatches, 2);
+        assert_eq!(rows[0].absorbed, 1);
+        assert_eq!(rows[0].mean_upload_s, 3.0);
+        assert_eq!(rows[0].up_bytes, 200);
+        assert_eq!(rows[2].held_stale, 1);
+        assert_eq!(rows[1].dispatches, 0);
+        assert_eq!(rows[1].mean_upload_s, 0.0, "never dispatched -> 0");
+        for r in &rows {
+            let expect = fleet.link(r.client).up_bps / 1e6;
+            assert_eq!(r.up_mbps, expect);
+            assert!(["1M-10M", "10M-100M"].contains(&r.speed_bucket), "{}", r.speed_bucket);
+        }
+    }
+
+    #[test]
+    fn csv_shape() {
+        let (stats, fleet) = fixture();
+        let rows = build_rows(&stats, &fleet);
+        let dir = std::env::temp_dir().join("fedluar_obs_clients_test");
+        let path = dir.join("clients.csv");
+        write_csv(&rows, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        assert_eq!(lines.len(), 5, "header + one row per client");
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), 8, "{line}");
+        }
+        assert!(lines[1].starts_with("0,"));
+        assert!(lines[1].ends_with(",2,1,0,3.000000,200"), "{}", lines[1]);
+    }
+}

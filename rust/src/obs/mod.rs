@@ -19,6 +19,11 @@
 //!   discount) written to a `*_layers.csv`: Figure 3 and the kappa
 //!   decomposition straight from telemetry.
 //!
+//! A fourth table, `clients`, joins the sampler's per-client
+//! dispatch/absorb/held counts with the link fleet (one cumulative row
+//! per client, written to a `*_clients.csv`) — sampler fairness and
+//! straggler exposure straight from telemetry.
+//!
 //! The context is **thread-local**: `cargo test` runs tests on
 //! parallel threads in one process, and a global level would bleed
 //! telemetry across tests. One run = one thread = one context;
@@ -31,10 +36,12 @@
 //! or any model state, which is why `level=off` and `level=full` runs
 //! are bit-identical (`tests/integration_obs.rs`).
 
+pub mod clients;
 pub mod layers;
 pub mod metrics;
 pub mod trace;
 
+pub use clients::ClientRound;
 pub use layers::LayerRound;
 pub use metrics::{Histogram, Registry, Snapshot};
 pub use trace::{SpanRecord, Tracer};
@@ -85,7 +92,7 @@ impl ObsLevel {
 }
 
 /// The `obs:` config block (flat keys `obs_level`, `obs_trace`,
-/// `obs_metrics`, `obs_layer_csv`).
+/// `obs_metrics`, `obs_layer_csv`, `obs_clients_csv`).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ObsCfg {
     pub level: ObsLevel,
@@ -96,6 +103,8 @@ pub struct ObsCfg {
     pub metrics_path: Option<String>,
     /// Per-layer LUAR introspection CSV.
     pub layer_csv: Option<String>,
+    /// Per-client sampler/link telemetry CSV.
+    pub clients_csv: Option<String>,
 }
 
 struct Ctx {
@@ -103,6 +112,7 @@ struct Ctx {
     tracer: Tracer,
     registry: Registry,
     layer_rows: Vec<LayerRound>,
+    client_rows: Vec<ClientRound>,
 }
 
 thread_local! {
@@ -129,6 +139,7 @@ pub fn init(cfg: &ObsCfg) -> std::io::Result<()> {
         tracer: Tracer::new(trace_path)?,
         registry: Registry::new(),
         layer_rows: Vec::new(),
+        client_rows: Vec::new(),
     };
     CTX.with(|c| *c.borrow_mut() = Some(ctx));
     LEVEL.with(|l| l.set(cfg.level.as_u8()));
@@ -256,6 +267,17 @@ pub fn record_layer_round(
     });
 }
 
+/// Record the cumulative per-client table as of one aggregation (see
+/// `clients::ClientRound` for the column semantics). Totals-so-far
+/// replace the previous table, so `finish` writes the final cumulative
+/// rows.
+pub fn record_client_rounds(stats: &crate::net::ClientStats, fleet: &crate::net::LinkFleet) {
+    if !enabled() {
+        return;
+    }
+    with_ctx(|c| c.client_rows = clients::build_rows(stats, fleet));
+}
+
 /// Write the configured artifacts (flushing the JSONL log), clear the
 /// thread's context, and return the paths written.
 pub fn finish() -> std::io::Result<Vec<String>> {
@@ -283,6 +305,10 @@ pub fn finish() -> std::io::Result<Vec<String>> {
     }
     if let Some(p) = &ctx.cfg.layer_csv {
         layers::write_csv(&ctx.layer_rows, p)?;
+        written.push(p.clone());
+    }
+    if let Some(p) = &ctx.cfg.clients_csv {
+        clients::write_csv(&ctx.client_rows, p)?;
         written.push(p.clone());
     }
     Ok(written)
@@ -325,6 +351,11 @@ pub fn spans_recorded() -> u64 {
 /// Copy of the accumulated per-layer rows.
 pub fn layer_rows() -> Vec<LayerRound> {
     with_ctx(|c| c.layer_rows.clone()).unwrap_or_default()
+}
+
+/// Copy of the latest per-client rows (the cumulative table).
+pub fn client_rows() -> Vec<ClientRound> {
+    with_ctx(|c| c.client_rows.clone()).unwrap_or_default()
 }
 
 /// Render the exposition text for the current registry.
@@ -405,11 +436,13 @@ mod tests {
         let trace = dir.join("t.jsonl").to_str().unwrap().to_string();
         let prom = dir.join("m.prom").to_str().unwrap().to_string();
         let csv = dir.join("l.csv").to_str().unwrap().to_string();
+        let ccsv = dir.join("c.csv").to_str().unwrap().to_string();
         init(&ObsCfg {
             level: ObsLevel::Full,
             trace_path: Some(trace.clone()),
             metrics_path: Some(prom.clone()),
             layer_csv: Some(csv.clone()),
+            clients_csv: Some(ccsv.clone()),
         })
         .unwrap();
         {
@@ -417,13 +450,31 @@ mod tests {
         }
         counter("c", 1);
         let written = finish().unwrap();
-        assert_eq!(written.len(), 4, "trace + prom + json + layer csv: {written:?}");
+        assert_eq!(written.len(), 5, "trace + prom + json + layer csv + clients csv: {written:?}");
         assert!(std::fs::read_to_string(&trace).unwrap().contains("\"span\":\"x.y\""));
         assert!(std::fs::read_to_string(&prom).unwrap().contains("fedluar_c 1"));
         let json_path = prom.strip_suffix(".prom").unwrap().to_string() + ".json";
         crate::json::Json::parse(&std::fs::read_to_string(json_path).unwrap()).unwrap();
         let csv_text = std::fs::read_to_string(&csv).unwrap();
         assert!(csv_text.starts_with(layers::CSV_HEADER));
+        let ccsv_text = std::fs::read_to_string(&ccsv).unwrap();
+        assert!(ccsv_text.starts_with(clients::CSV_HEADER));
+    }
+
+    #[test]
+    fn client_rounds_replace_not_accumulate() {
+        use crate::net::{ClientStats, LinkDist, LinkFleet};
+        init(&ObsCfg { level: ObsLevel::Metrics, ..ObsCfg::default() }).unwrap();
+        let fleet = LinkFleet::new(&LinkDist::default(), 3, 1);
+        let mut stats = ClientStats::new(3);
+        stats.record_dispatch(1, 1.0, 10);
+        record_client_rounds(&stats, &fleet);
+        stats.record_dispatch(1, 1.0, 10);
+        record_client_rounds(&stats, &fleet);
+        let rows = client_rows();
+        assert_eq!(rows.len(), 3, "one row per client, not per call");
+        assert_eq!(rows[1].dispatches, 2, "latest cumulative totals win");
+        finish().unwrap();
     }
 
     #[test]

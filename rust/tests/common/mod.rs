@@ -1,0 +1,727 @@
+//! Shared engine-free test fixtures: the miniature `fl::Server` mirror
+//! the integration suites drive, plus the artifact-gated helpers.
+//!
+//! One `SimServer` replaces the three near-identical copies that used
+//! to live in `integration_async.rs`, `integration_delta.rs`, and the
+//! new `integration_sampler.rs`. The fixture keeps every seed, salt,
+//! and dataflow of the originals so the pinned trajectories and golden
+//! files are unchanged:
+//!
+//! * `SimServer::new` — the async-suite flavor: model `asim`,
+//!   per-(client, gen) independent synthetic deltas, round-robin
+//!   cohorts, dense framing (`NetSim` seed 42, `compute_s = 0.1`,
+//!   fixture rng salt `0xc0ffee`);
+//! * `SimServer::new_delta` — the delta-suite flavor: model `dsim`,
+//!   cross-round-correlated deltas (per-client base draw, generation
+//!   noise XORed into the low 16 mantissa bits), residual framing
+//!   optional;
+//! * `with_sampler` — switches the cohort schedule from the fixture's
+//!   round-robin rotation to the seeded stream `fl::Server` draws
+//!   (`legacy_cohort` for `uniform`/`staleness`, `net::speed_cohort`
+//!   for `speed`), arms the bounded-staleness absorb mask, and is what
+//!   `integration_sampler.rs` runs.
+//!
+//! Per-client telemetry (`net::ClientStats`) and the dispatch log are
+//! recorded unconditionally — pure arithmetic on already-computed
+//! values, so legacy runs stay bit-identical while sampler tests can
+//! reconcile participation counts against the log.
+
+#![allow(dead_code)]
+
+use fedluar::comm::CommAccountant;
+use fedluar::config::{Method, RecycleMode, RunConfig, SelectionScheme};
+use fedluar::fl::{AsyncRuntime, DeltaFrameState, UploadPayload};
+use fedluar::luar::LuarState;
+use fedluar::metrics::{AbsorbRecord, History, RoundRecord};
+use fedluar::model::{artifacts_dir, ModelMeta};
+use fedluar::net::{wire, ClientStats, LinkDist, NetCfg, NetSim, RoundMode, SamplerCfg, Staleness};
+use fedluar::rng::Rng;
+use fedluar::tensor;
+use std::path::PathBuf;
+
+pub const LAYERS: usize = 6;
+pub const LAYER_SIZE: usize = 512;
+pub const NUM_CLIENTS: usize = 16;
+pub const ACTIVE: usize = 8;
+
+/// 6-layer synthetic model (8x64 matrices), no artifacts needed.
+pub fn synth_meta(model: &str) -> ModelMeta {
+    let mut rows = Vec::new();
+    for l in 0..LAYERS {
+        let off = l * LAYER_SIZE;
+        rows.push(format!(
+            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{LAYER_SIZE},
+               "arrays":[{{"name":"w","shape":[8,64],"offset":{off},"size":{LAYER_SIZE}}}]}}"#
+        ));
+    }
+    let dim = LAYERS * LAYER_SIZE;
+    let doc = format!(
+        r#"{{"model":"{model}","dim":{dim},"num_classes":10,
+            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
+            "eval_batch":64,"agg_clients":8,"momentum":0.9,
+            "layers":[{}],
+            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
+            "init_sha256":"x"}}"#,
+        rows.join(",")
+    );
+    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
+}
+
+/// Which synthetic-training stand-in generates client deltas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaFlavor {
+    /// Fresh draw per (client, generation) — the async-suite regime.
+    Independent,
+    /// Per-client base vector with per-generation noise confined to the
+    /// low 16 bits of each f32 — the regime residual framing exploits.
+    Correlated,
+}
+
+/// Deterministic stand-in for one client's local training at a given
+/// sample generation: the only piece of the pipeline that is synthetic.
+pub fn fake_delta(
+    flavor: DeltaFlavor,
+    seed: u64,
+    client: usize,
+    gen: u64,
+    dim: usize,
+) -> (Vec<f32>, f32) {
+    match flavor {
+        DeltaFlavor::Independent => {
+            let mut rng = Rng::seed_from_u64(
+                seed ^ (client as u64).wrapping_mul(0x9e37_79b9) ^ gen.wrapping_mul(0x85eb_ca6b),
+            );
+            let delta: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+            let loss = 1.0 + rng.f32();
+            (delta, loss)
+        }
+        DeltaFlavor::Correlated => {
+            let mut base = Rng::seed_from_u64(seed ^ (client as u64).wrapping_mul(0x9e37_79b9));
+            let mut noise = Rng::seed_from_u64(
+                seed ^ (client as u64).wrapping_mul(0x9e37_79b9) ^ gen.wrapping_mul(0x85eb_ca6b),
+            );
+            let delta: Vec<f32> = (0..dim)
+                .map(|_| {
+                    let b = base.normal_f32(0.0, 0.05);
+                    f32::from_bits(b.to_bits() ^ (noise.next_u64() as u32 & 0xffff))
+                })
+                .collect();
+            let loss = 1.0 + noise.f32();
+            (delta, loss)
+        }
+    }
+}
+
+/// How the fixture picks each generation's cohort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CohortPolicy {
+    /// Deterministic rotation — the legacy fixture schedule (the
+    /// schedule, not the data, is under test in the async/delta suites).
+    RoundRobin,
+    /// Mirror `fl::Server`'s draw: `legacy_cohort` for
+    /// `uniform`/`staleness`, `net::speed_cohort` for `speed`.
+    Sampled,
+}
+
+/// The exact legacy cohort stream (`DataSet::sample_clients` since
+/// PR 1): seeded partial Fisher-Yates under the `0xc11e_0000` salt.
+pub fn legacy_cohort(num_clients: usize, active: usize, seed: u64, round: u64) -> Vec<usize> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xc11e_0000 ^ round);
+    rng.sample_indices(num_clients, active)
+}
+
+/// Miniature mirror of `fl::Server` for FedAvg / FedLUAR with an SGD
+/// server optimizer: same dispatch half (LUAR layer zeroing, dense
+/// wire codec, per-client links, optional residual-framing ledger),
+/// same absorb half (weighted mean, Eq. 1 score update, version-gap
+/// aging, compose, select-next, measured byte accounting, bounded
+/// staleness), with `fake_delta` in place of the AOT train graph.
+/// `test_loss` doubles as a model-trajectory probe (ssq of the params)
+/// so histories pin the parameter path.
+pub struct SimServer {
+    pub meta: ModelMeta,
+    pub seed: u64,
+    /// `Some(delta)` = FedLUAR at that recycling depth; `None` = FedAvg.
+    pub luar_delta: Option<usize>,
+    pub net: NetSim,
+    pub luar: LuarState,
+    pub params: Vec<f32>,
+    pub comm: CommAccountant,
+    pub history: History,
+    pub rng: Rng,
+    pub round: usize,
+    pub sim_seconds: f64,
+    pub rt: Option<AsyncRuntime>,
+    pub delta: Option<DeltaFrameState>,
+    pub flavor: DeltaFlavor,
+    pub cohorts: CohortPolicy,
+    pub sampler: SamplerCfg,
+    /// Per-client telemetry, recorded on every dispatch/absorb exactly
+    /// as `Server` records it.
+    pub sampler_stats: ClientStats,
+    /// Every dispatched client in order — the scheduler's dispatch log
+    /// the sampler tests reconcile participation counts against.
+    pub dispatch_log: Vec<usize>,
+    /// Per-generation cohort memo, mirroring `Server::async_cohort`
+    /// (under `speed` the draw reads mutable telemetry, so it must be
+    /// sampled once per generation, not once per dispatch).
+    async_cohort: Option<(u64, Vec<usize>)>,
+}
+
+impl SimServer {
+    /// The async-suite flavor: independent deltas, round-robin cohorts,
+    /// dense framing over the given fleet.
+    pub fn new(mode: RoundMode, dist: LinkDist, luar_delta: Option<usize>, seed: u64) -> Self {
+        Self::build(mode, dist, luar_delta, seed, false, DeltaFlavor::Independent, "asim")
+    }
+
+    /// The delta-suite flavor: correlated deltas over the default
+    /// (homogeneous) fleet, residual framing optional.
+    pub fn new_delta(
+        mode: RoundMode,
+        luar_delta: Option<usize>,
+        seed: u64,
+        delta_frames: bool,
+    ) -> Self {
+        Self::build(
+            mode,
+            LinkDist::default(),
+            luar_delta,
+            seed,
+            delta_frames,
+            DeltaFlavor::Correlated,
+            "dsim",
+        )
+    }
+
+    fn build(
+        mode: RoundMode,
+        dist: LinkDist,
+        luar_delta: Option<usize>,
+        seed: u64,
+        delta_frames: bool,
+        flavor: DeltaFlavor,
+        model: &str,
+    ) -> Self {
+        let meta = synth_meta(model);
+        let net = NetSim::new(
+            NetCfg {
+                link_dist: dist,
+                round_mode: mode,
+                compute_s: 0.1,
+                delta_frames,
+                sampler: SamplerCfg::Uniform,
+            },
+            NUM_CLIENTS,
+            42,
+        );
+        let dim = meta.dim;
+        let layers = meta.num_layers();
+        SimServer {
+            meta,
+            seed,
+            luar_delta,
+            net,
+            luar: LuarState::new(layers, dim),
+            params: vec![0.0; dim],
+            comm: CommAccountant::new(layers),
+            history: History::default(),
+            rng: Rng::seed_from_u64(seed ^ 0xc0ffee),
+            round: 0,
+            sim_seconds: 0.0,
+            rt: None,
+            delta: delta_frames.then(|| DeltaFrameState::new(NUM_CLIENTS)),
+            flavor,
+            cohorts: CohortPolicy::RoundRobin,
+            sampler: SamplerCfg::Uniform,
+            sampler_stats: ClientStats::new(NUM_CLIENTS),
+            dispatch_log: Vec::new(),
+            async_cohort: None,
+        }
+    }
+
+    /// Switch to `Server`'s sampled cohort stream under the given
+    /// policy (and arm the bounded-staleness cap when `staleness:cap`).
+    pub fn with_sampler(mut self, sampler: SamplerCfg) -> Self {
+        self.sampler = sampler;
+        self.cohorts = CohortPolicy::Sampled;
+        self
+    }
+
+    /// The generation's cohort under the configured policy.
+    pub fn cohort(&self, gen: u64) -> Vec<usize> {
+        match self.cohorts {
+            CohortPolicy::RoundRobin => {
+                (0..ACTIVE).map(|i| ((gen as usize) * ACTIVE + i) % NUM_CLIENTS).collect()
+            }
+            CohortPolicy::Sampled => match self.sampler {
+                SamplerCfg::Speed { pow } => fedluar::net::speed_cohort(
+                    &self.sampler_stats,
+                    pow,
+                    gen as usize,
+                    ACTIVE,
+                    self.seed,
+                ),
+                _ => legacy_cohort(NUM_CLIENTS, ACTIVE, self.seed, gen),
+            },
+        }
+    }
+
+    pub fn upload_layers(&self) -> Vec<usize> {
+        if self.luar_delta.is_some() {
+            self.luar.upload_set(self.meta.num_layers())
+        } else {
+            (0..self.meta.num_layers()).collect()
+        }
+    }
+
+    /// One client's uplink at model `version`: train (fake), zero R_t,
+    /// dense encode/decode (self-contained length times the link), then
+    /// the residual path decides the ledger length — exactly
+    /// `Server::client_upload`. Returns (decoded update, loss,
+    /// ledger bytes, self-contained bytes).
+    pub fn upload(
+        &mut self,
+        client: usize,
+        gen: u64,
+        version: u64,
+        upload_layers: &[usize],
+    ) -> (Vec<f32>, f32, u64, u64) {
+        let (mut delta_v, loss) = fake_delta(self.flavor, self.seed, client, gen, self.meta.dim);
+        for &l in &self.luar.recycle_set {
+            let lm = &self.meta.layers[l];
+            delta_v[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
+        }
+        let frame =
+            wire::encode_update(&delta_v, &self.meta, upload_layers, &wire::WireHint::Dense)
+                .unwrap();
+        let mut decoded = match wire::decode_update(frame.as_bytes(), &self.meta).unwrap() {
+            wire::Decoded::Vector(v) => v,
+            wire::Decoded::Scalar(_) => unreachable!("dense flavor only"),
+        };
+        let self_len = frame.len() as u64;
+        let mut ledger_len = self_len;
+        if let Some(st) = &self.delta {
+            if let Some(ref_version) = st.usable_up_ref_version(client, version) {
+                let reference = st.up_ref(client).expect("usable ref exists").data.clone();
+                let dframe = wire::encode_update_delta(
+                    &decoded,
+                    &self.meta,
+                    upload_layers,
+                    &reference,
+                    ref_version,
+                )
+                .unwrap();
+                if (dframe.len() as u64) < self_len {
+                    let (dd, _) =
+                        wire::decode_update_delta(dframe.as_bytes(), &self.meta, &reference)
+                            .unwrap();
+                    ledger_len = dframe.len() as u64;
+                    decoded = dd;
+                    let st = self.delta.as_mut().expect("checked above");
+                    st.note_uplink(self_len, ledger_len, Some(version - ref_version));
+                } else {
+                    let st = self.delta.as_mut().expect("checked above");
+                    st.note_uplink(self_len, self_len, None);
+                }
+            } else {
+                let st = self.delta.as_mut().expect("checked above");
+                st.note_uplink(self_len, self_len, None);
+            }
+            let st = self.delta.as_mut().expect("checked above");
+            st.record_upload(client, version, &decoded, &self.meta);
+        }
+        (decoded, loss, ledger_len, self_len)
+    }
+
+    /// Record one dispatch in the telemetry table and log — the same
+    /// arithmetic as `Server::record_dispatch_telemetry` (no RNG, no
+    /// clock: trajectory-neutral).
+    fn record_dispatch(&mut self, client: usize, self_len: u64) {
+        let upload_secs = self.net.fleet.link(client).upload_secs(self_len);
+        self.sampler_stats.record_dispatch(client, upload_secs, self_len);
+        self.dispatch_log.push(client);
+    }
+
+    /// Absorb half: mirrors `Server::finish_aggregation` (weighted
+    /// mean, LUAR with version-gap aging, SGD apply, ledger including
+    /// the drained residual counters, record).
+    #[allow(clippy::too_many_arguments)]
+    pub fn finish(
+        &mut self,
+        deltas: &[Vec<f32>],
+        included: &[bool],
+        weights: &[f32],
+        upload_layers: &[usize],
+        actives_len: usize,
+        loss_sum: f64,
+        loss_count: usize,
+        up_bytes_total: u64,
+        down_total: u64,
+        round_secs: f64,
+        tail_s: f64,
+        arrivals: usize,
+        mean_gap: f64,
+    ) {
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(arrivals);
+        let mut agg_weights: Vec<f32> = Vec::with_capacity(arrivals);
+        for (slot, d) in deltas.iter().enumerate() {
+            if included[slot] {
+                refs.push(d.as_slice());
+                agg_weights.push(weights[slot]);
+            }
+        }
+        assert!(!refs.is_empty(), "aggregation must never be empty");
+        let uniform = agg_weights.iter().all(|&w| w == 1.0);
+        let mut mean = vec![0.0f32; self.meta.dim];
+        if uniform {
+            tensor::mean_rows_par(&refs, &mut mean);
+        } else {
+            let wsum: f32 = agg_weights.iter().sum();
+            let norm: Vec<f32> = agg_weights.iter().map(|w| w / wsum).collect();
+            tensor::weighted_mean_rows(&refs, &norm, &mut mean);
+        }
+        let mut u_ssq = Vec::with_capacity(self.meta.num_layers());
+        let mut w_ssq = Vec::with_capacity(self.meta.num_layers());
+        for lm in &self.meta.layers {
+            let r = lm.offset..lm.offset + lm.size;
+            u_ssq.push(tensor::ssq(&mean[r.clone()]) as f32);
+            w_ssq.push(tensor::ssq(&self.params[r]) as f32);
+        }
+        let mut kappa = 0.0;
+        if let Some(delta_sel) = self.luar_delta {
+            self.luar.update_scores(&u_ssq, &w_ssq);
+            self.luar.set_age_step(1 + mean_gap.round() as u32);
+            kappa = self.luar.compose_update(&mut mean, &self.meta, RecycleMode::Recycle);
+            let grad_norms: Vec<f64> =
+                u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
+            self.luar.select_next(SelectionScheme::Luar, delta_sel, &grad_norms, &mut self.rng);
+        }
+        tensor::axpy(1.0, &mean, &mut self.params);
+        self.comm.record_wire_round(
+            actives_len as u64,
+            upload_layers,
+            up_bytes_total,
+            wire::dense_frame_len(&self.meta),
+            down_total,
+        );
+        let (saved, fallbacks, _gap) = match &mut self.delta {
+            Some(st) => st.drain_round(),
+            None => (0, 0, 0.0),
+        };
+        self.comm.record_delta(saved, fallbacks);
+        self.sim_seconds += round_secs;
+        let train_loss = loss_sum / loss_count.max(1) as f64;
+        self.round += 1;
+        self.history.push(RoundRecord {
+            round: self.round,
+            train_loss,
+            test_loss: tensor::ssq(&self.params),
+            test_acc: self.params[0] as f64,
+            up_bytes: self.comm.up_bytes,
+            comm_ratio: self.comm.comm_ratio(),
+            kappa,
+            sim_seconds: self.sim_seconds,
+            wire_bytes: up_bytes_total,
+            tail_s,
+            arrivals,
+            version_gap: mean_gap,
+        });
+    }
+
+    pub fn run_sync_round(&mut self) {
+        let t = self.round as u64;
+        let actives = self.cohort(t);
+        let upload_layers = self.upload_layers();
+        let bcast =
+            wire::encode_broadcast(&self.params, &self.meta, &self.luar.recycle_set).unwrap();
+        let bcast_self = bcast.len() as u64;
+        let mut down_total = 0u64;
+        if self.delta.is_some() {
+            let params = self.params.clone();
+            let recycle = self.luar.recycle_set.clone();
+            let st = self.delta.as_mut().expect("checked above");
+            st.note_bcast(t, &params, &self.meta);
+            for &client in &actives {
+                down_total +=
+                    st.bcast_ledger_len(client, t, &self.meta, &recycle, bcast_self).unwrap();
+            }
+        } else {
+            down_total = actives.len() as u64 * bcast_self;
+        }
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
+        let mut timing_lens: Vec<u64> = Vec::with_capacity(actives.len());
+        let mut loss_sum = 0.0f64;
+        let mut up_total = 0u64;
+        for &client in &actives {
+            let (d, loss, ledger_len, self_len) = self.upload(client, t, t, &upload_layers);
+            loss_sum += loss as f64;
+            up_total += ledger_len;
+            timing_lens.push(self_len);
+            deltas.push(d);
+            self.record_dispatch(client, self_len);
+        }
+        // the schedule is always timed against self-contained lengths
+        let outcome = self.net.round(&actives, bcast_self, &timing_lens);
+        for (slot, &client) in actives.iter().enumerate() {
+            if outcome.included[slot] {
+                self.sampler_stats.record_absorbed(client);
+            }
+        }
+        self.finish(
+            &deltas,
+            &outcome.included,
+            &outcome.weights,
+            &upload_layers,
+            actives.len(),
+            loss_sum,
+            actives.len(),
+            up_total,
+            down_total,
+            outcome.round_secs,
+            outcome.straggler_tail_s,
+            outcome.aggregated,
+            0.0,
+        );
+    }
+
+    pub fn dispatch_next(&mut self) {
+        let (mut gen, mut idx) = {
+            let rt = self.rt.as_ref().unwrap();
+            (rt.sample_gen, rt.sample_idx as usize)
+        };
+        if idx >= ACTIVE {
+            gen += 1;
+            idx = 0;
+        }
+        // sample each generation's cohort once (under `speed` the draw
+        // reads the mutable telemetry table, exactly like `Server`)
+        let cached = matches!(&self.async_cohort, Some((g, _)) if *g == gen);
+        if !cached {
+            let cohort = self.cohort(gen);
+            self.async_cohort = Some((gen, cohort));
+        }
+        let client = self.async_cohort.as_ref().unwrap().1[idx];
+        {
+            let rt = self.rt.as_mut().unwrap();
+            rt.sample_gen = gen;
+            rt.sample_idx = (idx + 1) as u64;
+        }
+        let version = self.rt.as_ref().unwrap().version;
+        let upload_layers = self.upload_layers();
+        let bcast =
+            wire::encode_broadcast(&self.params, &self.meta, &self.luar.recycle_set).unwrap();
+        let bcast_self = bcast.len() as u64;
+        let bcast_ledger = if self.delta.is_some() {
+            let params = self.params.clone();
+            let recycle = self.luar.recycle_set.clone();
+            let st = self.delta.as_mut().expect("checked above");
+            st.note_bcast(version, &params, &self.meta);
+            st.bcast_ledger_len(client, version, &self.meta, &recycle, bcast_self).unwrap()
+        } else {
+            bcast_self
+        };
+        let (delta, loss, ledger_len, self_len) =
+            self.upload(client, gen, version, &upload_layers);
+        // timing against self-contained lengths, ledger gets the delta
+        let secs = self.net.client_secs(client, bcast_self, self_len);
+        self.record_dispatch(client, self_len);
+        let rt = self.rt.as_mut().unwrap();
+        let payload = UploadPayload {
+            client,
+            version,
+            gen,
+            delta,
+            loss,
+            frame_len: ledger_len,
+            bcast_len: bcast_ledger,
+        };
+        rt.dispatch(payload, secs);
+    }
+
+    pub fn run_async_round(&mut self, c: usize, staleness: Staleness) {
+        if self.rt.is_none() {
+            self.rt = Some(
+                AsyncRuntime::new(NUM_CLIENTS, c, ACTIVE, staleness)
+                    .with_stale_cap(self.sampler.stale_cap()),
+            );
+        }
+        loop {
+            while self.rt.as_ref().unwrap().wants_dispatch() {
+                self.dispatch_next();
+            }
+            let start = self.rt.as_mut().unwrap().absorb_instant();
+            {
+                let rt = self.rt.as_ref().unwrap();
+                let in_flight = rt.in_flight();
+                let version = rt.version;
+                for (i, u) in rt.buffer[start..].iter().enumerate() {
+                    self.history.absorbs.push(AbsorbRecord {
+                        version,
+                        client: u.payload.client,
+                        t: u.t,
+                        version_gap: u.version_gap,
+                        weight: u.weight,
+                        in_flight,
+                        queue_depth: start + i + 1,
+                    });
+                }
+            }
+            if self.rt.as_ref().unwrap().ready() {
+                let batch = self.rt.as_mut().unwrap().take_aggregation();
+                let n = batch.uploads.len();
+                // bounded staleness: the same include-or-hold mask as
+                // `Server::absorb_async_batch` (all-true without a cap)
+                let mut included: Vec<bool> = {
+                    let rt = self.rt.as_ref().unwrap();
+                    batch.uploads.iter().map(|u| rt.within_cap(u.version_gap)).collect()
+                };
+                if !included.iter().any(|&i| i) {
+                    included.iter_mut().for_each(|i| *i = true);
+                }
+                for (u, &inc) in batch.uploads.iter().zip(&included) {
+                    if inc {
+                        self.sampler_stats.record_absorbed(u.payload.client);
+                    } else {
+                        self.sampler_stats.record_held(u.payload.client);
+                    }
+                }
+                let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
+                let mut weights: Vec<f32> = Vec::with_capacity(n);
+                let mut loss_sum = 0.0f64;
+                let mut up_total = 0u64;
+                for u in batch.uploads {
+                    loss_sum += u.payload.loss as f64;
+                    up_total += u.payload.frame_len;
+                    weights.push(u.weight);
+                    deltas.push(u.payload.delta);
+                }
+                let upload_layers = self.upload_layers();
+                self.finish(
+                    &deltas,
+                    &included,
+                    &weights,
+                    &upload_layers,
+                    n,
+                    loss_sum,
+                    n,
+                    up_total,
+                    batch.down_bytes,
+                    batch.round_secs,
+                    batch.tail_s,
+                    n,
+                    batch.mean_gap,
+                );
+                return;
+            }
+        }
+    }
+
+    pub fn run(&mut self, rounds: usize) {
+        while self.round < rounds {
+            match self.net.cfg.round_mode {
+                RoundMode::Async { concurrency, staleness } => {
+                    let c = if concurrency == 0 { ACTIVE } else { concurrency };
+                    self.run_async_round(c, staleness);
+                }
+                _ => self.run_sync_round(),
+            }
+        }
+    }
+}
+
+/// Heavy-tailed edge fleet shared by the async tests.
+pub fn edge_fleet() -> LinkDist {
+    LinkDist::LogNormal { up_mbps: 10.0, down_mbps: 50.0, sigma: 0.75, rtt_s: 0.05 }
+}
+
+/// The bimodal straggler fleet the wall-clock tests run on (rtt 0 so
+/// round times separate cleanly into fast/slow cohorts).
+pub fn bimodal_fleet() -> LinkDist {
+    LinkDist::Bimodal {
+        fast_frac: 0.75,
+        fast_up_mbps: 80.0,
+        slow_up_mbps: 1.0,
+        down_mbps: 100.0,
+        rtt_s: 0.0,
+    }
+}
+
+/// Bit-exact history comparison (rounds + absorbs).
+pub fn assert_history_identical(a: &History, b: &History, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.kappa.to_bits(), y.kappa.to_bits(), "{what} round {}", x.round);
+        assert_eq!(x.up_bytes, y.up_bytes, "{what} round {}", x.round);
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{what} round {}", x.round);
+        assert_eq!(x.arrivals, y.arrivals, "{what} round {}", x.round);
+        assert_eq!(
+            x.sim_seconds.to_bits(),
+            y.sim_seconds.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.version_gap.to_bits(),
+            y.version_gap.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+    }
+    assert_eq!(a.absorbs.len(), b.absorbs.len(), "{what}: absorb count");
+    for (x, y) in a.absorbs.iter().zip(&b.absorbs) {
+        assert_eq!(x.version, y.version, "{what}");
+        assert_eq!(x.client, y.client, "{what}");
+        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{what}");
+        assert_eq!(x.version_gap, y.version_gap, "{what}");
+        assert_eq!(x.weight.to_bits(), y.weight.to_bits(), "{what}");
+        assert_eq!(x.in_flight, y.in_flight, "{what}");
+        assert_eq!(x.queue_depth, y.queue_depth, "{what}");
+    }
+}
+
+/// Every field of the round history that reflects the model path, the
+/// simulated clock, or the scheduler — everything except bytes — must
+/// be bit-identical between a dense-framed and a delta-framed run.
+pub fn assert_trajectories_identical(dense: &History, framed: &History, tag: &str) {
+    assert_eq!(dense.records.len(), framed.records.len(), "{tag}: round counts");
+    for (d, f) in dense.records.iter().zip(&framed.records) {
+        assert_eq!(d.round, f.round, "{tag}");
+        let r = d.round;
+        assert_eq!(d.train_loss.to_bits(), f.train_loss.to_bits(), "{tag} round {r}");
+        assert_eq!(d.test_loss.to_bits(), f.test_loss.to_bits(), "{tag} round {r}");
+        assert_eq!(d.test_acc.to_bits(), f.test_acc.to_bits(), "{tag} round {r}");
+        assert_eq!(d.kappa.to_bits(), f.kappa.to_bits(), "{tag} round {r}");
+        assert_eq!(d.sim_seconds.to_bits(), f.sim_seconds.to_bits(), "{tag} round {r}");
+        assert_eq!(d.tail_s.to_bits(), f.tail_s.to_bits(), "{tag} round {r}");
+        assert_eq!(d.arrivals, f.arrivals, "{tag} round {r}");
+        assert_eq!(d.version_gap.to_bits(), f.version_gap.to_bits(), "{tag} round {r}");
+    }
+}
+
+/// Whether the real model artifacts exist (the artifact-gated suites
+/// skip with a hint otherwise).
+pub fn have_artifacts() -> bool {
+    if ModelMeta::load(artifacts_dir(), "mlp").is_ok() {
+        true
+    } else {
+        eprintln!("SKIP: run `make artifacts`");
+        false
+    }
+}
+
+/// Sub-second MLP benchmark config the artifact-gated suites run.
+pub fn quick_cfg(method: Method) -> RunConfig {
+    let mut cfg = RunConfig::benchmark("mlp").unwrap();
+    cfg.num_clients = 24;
+    cfg.active_clients = 6;
+    cfg.per_client = 64;
+    cfg.test_size = 256;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.method = method;
+    cfg
+}

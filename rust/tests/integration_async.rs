@@ -4,7 +4,9 @@
 //! weights, LUAR version-gap aging — driven end to end with synthetic
 //! client deltas (the PJRT train graph is the only faked piece; every
 //! scheduling, codec, link, accounting, and LUAR step is the real
-//! library code, exactly as `Server` wires it).
+//! library code, exactly as `Server` wires it). The `SimServer`
+//! fixture lives in `tests/common/mod.rs`, shared with the delta and
+//! sampler suites.
 //!
 //! Pins the acceptance invariants:
 //! * **equivalence** — `async:c=all,s=const` (full concurrency, zero
@@ -23,363 +25,12 @@
 //!   heterogeneous fleet with measured per-upload `version_gap`s in
 //!   the round CSV and per-absorb telemetry in the absorb CSV.
 
-use fedluar::comm::CommAccountant;
-use fedluar::config::{RecycleMode, SelectionScheme};
-use fedluar::fl::{AsyncRuntime, UploadPayload};
-use fedluar::luar::LuarState;
-use fedluar::metrics::{AbsorbRecord, History, RoundRecord};
-use fedluar::model::ModelMeta;
-use fedluar::net::{sched, wire, LinkDist, NetCfg, NetSim, RoundMode, Staleness};
-use fedluar::rng::Rng;
-use fedluar::tensor;
-use std::path::PathBuf;
+mod common;
 
-const LAYERS: usize = 6;
-const LAYER_SIZE: usize = 512;
-const NUM_CLIENTS: usize = 16;
-const ACTIVE: usize = 8;
-
-/// 6-layer synthetic model (8x64 matrices), no artifacts needed.
-fn synth_meta() -> ModelMeta {
-    let mut rows = Vec::new();
-    for l in 0..LAYERS {
-        let off = l * LAYER_SIZE;
-        rows.push(format!(
-            r#"{{"name":"l{l}","kind":"dense","offset":{off},"size":{LAYER_SIZE},
-               "arrays":[{{"name":"w","shape":[8,64],"offset":{off},"size":{LAYER_SIZE}}}]}}"#
-        ));
-    }
-    let dim = LAYERS * LAYER_SIZE;
-    let doc = format!(
-        r#"{{"model":"asim","dim":{dim},"num_classes":10,
-            "input_shape":[8],"input_dtype":"f32","tau":5,"batch":16,
-            "eval_batch":64,"agg_clients":8,"momentum":0.9,
-            "layers":[{}],
-            "artifacts":{{"train":"t","eval":"e","agg":"g","init":"i"}},
-            "init_sha256":"x"}}"#,
-        rows.join(",")
-    );
-    ModelMeta::from_json(&doc, PathBuf::from("/tmp")).unwrap()
-}
-
-/// Deterministic stand-in for one client's local training at a given
-/// sample generation: the only piece of the pipeline that is synthetic.
-fn fake_delta(seed: u64, client: usize, gen: u64, dim: usize) -> (Vec<f32>, f32) {
-    let mut rng = Rng::seed_from_u64(
-        seed ^ (client as u64).wrapping_mul(0x9e37_79b9) ^ gen.wrapping_mul(0x85eb_ca6b),
-    );
-    let delta: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 0.05)).collect();
-    let loss = 1.0 + rng.f32();
-    (delta, loss)
-}
-
-/// Miniature mirror of `fl::Server` for FedAvg / FedLUAR with an SGD
-/// server optimizer: same dispatch half (LUAR layer zeroing, dense
-/// wire codec, per-client links), same absorb half (weighted mean,
-/// Eq. 1 score update, version-gap aging, compose, select-next,
-/// measured byte accounting), with `fake_delta` in place of the AOT
-/// train graph. `test_loss` doubles as a model-trajectory probe
-/// (ssq of the params) so histories pin the parameter path.
-struct SimServer {
-    meta: ModelMeta,
-    seed: u64,
-    /// `Some(delta)` = FedLUAR at that recycling depth; `None` = FedAvg.
-    luar_delta: Option<usize>,
-    net: NetSim,
-    luar: LuarState,
-    params: Vec<f32>,
-    comm: CommAccountant,
-    history: History,
-    rng: Rng,
-    round: usize,
-    sim_seconds: f64,
-    rt: Option<AsyncRuntime>,
-}
-
-impl SimServer {
-    fn new(mode: RoundMode, dist: LinkDist, luar_delta: Option<usize>, seed: u64) -> Self {
-        let meta = synth_meta();
-        let net = NetSim::new(
-            NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1, delta_frames: false },
-            NUM_CLIENTS,
-            42,
-        );
-        let dim = meta.dim;
-        let layers = meta.num_layers();
-        SimServer {
-            meta,
-            seed,
-            luar_delta,
-            net,
-            luar: LuarState::new(layers, dim),
-            params: vec![0.0; dim],
-            comm: CommAccountant::new(layers),
-            history: History::default(),
-            rng: Rng::seed_from_u64(seed ^ 0xc0ffee),
-            round: 0,
-            sim_seconds: 0.0,
-            rt: None,
-        }
-    }
-
-    /// Deterministic round-robin cohorts (the schedule, not the data,
-    /// is under test; both drivers share it, mirroring how `Server`'s
-    /// async sample stream walks the sync cohorts).
-    fn cohort(&self, gen: u64) -> Vec<usize> {
-        (0..ACTIVE).map(|i| ((gen as usize) * ACTIVE + i) % NUM_CLIENTS).collect()
-    }
-
-    fn upload_layers(&self) -> Vec<usize> {
-        if self.luar_delta.is_some() {
-            self.luar.upload_set(self.meta.num_layers())
-        } else {
-            (0..self.meta.num_layers()).collect()
-        }
-    }
-
-    /// Dispatch half for one client: train (fake), zero R_t, encode,
-    /// decode server-side. Returns (decoded update, loss, frame bytes).
-    fn upload(&self, client: usize, gen: u64, upload_layers: &[usize]) -> (Vec<f32>, f32, u64) {
-        let (mut delta, loss) = fake_delta(self.seed, client, gen, self.meta.dim);
-        for &l in &self.luar.recycle_set {
-            let lm = &self.meta.layers[l];
-            delta[lm.offset..lm.offset + lm.size].iter_mut().for_each(|v| *v = 0.0);
-        }
-        let frame =
-            wire::encode_update(&delta, &self.meta, upload_layers, &wire::WireHint::Dense)
-                .unwrap();
-        let decoded = match wire::decode_update(frame.as_bytes(), &self.meta).unwrap() {
-            wire::Decoded::Vector(v) => v,
-            wire::Decoded::Scalar(_) => unreachable!("dense flavor only"),
-        };
-        (decoded, loss, frame.len() as u64)
-    }
-
-    /// Absorb half: mirrors `Server::finish_aggregation` (weighted
-    /// mean, LUAR with version-gap aging, SGD apply, ledger, record).
-    #[allow(clippy::too_many_arguments)]
-    fn finish(
-        &mut self,
-        deltas: &[Vec<f32>],
-        included: &[bool],
-        weights: &[f32],
-        upload_layers: &[usize],
-        actives_len: usize,
-        loss_sum: f64,
-        loss_count: usize,
-        up_bytes_total: u64,
-        down_total: u64,
-        round_secs: f64,
-        tail_s: f64,
-        arrivals: usize,
-        mean_gap: f64,
-    ) {
-        let mut refs: Vec<&[f32]> = Vec::with_capacity(arrivals);
-        let mut agg_weights: Vec<f32> = Vec::with_capacity(arrivals);
-        for (slot, d) in deltas.iter().enumerate() {
-            if included[slot] {
-                refs.push(d.as_slice());
-                agg_weights.push(weights[slot]);
-            }
-        }
-        assert!(!refs.is_empty(), "aggregation must never be empty");
-        let uniform = agg_weights.iter().all(|&w| w == 1.0);
-        let mut mean = vec![0.0f32; self.meta.dim];
-        if uniform {
-            tensor::mean_rows_par(&refs, &mut mean);
-        } else {
-            let wsum: f32 = agg_weights.iter().sum();
-            let norm: Vec<f32> = agg_weights.iter().map(|w| w / wsum).collect();
-            tensor::weighted_mean_rows(&refs, &norm, &mut mean);
-        }
-        let mut u_ssq = Vec::with_capacity(self.meta.num_layers());
-        let mut w_ssq = Vec::with_capacity(self.meta.num_layers());
-        for lm in &self.meta.layers {
-            let r = lm.offset..lm.offset + lm.size;
-            u_ssq.push(tensor::ssq(&mean[r.clone()]) as f32);
-            w_ssq.push(tensor::ssq(&self.params[r]) as f32);
-        }
-        let mut kappa = 0.0;
-        if let Some(delta_sel) = self.luar_delta {
-            self.luar.update_scores(&u_ssq, &w_ssq);
-            self.luar.set_age_step(1 + mean_gap.round() as u32);
-            kappa = self.luar.compose_update(&mut mean, &self.meta, RecycleMode::Recycle);
-            let grad_norms: Vec<f64> =
-                u_ssq.iter().map(|&s| (s as f64).max(0.0).sqrt()).collect();
-            self.luar.select_next(SelectionScheme::Luar, delta_sel, &grad_norms, &mut self.rng);
-        }
-        tensor::axpy(1.0, &mean, &mut self.params);
-        self.comm.record_wire_round(
-            actives_len as u64,
-            upload_layers,
-            up_bytes_total,
-            wire::dense_frame_len(&self.meta),
-            down_total,
-        );
-        self.sim_seconds += round_secs;
-        let train_loss = loss_sum / loss_count.max(1) as f64;
-        self.round += 1;
-        self.history.push(RoundRecord {
-            round: self.round,
-            train_loss,
-            test_loss: tensor::ssq(&self.params),
-            test_acc: self.params[0] as f64,
-            up_bytes: self.comm.up_bytes,
-            comm_ratio: self.comm.comm_ratio(),
-            kappa,
-            sim_seconds: self.sim_seconds,
-            wire_bytes: up_bytes_total,
-            tail_s,
-            arrivals,
-            version_gap: mean_gap,
-        });
-    }
-
-    fn run_sync_round(&mut self) {
-        let t = self.round as u64;
-        let actives = self.cohort(t);
-        let upload_layers = self.upload_layers();
-        let bcast =
-            wire::encode_broadcast(&self.params, &self.meta, &self.luar.recycle_set).unwrap();
-        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
-        let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
-        let mut loss_sum = 0.0f64;
-        let mut up_total = 0u64;
-        for &client in &actives {
-            let (d, loss, flen) = self.upload(client, t, &upload_layers);
-            loss_sum += loss as f64;
-            up_total += flen;
-            frame_lens.push(flen);
-            deltas.push(d);
-        }
-        let outcome = self.net.round(&actives, bcast.len() as u64, &frame_lens);
-        let down = actives.len() as u64 * bcast.len() as u64;
-        self.finish(
-            &deltas,
-            &outcome.included,
-            &outcome.weights,
-            &upload_layers,
-            actives.len(),
-            loss_sum,
-            actives.len(),
-            up_total,
-            down,
-            outcome.round_secs,
-            outcome.straggler_tail_s,
-            outcome.aggregated,
-            0.0,
-        );
-    }
-
-    fn dispatch_next(&mut self) {
-        let (mut gen, mut idx) = {
-            let rt = self.rt.as_ref().unwrap();
-            (rt.sample_gen, rt.sample_idx as usize)
-        };
-        if idx >= ACTIVE {
-            gen += 1;
-            idx = 0;
-        }
-        let client = self.cohort(gen)[idx];
-        {
-            let rt = self.rt.as_mut().unwrap();
-            rt.sample_gen = gen;
-            rt.sample_idx = (idx + 1) as u64;
-        }
-        let upload_layers = self.upload_layers();
-        let bcast =
-            wire::encode_broadcast(&self.params, &self.meta, &self.luar.recycle_set).unwrap();
-        let (delta, loss, frame_len) = self.upload(client, gen, &upload_layers);
-        let secs = self.net.client_secs(client, bcast.len() as u64, frame_len);
-        let rt = self.rt.as_mut().unwrap();
-        let payload = UploadPayload {
-            client,
-            version: rt.version,
-            gen,
-            delta,
-            loss,
-            frame_len,
-            bcast_len: bcast.len() as u64,
-        };
-        rt.dispatch(payload, secs);
-    }
-
-    fn run_async_round(&mut self, c: usize, staleness: Staleness) {
-        if self.rt.is_none() {
-            self.rt = Some(AsyncRuntime::new(NUM_CLIENTS, c, ACTIVE, staleness));
-        }
-        loop {
-            while self.rt.as_ref().unwrap().wants_dispatch() {
-                self.dispatch_next();
-            }
-            let start = self.rt.as_mut().unwrap().absorb_instant();
-            {
-                let rt = self.rt.as_ref().unwrap();
-                let in_flight = rt.in_flight();
-                let version = rt.version;
-                for (i, u) in rt.buffer[start..].iter().enumerate() {
-                    self.history.absorbs.push(AbsorbRecord {
-                        version,
-                        client: u.payload.client,
-                        t: u.t,
-                        version_gap: u.version_gap,
-                        weight: u.weight,
-                        in_flight,
-                        queue_depth: start + i + 1,
-                    });
-                }
-            }
-            if self.rt.as_ref().unwrap().ready() {
-                let batch = self.rt.as_mut().unwrap().take_aggregation();
-                let n = batch.uploads.len();
-                let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
-                let mut weights: Vec<f32> = Vec::with_capacity(n);
-                let mut loss_sum = 0.0f64;
-                let mut up_total = 0u64;
-                for u in batch.uploads {
-                    loss_sum += u.payload.loss as f64;
-                    up_total += u.payload.frame_len;
-                    weights.push(u.weight);
-                    deltas.push(u.payload.delta);
-                }
-                let included = vec![true; n];
-                let upload_layers = self.upload_layers();
-                self.finish(
-                    &deltas,
-                    &included,
-                    &weights,
-                    &upload_layers,
-                    n,
-                    loss_sum,
-                    n,
-                    up_total,
-                    batch.down_bytes,
-                    batch.round_secs,
-                    batch.tail_s,
-                    n,
-                    batch.mean_gap,
-                );
-                return;
-            }
-        }
-    }
-
-    fn run(&mut self, rounds: usize) {
-        while self.round < rounds {
-            match self.net.cfg.round_mode {
-                RoundMode::Async { concurrency, staleness } => {
-                    let c = if concurrency == 0 { ACTIVE } else { concurrency };
-                    self.run_async_round(c, staleness);
-                }
-                _ => self.run_sync_round(),
-            }
-        }
-    }
-}
-
-fn edge_fleet() -> LinkDist {
-    LinkDist::LogNormal { up_mbps: 10.0, down_mbps: 50.0, sigma: 0.75, rtt_s: 0.05 }
-}
+use common::{assert_history_identical, bimodal_fleet, edge_fleet, SimServer, ACTIVE};
+use fedluar::fl::AsyncRuntime;
+use fedluar::metrics::History;
+use fedluar::net::{sched, LinkDist, RoundMode, Staleness};
 
 // ------------------------------------------------------------------ tests
 
@@ -519,41 +170,6 @@ fn async_runs_are_deterministic_and_resume_exactly() {
     }
 }
 
-fn assert_history_identical(a: &History, b: &History, what: &str) {
-    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
-    for (x, y) in a.records.iter().zip(&b.records) {
-        assert_eq!(x.round, y.round, "{what}");
-        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {}", x.round);
-        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{what} round {}", x.round);
-        assert_eq!(x.kappa.to_bits(), y.kappa.to_bits(), "{what} round {}", x.round);
-        assert_eq!(x.up_bytes, y.up_bytes, "{what} round {}", x.round);
-        assert_eq!(x.wire_bytes, y.wire_bytes, "{what} round {}", x.round);
-        assert_eq!(x.arrivals, y.arrivals, "{what} round {}", x.round);
-        assert_eq!(
-            x.sim_seconds.to_bits(),
-            y.sim_seconds.to_bits(),
-            "{what} round {}",
-            x.round
-        );
-        assert_eq!(
-            x.version_gap.to_bits(),
-            y.version_gap.to_bits(),
-            "{what} round {}",
-            x.round
-        );
-    }
-    assert_eq!(a.absorbs.len(), b.absorbs.len(), "{what}: absorb count");
-    for (x, y) in a.absorbs.iter().zip(&b.absorbs) {
-        assert_eq!(x.version, y.version, "{what}");
-        assert_eq!(x.client, y.client, "{what}");
-        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{what}");
-        assert_eq!(x.version_gap, y.version_gap, "{what}");
-        assert_eq!(x.weight.to_bits(), y.weight.to_bits(), "{what}");
-        assert_eq!(x.in_flight, y.in_flight, "{what}");
-        assert_eq!(x.queue_depth, y.queue_depth, "{what}");
-    }
-}
-
 /// `async:c=N` completes an e2e run for FedAvg and FedLUAR over a
 /// heterogeneous fleet: measured per-upload version gaps appear in the
 /// round CSV (and round-trip through the parser), staleness discounts
@@ -626,13 +242,7 @@ fn async_e2e_fedavg_and_fedluar_with_measured_gaps() {
 /// be faster than sync rounds that barrier on the slow cohort.
 #[test]
 fn async_decouples_wall_clock_from_stragglers() {
-    let dist = LinkDist::Bimodal {
-        fast_frac: 0.75,
-        fast_up_mbps: 80.0,
-        slow_up_mbps: 1.0,
-        down_mbps: 100.0,
-        rtt_s: 0.0,
-    };
+    let dist = bimodal_fleet();
     let mut sync = SimServer::new(RoundMode::Sync, dist.clone(), None, 3);
     sync.run(8);
     let amode = RoundMode::Async { concurrency: 2 * ACTIVE, staleness: Staleness::Poly { a: 0.5 } };

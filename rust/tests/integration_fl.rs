@@ -3,32 +3,11 @@
 //! Uses the small MLP benchmark (sub-second rounds); skips when
 //! artifacts are missing.
 
-use fedluar::config::{
-    ClientOptCfg, Method, RecycleMode, RunConfig, SelectionScheme, ServerOptCfg,
-};
+mod common;
+
+use common::{have_artifacts, quick_cfg};
+use fedluar::config::{ClientOptCfg, Method, RecycleMode, SelectionScheme, ServerOptCfg};
 use fedluar::fl::Server;
-use fedluar::model::{artifacts_dir, ModelMeta};
-
-fn have_artifacts() -> bool {
-    if ModelMeta::load(artifacts_dir(), "mlp").is_ok() {
-        true
-    } else {
-        eprintln!("SKIP: run `make artifacts`");
-        false
-    }
-}
-
-fn quick_cfg(method: Method) -> RunConfig {
-    let mut cfg = RunConfig::benchmark("mlp").unwrap();
-    cfg.num_clients = 24;
-    cfg.active_clients = 6;
-    cfg.per_client = 64;
-    cfg.test_size = 256;
-    cfg.rounds = 8;
-    cfg.eval_every = 4;
-    cfg.method = method;
-    cfg
-}
 
 #[test]
 fn fedavg_learns_and_counts_full_comm() {

@@ -71,7 +71,7 @@ fn run_comm_rounds(
     let num_clients = 16usize;
     let active = 8usize;
     let sim = NetSim::new(
-        NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1, delta_frames: false },
+        NetCfg { link_dist: dist, round_mode: mode, compute_s: 0.1, ..NetCfg::default() },
         num_clients,
         42,
     );
@@ -237,7 +237,7 @@ fn sync_wall_clock_is_slowest_active_client() {
     };
     let meta = synth_meta();
     let sim = NetSim::new(
-        NetCfg { link_dist: dist, round_mode: RoundMode::Sync, compute_s: 0.0, delta_frames: false },
+        NetCfg { link_dist: dist, round_mode: RoundMode::Sync, compute_s: 0.0, ..NetCfg::default() },
         16,
         42,
     );

@@ -97,7 +97,7 @@ impl SimServer {
                 link_dist: edge_fleet(),
                 round_mode: mode,
                 compute_s: 0.1,
-                delta_frames: false,
+                ..NetCfg::default()
             },
             NUM_CLIENTS,
             42,
@@ -337,8 +337,7 @@ fn off_vs_full_runs_are_bit_identical() {
     obs::init(&ObsCfg {
         level: ObsLevel::Full,
         trace_path: Some(dir.join("trace.jsonl").to_str().unwrap().to_string()),
-        metrics_path: None,
-        layer_csv: None,
+        ..ObsCfg::default()
     })
     .unwrap();
     let mut full = SimServer::new(7);
@@ -399,6 +398,7 @@ fn full_run_emits_wellformed_artifacts() {
         trace_path: Some(trace.clone()),
         metrics_path: Some(prom.clone()),
         layer_csv: Some(csv.clone()),
+        ..ObsCfg::default()
     })
     .unwrap();
     let mut s = SimServer::new(3);

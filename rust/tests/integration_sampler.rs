@@ -1,0 +1,381 @@
+//! Straggler-aware client sampling (engine-free): the pluggable
+//! `net.sampler` tier driven through the shared `SimServer` fixture,
+//! pinning the ISSUE's acceptance invariants:
+//!
+//! * **uniform equivalence** — `sampler = uniform` reproduces the
+//!   legacy cohort stream bit-exactly (same seeded Fisher-Yates under
+//!   the `0xc11e_0000` salt), and a `staleness:cap=N` run whose cap
+//!   never bites is bit-identical to a uniform run end to end;
+//! * **wall-clock win** — on a bimodal straggler fleet, `speed:pow=1`
+//!   strictly reduces simulated wall-clock at an equal absorbed-upload
+//!   count, with per-client participation counts reconciling exactly
+//!   against the scheduler's dispatch log;
+//! * **bounded staleness** — `staleness:cap=0` holds every stale
+//!   upload out of the aggregation mean (the round's recorded mean
+//!   version gap is exactly zero) without ever emptying a batch;
+//! * **pinned trace** — the seeded biased-cohort stream matches
+//!   `tests/data/golden_sampler.csv` (regenerate with
+//!   `UPDATE_GOLDENS=1`), so weight math and the weighted draw cannot
+//!   drift silently;
+//! * **persistence** — checkpoint v4 round-trips the telemetry table
+//!   (a resumed speed run is bit-identical to an uninterrupted one)
+//!   while v3 files still load with a cold table.
+
+mod common;
+
+use common::{
+    assert_history_identical, bimodal_fleet, edge_fleet, have_artifacts, legacy_cohort,
+    quick_cfg, SimServer, ACTIVE, NUM_CLIENTS,
+};
+use fedluar::config::Method;
+use fedluar::fl::Server;
+use fedluar::net::{speed_cohort, speed_weights, ClientStats, RoundMode, SamplerCfg, Staleness};
+use fedluar::obs::{self, ObsCfg, ObsLevel};
+use fedluar::rng::Rng;
+
+// ------------------------------------------------------------------ tests
+
+/// `sampler = uniform` is the legacy draw, not merely statistically
+/// similar to it: the sampled cohort stream equals `legacy_cohort` and
+/// an inline replication of the seeded Fisher-Yates for every round.
+#[test]
+fn uniform_sampler_reproduces_the_legacy_cohort_stream() {
+    for seed in [3u64, 11, 29] {
+        let s = SimServer::new(RoundMode::Sync, edge_fleet(), Some(2), seed)
+            .with_sampler(SamplerCfg::Uniform);
+        for round in 0..32u64 {
+            let got = s.cohort(round);
+            assert_eq!(
+                got,
+                legacy_cohort(NUM_CLIENTS, ACTIVE, seed, round),
+                "seed {seed} round {round}"
+            );
+            let mut rng = Rng::seed_from_u64(seed ^ 0xc11e_0000 ^ round);
+            assert_eq!(
+                got,
+                rng.sample_indices(NUM_CLIENTS, ACTIVE),
+                "inline replication, seed {seed} round {round}"
+            );
+        }
+    }
+}
+
+/// A `staleness:cap` large enough never to bite must be bit-identical
+/// to `uniform` — same cohorts, same histories, same parameters, same
+/// telemetry — because the two specs share one code path until the cap
+/// actually holds something.
+#[test]
+fn generous_staleness_cap_is_bit_identical_to_uniform() {
+    let amode = RoundMode::Async { concurrency: 3, staleness: Staleness::Poly { a: 0.5 } };
+    let mut uniform =
+        SimServer::new(amode, edge_fleet(), Some(2), 11).with_sampler(SamplerCfg::Uniform);
+    uniform.run(12);
+    let mut capped = SimServer::new(amode, edge_fleet(), Some(2), 11)
+        .with_sampler(SamplerCfg::Staleness { cap: 1_000_000 });
+    capped.run(12);
+    assert_history_identical(&uniform.history, &capped.history, "generous cap vs uniform");
+    for (i, (x, y)) in uniform.params.iter().zip(&capped.params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "param {i} diverged");
+    }
+    assert_eq!(uniform.dispatch_log, capped.dispatch_log, "dispatch order");
+    assert_eq!(uniform.sampler_stats, capped.sampler_stats, "telemetry tables");
+    assert_eq!(
+        capped.sampler_stats.held_stale.iter().sum::<u64>(),
+        0,
+        "a generous cap must hold nothing"
+    );
+}
+
+/// The tentpole acceptance test: on a bimodal fleet (fast 80 Mbps vs
+/// slow 1 Mbps uplinks), `speed:pow=1` strictly reduces simulated
+/// wall-clock at an equal absorbed-upload count, and the per-client
+/// participation counts reconcile exactly against the dispatch log.
+#[test]
+fn speed_sampling_strictly_cuts_wall_clock_on_a_bimodal_fleet() {
+    let rounds = 10;
+    let mut uniform = SimServer::new(RoundMode::Sync, bimodal_fleet(), None, 13)
+        .with_sampler(SamplerCfg::Uniform);
+    uniform.run(rounds);
+    let mut speed = SimServer::new(RoundMode::Sync, bimodal_fleet(), None, 13)
+        .with_sampler(SamplerCfg::Speed { pow: 1.0 });
+    speed.run(rounds);
+
+    // equal absorbed work: sync rounds absorb the full cohort
+    let absorbed = |s: &SimServer| s.sampler_stats.absorbed.iter().sum::<u64>();
+    assert_eq!(absorbed(&uniform), (rounds * ACTIVE) as u64);
+    assert_eq!(absorbed(&speed), absorbed(&uniform), "absorbed-upload counts must match");
+
+    // ... in strictly less simulated time
+    assert!(
+        speed.sim_seconds < uniform.sim_seconds,
+        "speed-biased sampling must beat uniform on a bimodal fleet: {} !< {}",
+        speed.sim_seconds,
+        uniform.sim_seconds
+    );
+
+    // participation counts reconcile exactly against the dispatch log
+    for (tag, s) in [("uniform", &uniform), ("speed", &speed)] {
+        assert_eq!(s.dispatch_log.len(), rounds * ACTIVE, "{tag}: dispatch count");
+        let mut counts = vec![0u64; NUM_CLIENTS];
+        for &c in &s.dispatch_log {
+            counts[c] += 1;
+        }
+        assert_eq!(
+            counts, s.sampler_stats.dispatches,
+            "{tag}: telemetry participation vs dispatch log"
+        );
+    }
+
+    // the bias visibly moves dispatches off the slow mode
+    let slow_dispatches = |s: &SimServer| -> u64 {
+        (0..NUM_CLIENTS)
+            .filter(|&c| s.net.fleet.link(c).up_bps < 2e6)
+            .map(|c| s.sampler_stats.dispatches[c])
+            .sum()
+    };
+    assert!(
+        slow_dispatches(&speed) < slow_dispatches(&uniform),
+        "speed bias must shift participation away from slow links ({} !< {})",
+        slow_dispatches(&speed),
+        slow_dispatches(&uniform)
+    );
+
+    // every biased cohort is still ACTIVE distinct clients
+    for round in 0..rounds as u64 {
+        let cohort = fedluar::net::speed_cohort(
+            &speed.sampler_stats,
+            1.0,
+            round as usize,
+            ACTIVE,
+            speed.seed,
+        );
+        assert_eq!(cohort.len(), ACTIVE);
+        let mut sorted = cohort.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ACTIVE, "round {round}: cohort must be distinct");
+    }
+}
+
+/// `staleness:cap=0` holds every stale upload out of the mean: the
+/// dispatch schedule is untouched (the cap acts at absorb time only),
+/// every recorded mean version gap is exactly zero, held + absorbed
+/// accounts for every arrival, and the model trajectory actually moves
+/// (the excluded uploads changed the aggregate).
+#[test]
+fn staleness_cap_holds_stale_uploads_out_of_the_mean() {
+    let amode = RoundMode::Async { concurrency: 4, staleness: Staleness::Poly { a: 0.5 } };
+    let mut uniform =
+        SimServer::new(amode, edge_fleet(), None, 11).with_sampler(SamplerCfg::Uniform);
+    uniform.run(12);
+    let mut capped = SimServer::new(amode, edge_fleet(), None, 11)
+        .with_sampler(SamplerCfg::Staleness { cap: 0 });
+    capped.run(12);
+
+    // the cap never touches dispatch: both runs see the same arrivals
+    assert_eq!(uniform.dispatch_log, capped.dispatch_log, "dispatch schedule");
+    assert_eq!(uniform.history.absorbs.len(), capped.history.absorbs.len());
+    for (x, y) in uniform.history.absorbs.iter().zip(&capped.history.absorbs) {
+        assert_eq!(
+            (x.version, x.client, x.version_gap),
+            (y.version, y.client, y.version_gap),
+            "arrival streams must be identical"
+        );
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+    }
+
+    let stale_arrivals =
+        uniform.history.absorbs.iter().filter(|a| a.version_gap > 0).count() as u64;
+    assert!(stale_arrivals > 0, "fixture must generate staleness for the cap to bite");
+    assert_eq!(uniform.sampler_stats.held_stale.iter().sum::<u64>(), 0);
+
+    // cap=0: exactly the stale arrivals are held, the rest absorbed
+    let held: u64 = capped.sampler_stats.held_stale.iter().sum();
+    let absorbed: u64 = capped.sampler_stats.absorbed.iter().sum();
+    assert_eq!(held, stale_arrivals, "every stale arrival must be held");
+    assert_eq!(
+        held + absorbed,
+        capped.history.absorbs.len() as u64,
+        "held + absorbed must account for every arrival"
+    );
+
+    // the recorded mean gap is computed over admitted uploads only —
+    // with cap=0 it is exactly zero every round (a batch always holds
+    // fresh in-window uploads, so the all-held fallback never fires)
+    for r in &capped.history.records {
+        assert_eq!(
+            r.version_gap.to_bits(),
+            0f64.to_bits(),
+            "round {}: admitted mean gap must be exactly zero",
+            r.round
+        );
+    }
+
+    // holding stale uploads must actually change the aggregate
+    assert!(
+        uniform
+            .history
+            .records
+            .iter()
+            .zip(&capped.history.records)
+            .any(|(a, b)| a.test_loss.to_bits() != b.test_loss.to_bits()),
+        "the cap must change the aggregated mean"
+    );
+}
+
+/// The per-client CSV is the fairness observable: one row per client
+/// whose participation counts reconcile exactly with the dispatch log,
+/// written through `obs::finish` with the pinned 8-column header.
+#[test]
+fn per_client_csv_reconciles_with_the_dispatch_log() {
+    let dir = std::env::temp_dir().join("fedluar_sampler_csv_test");
+    let path = dir.join("clients.csv").to_str().unwrap().to_string();
+    obs::init(&ObsCfg {
+        level: ObsLevel::Metrics,
+        clients_csv: Some(path.clone()),
+        ..ObsCfg::default()
+    })
+    .unwrap();
+
+    let mut s = SimServer::new(RoundMode::Sync, bimodal_fleet(), None, 13)
+        .with_sampler(SamplerCfg::Speed { pow: 1.0 });
+    s.run(10);
+    obs::record_client_rounds(&s.sampler_stats, &s.net.fleet);
+
+    let rows = obs::client_rows();
+    assert_eq!(rows.len(), NUM_CLIENTS, "one row per client");
+    let mut counts = vec![0u64; NUM_CLIENTS];
+    for &c in &s.dispatch_log {
+        counts[c] += 1;
+    }
+    for (c, row) in rows.iter().enumerate() {
+        assert_eq!(row.client, c);
+        assert_eq!(row.dispatches, counts[c], "client {c}: participation vs dispatch log");
+        assert_eq!(row.absorbed, s.sampler_stats.absorbed[c]);
+        assert_eq!(row.held_stale, s.sampler_stats.held_stale[c]);
+        assert_eq!(row.up_bytes, s.sampler_stats.up_bytes[c]);
+    }
+    assert_eq!(
+        rows.iter().map(|r| r.dispatches).sum::<u64>(),
+        s.dispatch_log.len() as u64,
+        "total participation must equal total dispatches"
+    );
+
+    let written = obs::finish().unwrap();
+    assert!(written.contains(&path), "finish must write the clients CSV: {written:?}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,mean_upload_s,up_bytes"
+    );
+    assert_eq!(text.lines().count(), 1 + NUM_CLIENTS);
+    for line in text.lines().skip(1) {
+        assert_eq!(line.split(',').count(), 8, "{line}");
+    }
+}
+
+/// The seeded biased-cohort trace is pinned: normalized speed weights
+/// (as f64 bits) and ten weighted draws over a synthetic telemetry
+/// table must match `tests/data/golden_sampler.csv` exactly.
+/// Regenerate with `UPDATE_GOLDENS=1 cargo test speed_cohort_trace`.
+#[test]
+fn speed_cohort_trace_matches_golden() {
+    let mut stats = ClientStats::new(16);
+    for c in 0..16usize {
+        // exact powers of two, so the weight math is bit-portable
+        let secs = [0.125, 0.25, 0.5, 1.0][c % 4];
+        stats.record_dispatch(c, secs, 100 * (c as u64 + 1));
+    }
+    let weights = speed_weights(&stats, 1.0);
+    let mut lines = vec!["kind,round,value".to_string()];
+    lines.push(format!(
+        "weights,-,{}",
+        weights.iter().map(|w| format!("{:016x}", w.to_bits())).collect::<Vec<_>>().join(";")
+    ));
+    for round in 0..10usize {
+        let cohort = speed_cohort(&stats, 1.0, round, 6, 0x5A17);
+        lines.push(format!(
+            "cohort,{round},{}",
+            cohort.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(";")
+        ));
+    }
+    let got = lines.join("\n") + "\n";
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/golden_sampler.csv");
+    if std::env::var("UPDATE_GOLDENS").is_ok() {
+        std::fs::write(path, &got).unwrap();
+        panic!("golden_sampler.csv regenerated; re-run without UPDATE_GOLDENS");
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden_sampler.csv missing (UPDATE_GOLDENS=1 to create)");
+    assert_eq!(got, want, "seeded speed-sampler trace drifted from the golden file");
+}
+
+/// Checkpoint v4 persists the telemetry table: a speed-sampled run
+/// interrupted at the halfway point resumes onto the exact trajectory
+/// of an uninterrupted one (the biased draws depend on the restored
+/// per-client means).
+#[test]
+fn checkpoint_v4_round_trips_speed_sampler_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let speed_cfg = || {
+        let mut cfg = quick_cfg(Method::FedAvg);
+        cfg.net.sampler = SamplerCfg::Speed { pow: 1.0 };
+        cfg
+    };
+    let mut full = Server::new(speed_cfg()).unwrap();
+    full.run().unwrap();
+    let mut cfg = speed_cfg();
+    cfg.rounds = 4;
+    let mut first = Server::new(cfg).unwrap();
+    first.run().unwrap();
+    assert!(
+        first.sampler_stats.dispatches.iter().sum::<u64>() > 0,
+        "speed run must record telemetry"
+    );
+    let path = std::env::temp_dir().join("fedluar_ckpt_v4_sampler.bin");
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = Server::new(speed_cfg()).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 4);
+    assert_eq!(resumed.sampler_stats, first.sampler_stats, "v4 must restore the table");
+    resumed.run().unwrap();
+    let (xa, ..) = resumed.opt.snapshot();
+    let (xb, ..) = full.opt.snapshot();
+    assert_eq!(xa, xb, "speed-sampled resume diverged from straight-through run");
+    assert_eq!(resumed.sampler_stats, full.sampler_stats, "terminal telemetry");
+}
+
+/// Older checkpoints still load: a v3 file carries no sampler section,
+/// so the table comes back cold and a speed run simply re-warms from
+/// uniform weights.
+#[test]
+fn checkpoint_v3_loads_with_cold_sampler_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(Method::FedAvg);
+    cfg.net.sampler = SamplerCfg::Speed { pow: 1.0 };
+    cfg.rounds = 4;
+    let mut first = Server::new(cfg).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_v3_sampler.bin");
+    first.save_checkpoint_as(&path, 3).unwrap();
+
+    let mut cfg = quick_cfg(Method::FedAvg);
+    cfg.net.sampler = SamplerCfg::Speed { pow: 1.0 };
+    let mut resumed = Server::new(cfg).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 4);
+    assert!(
+        resumed.sampler_stats.dispatches.iter().all(|&d| d == 0),
+        "v3 carries no sampler telemetry"
+    );
+    assert!(resumed.sampler_stats.upload_secs_sum.iter().all(|&s| s == 0.0));
+    resumed.run().unwrap();
+    assert_eq!(resumed.round, 8, "cold-table resume must still complete");
+    assert!(resumed.sampler_stats.dispatches.iter().sum::<u64>() > 0);
+}

@@ -6,10 +6,12 @@
 use fedluar::comm::CommAccountant;
 use fedluar::compress::{Binarize, DropoutAvg, LowRank, Quantize, UpdateCompressor};
 use fedluar::config::{RecycleMode, SelectionScheme};
+use fedluar::data::{FedDataset, SynthSpec};
 use fedluar::fl::{DeltaFrameState, DELTA_MAX_REF_GAP};
 use fedluar::luar::{select_layers, LuarState};
 use fedluar::model::ModelMeta;
 use fedluar::net::wire::{self, WireHint};
+use fedluar::net::{speed_weights, ClientStats, SamplerCfg};
 use fedluar::rng::Rng;
 use fedluar::tensor;
 use std::path::PathBuf;
@@ -552,6 +554,94 @@ fn prop_delta_refstate_fallbacks_and_savings() {
         assert_eq!(gap, 1.0, "seed {seed}: one-version reference gap");
         // drained: a second drain reports nothing
         assert_eq!(st.drain_round(), (0, 0, 0.0), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------- sampler
+
+/// Speed-sampler weights form a valid distribution over randomized
+/// fleets: every weight finite and non-negative, the total exactly
+/// sums to one, and a weighted draw over them is always a full cohort
+/// — across cold, degenerate-zero-latency, and heavily-measured
+/// telemetry mixes at every supported bias exponent.
+#[test]
+fn prop_sampler_weights_are_a_distribution() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(10_000 + seed);
+        let n = rng.gen_range(1, 40);
+        let mut stats = ClientStats::new(n);
+        for c in 0..n {
+            match rng.gen_range(0, 4) {
+                0 => {} // never dispatched: weight comes from the fill value
+                1 => stats.record_dispatch(c, 0.0, 0), // degenerate zero latency
+                2 => stats.record_dispatch(c, rng.f64() * 1e6, rng.next_u64() % 1_000_000),
+                _ => {
+                    for _ in 0..rng.gen_range(1, 5) {
+                        stats.record_dispatch(c, rng.f64() * 10.0, 1000);
+                    }
+                }
+            }
+        }
+        let pow = [0.25, 0.5, 1.0, 2.0, 4.0][rng.gen_range(0, 5)];
+        let w = speed_weights(&stats, pow);
+        assert_eq!(w.len(), n, "seed {seed}");
+        assert!(
+            w.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "seed {seed}: non-finite or negative weight in {w:?}"
+        );
+        let total: f64 = w.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "seed {seed}: weights sum to {total}");
+        let k = rng.gen_range(0, n + 1);
+        let picks = rng.weighted_sample_without_replacement(&w, k);
+        assert_eq!(picks.len(), k.min(n), "seed {seed}: short cohort");
+        // an entirely cold table degrades to exactly uniform
+        let cold = speed_weights(&ClientStats::new(n), pow);
+        assert!(
+            cold.iter().all(|x| *x == 1.0 / n as f64),
+            "seed {seed}: cold table must be uniform, got {cold:?}"
+        );
+    }
+}
+
+/// The uniform sampler is the legacy cohort draw, bit for bit, across
+/// randomized fleet shapes, run seeds, and rounds: the production
+/// `FedDataset::sample_clients` stream equals an inline replication of
+/// the seeded Fisher-Yates under the `0xc11e_0000` salt.
+#[test]
+fn prop_sampler_uniform_matches_legacy_cohort_draw() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(11_000 + seed);
+        let n = rng.gen_range(1, 30);
+        let active = rng.gen_range(1, n + 1);
+        let run_seed = rng.next_u64();
+        let ds = FedDataset::new(SynthSpec::vision(8, 8, 1, 4), n, 8, 0.5, 16, 7);
+        for round in 0..20usize {
+            let legacy = ds.sample_clients(round, active, run_seed);
+            let mut draw = Rng::seed_from_u64(run_seed ^ 0xc11e_0000 ^ round as u64);
+            assert_eq!(
+                draw.sample_indices(n, active),
+                legacy,
+                "seed {seed} round {round}: uniform draw must equal the legacy stream"
+            );
+        }
+    }
+}
+
+/// Every sampler spec round-trips through its config string (the
+/// checkpoint/config persistence path), and rejected specs stay
+/// rejected.
+#[test]
+fn prop_sampler_spec_roundtrips() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(12_000 + seed);
+        let cfg = match rng.gen_range(0, 3) {
+            0 => SamplerCfg::Uniform,
+            1 => SamplerCfg::Speed { pow: rng.f64() * 4.0 + 0.01 },
+            _ => SamplerCfg::Staleness { cap: rng.next_u64() % 1000 },
+        };
+        // f64 Display is shortest-roundtrip, so equality is exact
+        let parsed = SamplerCfg::parse(&cfg.spec_string()).unwrap();
+        assert_eq!(cfg, parsed, "seed {seed}: {}", cfg.spec_string());
     }
 }
 
