@@ -4,14 +4,15 @@
 //! arguments, with typed getters and an unknown-flag check.
 //!
 //! The `run` subcommand's network flags (`--link-dist`, `--round-mode`,
-//! `--compute-s`, `--sampler`) configure the `net:` simulation block —
-//! see the USAGE/NET SIMULATION section of `main.rs`'s HELP string and
-//! `net::NetCfg` for the spec grammar (`uniform | lognormal | bimodal`
-//! fleets; `sync | deadline:s=F | buffered:k=N |
-//! async:c=N,s=const|poly[,a=F]` round modes — `async` runs the
-//! barrier-free server with per-client model versions and
+//! `--compute-s`, `--sampler`, `--faults`) configure the `net:`
+//! simulation block — see the USAGE/NET SIMULATION section of
+//! `main.rs`'s HELP string and `net::NetCfg` for the spec grammar
+//! (`uniform | lognormal | bimodal` fleets; `sync | deadline:s=F |
+//! buffered:k=N | async:c=N,s=const|poly[,a=F]` round modes — `async`
+//! runs the barrier-free server with per-client model versions and
 //! staleness-discounted aggregation; `uniform | speed:pow=F |
-//! staleness:cap=N` cohort samplers).
+//! staleness:cap=N` cohort samplers; `off | drop | outage | corrupt |
+//! mixed` deterministic fault plans, see `docs/faults.md`).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;

@@ -8,7 +8,7 @@
 //! method/optimizer specs use compact strings like `luar:delta=2`.
 
 use crate::data::{SynthKind, SynthSpec};
-use crate::net::{LinkDist, NetCfg, RoundMode, SamplerCfg};
+use crate::net::{FaultsCfg, LinkDist, NetCfg, RoundMode, SamplerCfg};
 use crate::obs::{ObsCfg, ObsLevel};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -411,7 +411,7 @@ impl RunConfig {
              lr_decay_rounds = {}\nseed = {}\nmethod = {}\nluar_compress = {}\nserver_opt = {}\n\
              mu_global = {}\nmu_prev = {}\neval_every = {}\ndifficulty = {}\n\
              client_failure_rate = {}\nlink_dist = {}\nround_mode = {}\ncompute_s = {}\n\
-             delta_frames = {}\nsampler = {}\n\
+             delta_frames = {}\nsampler = {}\nfaults = {}\n\
              obs_level = {}\nobs_trace = {}\nobs_metrics = {}\nobs_layer_csv = {}\n\
              obs_clients_csv = {}\n",
             self.model,
@@ -443,6 +443,7 @@ impl RunConfig {
             self.net.compute_s,
             self.net.delta_frames,
             self.net.sampler.spec_string(),
+            self.net.faults.spec_string(),
             self.obs.level.name(),
             self.obs.trace_path.as_deref().unwrap_or("none"),
             self.obs.metrics_path.as_deref().unwrap_or("none"),
@@ -540,6 +541,11 @@ impl RunConfig {
         if let Some(v) = kv.get("sampler") {
             cfg.net.sampler = SamplerCfg::parse(v)?;
         }
+        // Fault injection is opt-in; configs written before the key
+        // existed parse as `off` (no faults, bit-identical behavior).
+        if let Some(v) = kv.get("faults") {
+            cfg.net.faults = FaultsCfg::parse(v)?;
+        }
         // obs: block (flat keys); `none` leaves a path unset.
         if let Some(v) = kv.get("obs_level") {
             cfg.obs.level = ObsLevel::parse(v)?;
@@ -594,6 +600,8 @@ mod tests {
         cfg.net.compute_s = 0.5;
         cfg.net.delta_frames = true;
         cfg.net.sampler = SamplerCfg::Speed { pow: 1.5 };
+        cfg.net.faults =
+            FaultsCfg::parse("mixed:drop=0.1,outage=0.05,len=20,corrupt=0.02,quorum=3").unwrap();
         let text = cfg.save_kv();
         let back = RunConfig::load_kv(&text).unwrap();
         assert_eq!(back.method, cfg.method);
@@ -648,6 +656,27 @@ mod tests {
         // staleness requires its cap; speed rejects nonpositive bias
         assert!(RunConfig::load_kv(&format!("{base}sampler = staleness\n")).is_err());
         assert!(RunConfig::load_kv(&format!("{base}sampler = speed:pow=0\n")).is_err());
+    }
+
+    #[test]
+    fn faults_key_parses_and_defaults_off() {
+        use crate::net::FaultKind;
+        // legacy configs written before the key existed parse as off
+        let legacy = "model = mlp\nrounds = 3\n";
+        assert!(RunConfig::load_kv(legacy).unwrap().net.faults.is_off());
+        let base = RunConfig::benchmark("mlp").unwrap().save_kv();
+        assert!(base.contains("faults = off\n"), "save_kv must emit the faults key");
+        let cfg = RunConfig::load_kv(&format!("{base}faults = drop:p=0.25\n")).unwrap();
+        assert_eq!(cfg.net.faults.kind, FaultKind::Drop { p: 0.25 });
+        let cfg = RunConfig::load_kv(&format!(
+            "{base}faults = outage:p=0.1,len=15,retries=4,quorum=2\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.net.faults.kind, FaultKind::Outage { p: 0.1, len_s: 15.0 });
+        assert_eq!(cfg.net.faults.policy.max_retries, 4);
+        assert_eq!(cfg.net.faults.policy.quorum, 2);
+        assert!(RunConfig::load_kv(&format!("{base}faults = gremlins\n")).is_err());
+        assert!(RunConfig::load_kv(&format!("{base}faults = drop:p=1.5\n")).is_err());
     }
 
     #[test]

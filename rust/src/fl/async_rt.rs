@@ -38,6 +38,7 @@
 
 use crate::net::{AsyncQueue, Staleness};
 use crate::obs;
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 
 /// One dispatched upload: everything the server needs when the upload
@@ -216,16 +217,27 @@ impl AsyncRuntime {
     /// `buffer` where the new absorbs start (callers read
     /// `buffer[start..]` for per-absorb metrics); `buffer.len()` if
     /// nothing was in flight.
-    pub fn absorb_instant(&mut self) -> usize {
+    ///
+    /// Errors (instead of panicking) if a queued completion event has
+    /// no matching in-flight payload — a corrupted or hand-edited
+    /// checkpoint is the only way to reach that state, and the caller
+    /// can surface which one was loaded.
+    pub fn absorb_instant(&mut self) -> Result<usize> {
         let mut sp = obs::span("sched.pop");
         let t0 = self.now;
         let start = self.buffer.len();
         for (t, seq) in self.queue.pop_instant() {
             self.now = t;
-            let payload = self
-                .pending
-                .remove(&seq)
-                .expect("event queue and pending map out of sync");
+            let payload = self.pending.remove(&seq).with_context(|| {
+                format!(
+                    "event queue and pending map out of sync: completion event \
+                     (t={t}, seq={seq}) has no in-flight payload ({} pending, \
+                     version {}); the async runtime state is corrupt — likely a \
+                     damaged checkpoint",
+                    self.pending.len(),
+                    self.version
+                )
+            })?;
             let version_gap = self.version - payload.version;
             let weight = self.staleness.weight(version_gap);
             obs::observe("async.version_gap", version_gap as f64);
@@ -233,7 +245,7 @@ impl AsyncRuntime {
         }
         sp.set_sim(self.now - t0);
         obs::gauge("sched.queue_depth", self.buffer.len() as f64);
-        start
+        Ok(start)
     }
 
     /// Whether the buffer holds enough absorbs to close a version.
@@ -351,14 +363,14 @@ mod tests {
         assert_eq!(rt.dispatched(), 2);
 
         // earliest instant: client 1 at t=0.5
-        let start = rt.absorb_instant();
+        let start = rt.absorb_instant().unwrap();
         assert_eq!(start, 0);
         assert_eq!(rt.buffer.len(), 1);
         assert_eq!(rt.buffer[0].payload.client, 1);
         assert_eq!(rt.now, 0.5);
         assert!(!rt.ready());
 
-        let start = rt.absorb_instant();
+        let start = rt.absorb_instant().unwrap();
         assert_eq!(rt.buffer[start].payload.client, 0);
         assert_eq!(rt.now, 1.0);
         assert!(rt.ready());
@@ -379,16 +391,16 @@ mod tests {
         // client 0 is slow (t=10), client 1 fast (t=1)
         rt.dispatch(payload(0, 0, 100), 10.0);
         rt.dispatch(payload(1, 0, 100), 1.0);
-        rt.absorb_instant(); // client 1 at t=1
+        rt.absorb_instant().unwrap(); // client 1 at t=1
         assert_eq!(rt.buffer[0].version_gap, 0);
         let b = rt.take_aggregation(); // version -> 1
         assert_eq!(b.uploads[0].weight, 1.0);
         // refill: client 2 trained against version 1, arrives before 0
         rt.dispatch(payload(2, rt.version, 100), 2.0);
-        rt.absorb_instant(); // client 2 at t=3
+        rt.absorb_instant().unwrap(); // client 2 at t=3
         assert_eq!(rt.buffer[0].version_gap, 0);
         rt.take_aggregation(); // version -> 2
-        rt.absorb_instant(); // slow client 0 at t=10: two versions elapsed
+        rt.absorb_instant().unwrap(); // slow client 0 at t=10: two versions elapsed
         let stale = &rt.buffer[0];
         assert_eq!(stale.payload.client, 0);
         assert_eq!(stale.version_gap, 2);
@@ -404,7 +416,7 @@ mod tests {
         for c in 0..4 {
             rt.dispatch(payload(c, 0, 100), 2.5);
         }
-        let start = rt.absorb_instant();
+        let start = rt.absorb_instant().unwrap();
         assert_eq!(start, 0);
         assert_eq!(rt.buffer.len(), 4, "one instant absorbs the whole cohort");
         let order: Vec<usize> = rt.buffer.iter().map(|u| u.payload.client).collect();
@@ -419,10 +431,10 @@ mod tests {
     fn round_secs_measures_inter_aggregation_time() {
         let mut rt = AsyncRuntime::new(2, 1, 1, Staleness::Const);
         rt.dispatch(payload(0, 0, 1), 1.5);
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         assert_eq!(rt.take_aggregation().round_secs, 1.5);
         rt.dispatch(payload(1, 1, 1), 2.0);
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         let b = rt.take_aggregation();
         assert_eq!(b.round_secs, 2.0, "second round measures from the last aggregation");
         assert_eq!(rt.now, 3.5);
@@ -433,7 +445,7 @@ mod tests {
         let mut rt = AsyncRuntime::new(4, 2, 2, Staleness::Poly { a: 0.5 });
         rt.dispatch(payload(0, 0, 100), 4.0);
         rt.dispatch(payload(1, 0, 50), 1.0);
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         rt.sample_gen = 3;
         rt.sample_idx = 1;
 
@@ -446,8 +458,8 @@ mod tests {
         assert_eq!(back.sample_idx, 1);
 
         // both copies must replay the remaining schedule identically
-        back.absorb_instant();
-        rt.absorb_instant();
+        back.absorb_instant().unwrap();
+        rt.absorb_instant().unwrap();
         assert_eq!(back.now, rt.now);
         assert_eq!(back.buffer.len(), rt.buffer.len());
         let a = back.take_aggregation();
@@ -471,7 +483,7 @@ mod tests {
         rt.version = 5;
         rt.dispatch(payload(0, 5, 1), 1.0); // gap 0 at absorb
         rt.dispatch(payload(1, 1, 1), 1.0); // gap 4 at absorb
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         assert_eq!(rt.take_aggregation().mean_gap, 2.0);
 
         // cap=2 holds the gap-4 upload out of the mean
@@ -480,7 +492,7 @@ mod tests {
         rt.version = 5;
         rt.dispatch(payload(0, 5, 1), 1.0);
         rt.dispatch(payload(1, 1, 1), 1.0);
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         assert_eq!(rt.take_aggregation().mean_gap, 0.0);
 
         // all uploads over the cap: fall back to the mean over all
@@ -488,14 +500,14 @@ mod tests {
         rt.version = 5;
         rt.dispatch(payload(0, 1, 1), 1.0);
         rt.dispatch(payload(1, 3, 1), 1.0);
-        rt.absorb_instant();
+        rt.absorb_instant().unwrap();
         assert_eq!(rt.take_aggregation().mean_gap, 3.0);
     }
 
     #[test]
     fn empty_aggregation_is_safe() {
         let mut rt = AsyncRuntime::new(2, 1, 1, Staleness::Const);
-        assert_eq!(rt.absorb_instant(), 0, "no in-flight uploads: nothing absorbed");
+        assert_eq!(rt.absorb_instant().unwrap(), 0, "no in-flight uploads: nothing absorbed");
         let b = rt.take_aggregation();
         assert!(b.uploads.is_empty());
         assert_eq!(b.mean_gap, 0.0);

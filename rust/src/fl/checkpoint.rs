@@ -35,6 +35,15 @@
 //! checkpoints still load with a cold table: uniform runs are
 //! unaffected, a resumed speed run re-warms from scratch.
 //!
+//! Format v5 appends the fault-injection state: the per-client retry
+//! telemetry columns of `ClientStats` and, when `net.faults` is
+//! active, the `FaultPlan` cursor (open outage windows, cumulative
+//! injection/retry/failure counters, undrained orphan bytes). v1–v4
+//! checkpoints still load (retry columns zero, fresh plan). Loading is
+//! atomic: the whole file is parsed and validated into locals before
+//! any server state changes, so a truncated file fails with a
+//! "truncated at field `X`" error and never leaves partial state.
+//!
 //! Not captured (documented limits): per-client compressor state
 //! (error-feedback residuals, LBGM anchors) and MOON's previous local
 //! models — resuming a run that uses those restarts their state, which
@@ -42,12 +51,13 @@
 //! FedAvg/FedLUAR.
 
 use super::{AbsorbedUpload, AsyncRuntime, AsyncState, RefState, Server, UploadPayload};
+use crate::net::{ClientStats, FaultPlan};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FLCK";
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 struct Writer {
     buf: Vec<u8>,
@@ -120,12 +130,28 @@ impl Writer {
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// Name of the field currently being decoded: truncation errors
+    /// report it instead of a bare byte offset.
+    field: &'static str,
 }
 
 impl<'a> Reader<'a> {
+    /// Label the next read(s); chainable: `r.at("luar.scores").f64s()`.
+    fn at(&mut self, name: &'static str) -> &mut Self {
+        self.field = name;
+        self
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
-            bail!("checkpoint truncated at byte {}", self.pos);
+            bail!(
+                "checkpoint truncated at field `{}` (byte {} of {}, {} more needed); \
+                 no state was applied",
+                self.field,
+                self.pos,
+                self.buf.len(),
+                self.pos + n - self.buf.len()
+            );
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
@@ -203,6 +229,9 @@ impl Server {
         }
         if version < 2 && self.async_rt.is_some() {
             bail!("checkpoint v1 cannot carry async runtime state");
+        }
+        if version < 5 && self.faults.is_some() {
+            bail!("checkpoint v{version} cannot carry fault-injection state (needs v5+)");
         }
         let mut w = Writer::new();
         w.buf.extend_from_slice(MAGIC);
@@ -293,6 +322,28 @@ impl Server {
                 }
             }
         }
+        if version >= 5 {
+            // --- v5: retry telemetry + fault-plan cursor --------------
+            w.u64s(&self.sampler_stats.retries);
+            w.f64s(&self.sampler_stats.retry_secs_sum);
+            w.u64s(&self.sampler_stats.retry_bytes);
+            w.u64s(&self.sampler_stats.failures);
+            match &self.faults {
+                None => w.buf.push(0),
+                Some(plan) => {
+                    w.buf.push(1);
+                    w.f64s(&plan.down_until);
+                    w.u64(plan.drops);
+                    w.u64(plan.outages);
+                    w.u64(plan.corrupts);
+                    w.u64(plan.retries);
+                    w.u64(plan.perm_failures);
+                    w.u64(plan.quorum_degraded);
+                    w.u64(plan.orphan_up_bytes);
+                    w.u64(plan.orphan_down_bytes);
+                }
+            }
+        }
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -304,58 +355,67 @@ impl Server {
 
     /// Restore state saved by `save_checkpoint`. The server must have
     /// been constructed with the *same config* (model, method, seeds).
+    ///
+    /// Loading is atomic: the whole file is parsed and validated into
+    /// locals first, and server state is only touched once every read
+    /// succeeded — a file truncated at field X fails with that field's
+    /// name and leaves the server exactly as it was.
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
         let mut bytes = Vec::new();
         std::fs::File::open(&path)
             .with_context(|| format!("opening {:?}", path.as_ref()))?
             .read_to_end(&mut bytes)?;
-        let mut r = Reader { buf: &bytes, pos: 0 };
+        let mut r = Reader { buf: &bytes, pos: 0, field: "magic" };
+
+        // ---- parse phase: locals only, no server state touched ------
         if r.take(4)? != MAGIC {
             bail!("not a fedluar checkpoint");
         }
-        let version = r.u32()?;
+        let version = r.at("version").u32()?;
         if version == 0 || version > VERSION {
             bail!("checkpoint version {version} unsupported (this build reads 1..={VERSION})");
         }
-        let model = r.str()?;
+        let model = r.at("model").str()?;
         if model != self.cfg.model {
             bail!("checkpoint is for model {model}, server runs {}", self.cfg.model);
         }
-        let method = r.str()?;
+        let method = r.at("method").str()?;
         if method != self.cfg.method.spec_string() {
             bail!("checkpoint method {method} != {}", self.cfg.method.spec_string());
         }
-        self.round = r.u64()? as usize;
-        let x = r.f32s()?;
+        let round = r.at("round").u64()? as usize;
+        let x = r.at("opt.params").f32s()?;
         if x.len() != self.meta().dim {
             bail!("checkpoint dim {} != model dim {}", x.len(), self.meta().dim);
         }
-        let m = r.f32s()?;
-        let v = r.f32s()?;
-        let last_delta = r.f32s()?;
-        let step = r.u64()?;
-        self.opt.restore(x, m, v, last_delta, step);
-        self.luar.scores = r.f64s()?;
-        self.luar.observed = r.bools()?;
-        self.luar.prev_update = r.f32s()?;
-        self.luar.recycle_set = r.usizes()?;
-        self.luar.staleness = r.u32s()?;
-        self.comm.rounds = r.u64()?;
-        self.comm.up_bytes = r.u64()?;
-        self.comm.down_bytes = r.u64()?;
-        self.comm.fedavg_up_bytes = r.u64()?;
-        self.comm.layer_upload_rounds = r.u64s()?;
-        let st = r.u64s()?;
-        if st.len() != 4 {
+        let m = r.at("opt.m").f32s()?;
+        let v = r.at("opt.v").f32s()?;
+        let last_delta = r.at("opt.last_delta").f32s()?;
+        let step = r.at("opt.step").u64()?;
+        let luar_scores = r.at("luar.scores").f64s()?;
+        let luar_observed = r.at("luar.observed").bools()?;
+        let luar_prev_update = r.at("luar.prev_update").f32s()?;
+        let luar_recycle_set = r.at("luar.recycle_set").usizes()?;
+        let luar_staleness = r.at("luar.staleness").u32s()?;
+        let comm_rounds = r.at("comm.rounds").u64()?;
+        let comm_up_bytes = r.at("comm.up_bytes").u64()?;
+        let comm_down_bytes = r.at("comm.down_bytes").u64()?;
+        let comm_fedavg = r.at("comm.fedavg_up_bytes").u64()?;
+        let comm_layer_rounds = r.at("comm.layer_upload_rounds").u64s()?;
+        let rng_st = r.at("rng").u64s()?;
+        if rng_st.len() != 4 {
             bail!("bad rng state");
         }
-        self.set_rng_state([st[0], st[1], st[2], st[3]]);
+
+        let mut v2_scalars: Option<(f64, f64, u64, u64)> = None;
+        let mut async_restored: Option<AsyncRuntime> = None;
         if version >= 2 {
-            self.sim_seconds = r.f64()?;
-            self.train_loss_ema = r.f64()?;
-            self.failed_clients = r.u64()?;
-            self.dropped_stragglers = r.u64()?;
-            let has_async = r.take(1)?[0];
+            let sim_seconds = r.at("sim_seconds").f64()?;
+            let ema = r.at("train_loss_ema").f64()?;
+            let failed = r.at("failed_clients").u64()?;
+            let dropped = r.at("dropped_stragglers").u64()?;
+            v2_scalars = Some((sim_seconds, ema, failed, dropped));
+            let has_async = r.at("async.flag").take(1)?[0];
             if has_async == 1 {
                 let state = read_async_state(&mut r)?;
                 let (c, goal, staleness) = self.async_mode_params().ok_or_else(|| {
@@ -372,37 +432,29 @@ impl Server {
                         self.cfg.num_clients
                     );
                 }
-                self.async_rt = Some(
+                async_restored = Some(
                     AsyncRuntime::from_state(c, goal, staleness, state)
                         .with_stale_cap(self.cfg.net.sampler.stale_cap()),
                 );
-            } else {
-                self.async_rt = None;
             }
         }
-        // Pre-v3 files carry no references or delta counters: a
-        // delta-framed server resumes with empty ones (trajectory
-        // unchanged, post-resume first contacts count as fallbacks).
-        if let Some(st) = &mut self.delta_state {
-            *st = super::DeltaFrameState::new(self.cfg.num_clients);
-        }
-        self.comm.delta_bytes_saved = 0;
-        self.comm.delta_fallbacks = 0;
+        let mut delta_counters = (0u64, 0u64);
+        let mut delta_restore: Option<(Vec<RefState>, Vec<u64>, Vec<Option<RefState>>)> = None;
         if version >= 3 {
-            self.comm.delta_bytes_saved = r.u64()?;
-            self.comm.delta_fallbacks = r.u64()?;
-            let has_delta = r.take(1)?[0];
+            delta_counters.0 = r.at("comm.delta_bytes_saved").u64()?;
+            delta_counters.1 = r.at("comm.delta_fallbacks").u64()?;
+            let has_delta = r.at("delta.flag").take(1)?[0];
             if has_delta == 1 {
-                let n_bcast = r.u64()? as usize;
+                let n_bcast = r.at("delta.bcast_refs").u64()? as usize;
                 let mut bcast_refs = Vec::with_capacity(n_bcast);
                 for _ in 0..n_bcast {
                     bcast_refs.push(read_ref_state(&mut r)?);
                 }
-                let down_versions = r.u64s()?;
-                let n_up = r.u64()? as usize;
+                let down_versions = r.at("delta.down_versions").u64s()?;
+                let n_up = r.at("delta.up_refs").u64()? as usize;
                 let mut up_refs = Vec::with_capacity(n_up);
                 for _ in 0..n_up {
-                    match r.take(1)?[0] {
+                    match r.at("delta.up_ref_flag").take(1)?[0] {
                         0 => up_refs.push(None),
                         _ => up_refs.push(Some(read_ref_state(&mut r)?)),
                     }
@@ -414,31 +466,17 @@ impl Server {
                         self.cfg.num_clients
                     );
                 }
-                // References are ledger-only: a server running without
-                // `net.delta_frames` ignores them (the restored comm
-                // counters keep the ledger history either way).
-                if let Some(st) = &mut self.delta_state {
-                    st.restore(bcast_refs, down_versions, up_refs);
-                }
+                delta_restore = Some((bcast_refs, down_versions, up_refs));
             }
         }
-        // Dispatch-side memos are derived state: drop them so the first
-        // post-restore dispatch rebuilds against the restored model.
-        // (v4 below restores the cohort memo over the cleared value —
-        // under `speed` it depends on the telemetry at first sampling
-        // and must not be resampled.)
-        self.async_bcast = None;
-        self.async_cohort = None;
-        // Pre-v4 files carry no sampler telemetry: resume with a cold
-        // table (uniform runs are unaffected; a resumed speed run
-        // re-warms from scratch).
-        self.sampler_stats = crate::net::ClientStats::new(self.cfg.num_clients);
+        let mut stats_restored = ClientStats::new(self.cfg.num_clients);
+        let mut cohort_restored: Option<(u64, Vec<usize>)> = None;
         if version >= 4 {
-            let dispatches = r.u64s()?;
-            let absorbed = r.u64s()?;
-            let held_stale = r.u64s()?;
-            let upload_secs_sum = r.f64s()?;
-            let up_bytes = r.u64s()?;
+            let dispatches = r.at("sampler.dispatches").u64s()?;
+            let absorbed = r.at("sampler.absorbed").u64s()?;
+            let held_stale = r.at("sampler.held_stale").u64s()?;
+            let upload_secs_sum = r.at("sampler.upload_secs_sum").f64s()?;
+            let up_bytes = r.at("sampler.up_bytes").u64s()?;
             if dispatches.len() != self.cfg.num_clients
                 || absorbed.len() != self.cfg.num_clients
                 || held_stale.len() != self.cfg.num_clients
@@ -451,17 +489,130 @@ impl Server {
                     self.cfg.num_clients
                 );
             }
-            self.sampler_stats = crate::net::ClientStats {
-                dispatches,
-                absorbed,
-                held_stale,
-                upload_secs_sum,
-                up_bytes,
-            };
-            if r.take(1)?[0] == 1 {
-                let gen = r.u64()?;
-                let cohort = r.usizes()?;
-                self.async_cohort = Some((gen, cohort));
+            stats_restored.dispatches = dispatches;
+            stats_restored.absorbed = absorbed;
+            stats_restored.held_stale = held_stale;
+            stats_restored.upload_secs_sum = upload_secs_sum;
+            stats_restored.up_bytes = up_bytes;
+            if r.at("sampler.cohort_flag").take(1)?[0] == 1 {
+                let gen = r.at("sampler.cohort_gen").u64()?;
+                let cohort = r.at("sampler.cohort").usizes()?;
+                cohort_restored = Some((gen, cohort));
+            }
+        }
+        let mut fault_restore: Option<(Vec<f64>, [u64; 8])> = None;
+        if version >= 5 {
+            let retries = r.at("sampler.retries").u64s()?;
+            let retry_secs_sum = r.at("sampler.retry_secs_sum").f64s()?;
+            let retry_bytes = r.at("sampler.retry_bytes").u64s()?;
+            let failures = r.at("sampler.failures").u64s()?;
+            if retries.len() != self.cfg.num_clients
+                || retry_secs_sum.len() != self.cfg.num_clients
+                || retry_bytes.len() != self.cfg.num_clients
+                || failures.len() != self.cfg.num_clients
+            {
+                bail!(
+                    "checkpoint tracks retry telemetry for {} clients, server has {}",
+                    retries.len(),
+                    self.cfg.num_clients
+                );
+            }
+            stats_restored.retries = retries;
+            stats_restored.retry_secs_sum = retry_secs_sum;
+            stats_restored.retry_bytes = retry_bytes;
+            stats_restored.failures = failures;
+            let has_faults = r.at("faults.flag").take(1)?[0];
+            if has_faults == 1 {
+                let down_until = r.at("faults.down_until").f64s()?;
+                if down_until.len() != self.cfg.num_clients {
+                    bail!(
+                        "checkpoint tracks outage windows for {} clients, server has {}",
+                        down_until.len(),
+                        self.cfg.num_clients
+                    );
+                }
+                let mut counters = [0u64; 8];
+                for (i, name) in [
+                    "faults.drops",
+                    "faults.outages",
+                    "faults.corrupts",
+                    "faults.retries",
+                    "faults.perm_failures",
+                    "faults.quorum_degraded",
+                    "faults.orphan_up_bytes",
+                    "faults.orphan_down_bytes",
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    counters[i] = r.at(name).u64()?;
+                }
+                fault_restore = Some((down_until, counters));
+            }
+        }
+
+        // ---- apply phase: every read succeeded, nothing below fails --
+        self.round = round;
+        self.opt.restore(x, m, v, last_delta, step);
+        self.luar.scores = luar_scores;
+        self.luar.observed = luar_observed;
+        self.luar.prev_update = luar_prev_update;
+        self.luar.recycle_set = luar_recycle_set;
+        self.luar.staleness = luar_staleness;
+        self.comm.rounds = comm_rounds;
+        self.comm.up_bytes = comm_up_bytes;
+        self.comm.down_bytes = comm_down_bytes;
+        self.comm.fedavg_up_bytes = comm_fedavg;
+        self.comm.layer_upload_rounds = comm_layer_rounds;
+        self.set_rng_state([rng_st[0], rng_st[1], rng_st[2], rng_st[3]]);
+        if let Some((sim_seconds, ema, failed, dropped)) = v2_scalars {
+            self.sim_seconds = sim_seconds;
+            self.train_loss_ema = ema;
+            self.failed_clients = failed;
+            self.dropped_stragglers = dropped;
+            self.async_rt = async_restored;
+        }
+        // Pre-v3 files carry no references or delta counters: a
+        // delta-framed server resumes with empty ones (trajectory
+        // unchanged, post-resume first contacts count as fallbacks).
+        if let Some(st) = &mut self.delta_state {
+            *st = super::DeltaFrameState::new(self.cfg.num_clients);
+        }
+        (self.comm.delta_bytes_saved, self.comm.delta_fallbacks) = delta_counters;
+        if let Some((bcast_refs, down_versions, up_refs)) = delta_restore {
+            // References are ledger-only: a server running without
+            // `net.delta_frames` ignores them (the restored comm
+            // counters keep the ledger history either way).
+            if let Some(st) = &mut self.delta_state {
+                st.restore(bcast_refs, down_versions, up_refs);
+            }
+        }
+        // Dispatch-side memos are derived state: drop them so the first
+        // post-restore dispatch rebuilds against the restored model.
+        // (The cohort memo is the exception — under `speed` it depends
+        // on the telemetry at first sampling and must be restored, not
+        // resampled.) Pre-v4 files resume with a cold telemetry table.
+        self.async_bcast = None;
+        self.async_cohort = cohort_restored;
+        self.sampler_stats = stats_restored;
+        // Fault-plan cursor: rebuilt fresh from the config (same seed,
+        // same plan), then the persisted windows/counters land on top.
+        // Pre-v5 files (or a checkpoint saved with faults off) resume
+        // with a pristine plan; fault state in the file is ignored by a
+        // server whose config runs without faults.
+        self.consecutive_failed_dispatches = 0;
+        if let Some(plan) = &mut self.faults {
+            *plan = FaultPlan::new(self.cfg.net.faults, self.cfg.num_clients, self.cfg.seed);
+            if let Some((down_until, c)) = fault_restore {
+                plan.down_until = down_until;
+                plan.drops = c[0];
+                plan.outages = c[1];
+                plan.corrupts = c[2];
+                plan.retries = c[3];
+                plan.perm_failures = c[4];
+                plan.quorum_degraded = c[5];
+                plan.orphan_up_bytes = c[6];
+                plan.orphan_down_bytes = c[7];
             }
         }
         Ok(())
@@ -475,6 +626,7 @@ fn write_ref_state(w: &mut Writer, r: &RefState) {
 }
 
 fn read_ref_state(r: &mut Reader) -> Result<RefState> {
+    r.at("delta.ref");
     Ok(RefState { version: r.u64()?, data: r.f32s()?, layer_hash: r.u64s()? })
 }
 
@@ -489,6 +641,7 @@ fn write_payload(w: &mut Writer, p: &UploadPayload) {
 }
 
 fn read_payload(r: &mut Reader) -> Result<UploadPayload> {
+    r.at("async.payload");
     Ok(UploadPayload {
         client: r.u64()? as usize,
         version: r.u64()?,
@@ -529,6 +682,7 @@ fn write_async_state(w: &mut Writer, st: &AsyncState) {
 }
 
 fn read_async_state(r: &mut Reader) -> Result<AsyncState> {
+    r.at("async.state");
     let mut st = AsyncState {
         version: r.u64()?,
         now: r.f64()?,
@@ -563,4 +717,41 @@ fn read_async_state(r: &mut Reader) -> Result<AsyncState> {
         st.buffer.push(AbsorbedUpload { payload, t, version_gap, weight });
     }
     Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncation_errors_name_the_field() {
+        let mut w = Writer::new();
+        w.str("hello");
+        w.u64s(&[1, 2, 3]);
+        w.f64(2.5);
+        let full = w.buf.clone();
+        // the complete buffer parses
+        let mut r = Reader { buf: &full, pos: 0, field: "start" };
+        assert_eq!(r.at("greeting").str().unwrap(), "hello");
+        assert_eq!(r.at("numbers").u64s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.at("clock").f64().unwrap(), 2.5);
+        // every proper prefix fails, naming the field being decoded:
+        // greeting = 4-byte len + 5 bytes, numbers = 8-byte count +
+        // 24 bytes, clock = 8 bytes
+        for cut in 0..full.len() {
+            let mut r = Reader { buf: &full[..cut], pos: 0, field: "start" };
+            let err = (|| -> Result<()> {
+                r.at("greeting").str()?;
+                r.at("numbers").u64s()?;
+                r.at("clock").f64()?;
+                Ok(())
+            })()
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("truncated at field `"), "cut={cut}: {err}");
+            let expect =
+                if cut < 9 { "`greeting`" } else if cut < 41 { "`numbers`" } else { "`clock`" };
+            assert!(err.contains(expect), "cut={cut}: {err}");
+        }
+    }
 }

@@ -57,13 +57,16 @@ use crate::data::FedDataset;
 use crate::luar::{DeltaController, LuarState};
 use crate::metrics::{AbsorbRecord, History, RoundRecord};
 use crate::model::{artifacts_dir, ModelMeta};
-use crate::net::{links, wire, ClientStats, NetSim, RoundMode, SamplerCfg, Staleness};
+use crate::net::{
+    links, sched, wire, ChainOutcome, ClientStats, FaultPlan, NetSim, RoundMode, SamplerCfg,
+    Staleness,
+};
 use crate::obs;
 use crate::optim::ServerOpt;
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::tensor;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Everything one FL run needs; drive with `run()` or `run_round()`.
 pub struct Server {
@@ -120,7 +123,27 @@ pub struct Server {
     /// cohort draw, exported as `*_clients.csv`, persisted in
     /// checkpoint format v4.
     pub sampler_stats: ClientStats,
+    /// Deterministic fault injection (`Some` iff `net.faults` is not
+    /// `off`): per-(client, version, attempt) seeded fault chains,
+    /// open outage windows, and cumulative injection counters.
+    /// Persisted in checkpoint format v5; `None` keeps every fault
+    /// path unentered so `faults = off` runs bit-identically to builds
+    /// without the subsystem.
+    pub faults: Option<FaultPlan>,
+    /// Async liveness guard: consecutive dispatches whose whole fault
+    /// chain failed. Reset on every delivery; bounded so a fault plan
+    /// that kills *every* upload surfaces a recoverable error instead
+    /// of spinning the dispatch loop forever. Transient, never
+    /// serialized.
+    consecutive_failed_dispatches: u64,
 }
+
+/// Bail out of the async dispatch loop after this many permanently
+/// failed chains in a row (no delivery in between): with any
+/// survivable fault probability the run would have progressed long
+/// before this, so hitting the bound means the plan admits no
+/// progress at all.
+const MAX_CONSECUTIVE_FAILED_DISPATCHES: u64 = 10_000;
 
 /// Broadcast versions kept as downlink delta references; older clients
 /// fall back to self-contained frames.
@@ -398,6 +421,9 @@ impl Server {
             async_cohort: None,
             delta_state: cfg.net.delta_frames.then(|| DeltaFrameState::new(cfg.num_clients)),
             sampler_stats: ClientStats::new(cfg.num_clients),
+            faults: (!cfg.net.faults.is_off())
+                .then(|| FaultPlan::new(cfg.net.faults, cfg.num_clients, cfg.seed)),
+            consecutive_failed_dispatches: 0,
             cfg,
         })
     }
@@ -431,13 +457,20 @@ impl Server {
     /// One client's dispatch: local training through the AOT graph,
     /// LUAR layer skipping / baseline compression, wire encode, and
     /// the server-side decode. Returns (decoded update, ledger frame
-    /// bytes, self-contained frame bytes, training loss) — the two
-    /// lengths differ only under `net.delta_frames`, where the ledger
-    /// counts the residual frame but the link schedule is still timed
-    /// against the self-contained one. `t` indexes the local-batch
-    /// schedule (the round in barrier modes, the sample generation in
-    /// async mode); `version` keys the residual references (== t in
-    /// barrier modes, the runtime's model version in async mode).
+    /// bytes, self-contained frame bytes, training loss, sealed frame)
+    /// — the two lengths differ only under `net.delta_frames`, where
+    /// the ledger counts the residual frame but the link schedule is
+    /// still timed against the self-contained one. `t` indexes the
+    /// local-batch schedule (the round in barrier modes, the sample
+    /// generation in async mode); `version` keys the residual
+    /// references (== t in barrier modes, the runtime's model version
+    /// in async mode).
+    ///
+    /// The sealed frame is `Some` only under fault injection: the
+    /// self-contained frame plus the `wire` integrity trailer (the
+    /// bytes a corruption fault flips), with both returned lengths
+    /// grown by `wire::TRAILER_LEN` — without faults the frame bytes
+    /// and both lengths are exactly the legacy values.
     #[allow(clippy::too_many_arguments)]
     fn client_upload(
         &mut self,
@@ -450,7 +483,7 @@ impl Server {
         anchor_g: Option<&[f32]>,
         upload_layers: &[usize],
         meta: &ModelMeta,
-    ) -> Result<(Vec<f32>, u64, u64, f32)> {
+    ) -> Result<(Vec<f32>, u64, u64, f32, Option<Vec<u8>>)> {
         let _sp = obs::span("fl.client_upload");
         let mu_g = self.cfg.client_opt.mu_global;
         let mu_p = self.cfg.client_opt.mu_prev;
@@ -513,7 +546,7 @@ impl Server {
         // layer-id lists, and index overheads included), and the
         // aggregate consumes the decoded bytes.
         let frame = wire::encode_update(&delta, meta, upload_layers, &hint)?;
-        let self_len = frame.len() as u64;
+        let mut self_len = frame.len() as u64;
         let mut ledger_len = self_len;
         let mut delta_srv = match wire::decode_update(frame.as_bytes(), meta)? {
             wire::Decoded::Vector(v) => v,
@@ -561,7 +594,20 @@ impl Server {
                 st.record_upload(client, version, &delta_srv, meta);
             }
         }
-        Ok((delta_srv, ledger_len, self_len, out.loss))
+        // Fault injection: every upload carries the integrity trailer
+        // (length + FNV over the body) so a corruption fault is always
+        // caught at decode; both the timed and the ledgered length pay
+        // its 12 bytes. `faults = off` never reaches this branch.
+        let sealed = if self.faults.is_some() {
+            let mut bytes = frame.as_bytes().to_vec();
+            wire::seal_trailer(&mut bytes);
+            self_len += wire::TRAILER_LEN as u64;
+            ledger_len += wire::TRAILER_LEN as u64;
+            Some(bytes)
+        } else {
+            None
+        };
+        Ok((delta_srv, ledger_len, self_len, out.loss, sealed))
     }
 
     // ------------------------------------------------------------------
@@ -850,10 +896,10 @@ impl Server {
         let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
         let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
         let mut timing_lens: Vec<u64> = Vec::with_capacity(actives.len());
-        let mut loss_sum = 0.0f64;
-        let mut up_bytes_total = 0u64;
+        let mut losses: Vec<f64> = Vec::with_capacity(actives.len());
+        let mut sealed_frames: Vec<Option<Vec<u8>>> = Vec::with_capacity(actives.len());
         for (slot, &client) in actives.iter().enumerate() {
-            let (delta_srv, ledger_len, self_len, loss) = self.client_upload(
+            let (delta_srv, ledger_len, self_len, loss, sealed) = self.client_upload(
                 client,
                 slot,
                 t,
@@ -864,25 +910,95 @@ impl Server {
                 &upload_layers,
                 &meta,
             )?;
-            loss_sum += loss as f64;
-            up_bytes_total += ledger_len;
+            losses.push(loss as f64);
             frame_lens.push(ledger_len);
             timing_lens.push(self_len);
             deltas.push(delta_srv);
+            sealed_frames.push(sealed);
             // Per-client telemetry: the upload latency the link schedule
             // will charge (self-contained length — framing-invariant).
             self.record_dispatch_telemetry(client, self_len);
         }
 
         // --- network simulation: who makes this round's aggregate? ----
-        let outcome = self.net.round(&actives, bcast_self_len, &timing_lens);
+        // Without faults this is exactly the legacy schedule. With a
+        // fault plan, each slot's completion time is its whole retry
+        // chain collapsed at dispatch time (every per-attempt draw is a
+        // pure function of (seed, client, version, attempt), so the
+        // chain is known the moment the upload starts): delivered
+        // chains arrive at their chain time, permanently failed chains
+        // still bound the round's clock (the server waited out their
+        // timeouts) but are masked out of the aggregate.
+        let mut loss_sum: f64 = losses.iter().sum();
+        let mut loss_count = actives.len();
+        let mut up_bytes_total: u64 = frame_lens.iter().sum();
+        let outcome = if self.faults.is_some() {
+            let mut plan = self.faults.take().expect("checked above");
+            let mut chains: Vec<ChainOutcome> = Vec::with_capacity(actives.len());
+            for (slot, &client) in actives.iter().enumerate() {
+                let secs = self.net.client_secs(client, bcast_self_len, timing_lens[slot]);
+                let frame = sealed_frames[slot].as_deref().expect("faults imply sealed frames");
+                chains.push(plan.attempt_chain(client, t as u64, self.sim_seconds, secs, frame));
+            }
+            self.faults = Some(plan);
+            let times: Vec<f64> = chains.iter().map(|c| c.secs).collect();
+            let raw = sched::simulate_round(&cfg.net.round_mode, &times);
+            let failed: Vec<bool> = chains.iter().map(|c| !c.survived).collect();
+            let outcome = sched::mask_failed_slots(raw, &failed);
+            // Re-derive the round's ledger and loss totals from the
+            // chains: the final delivery is priced at the ledger frame
+            // length, every extra transmitting attempt re-sends the
+            // sealed self-contained frame, a chain that never got a
+            // byte out (dispatched inside an outage window) pays
+            // nothing — and a lost upload's loss value never reaches
+            // the server.
+            loss_sum = 0.0;
+            loss_count = 0;
+            up_bytes_total = 0;
+            for (slot, ch) in chains.iter().enumerate() {
+                let client = actives[slot];
+                self.record_chain_telemetry(client, ch);
+                if ch.up_bytes > 0 {
+                    up_bytes_total += frame_lens[slot] + ch.up_bytes - timing_lens[slot];
+                }
+                if ch.survived {
+                    loss_sum += losses[slot];
+                    loss_count += 1;
+                }
+            }
+            let quorum = self.cfg.net.faults.policy.quorum;
+            if outcome.aggregated < quorum {
+                let plan = self.faults.as_mut().expect("restored above");
+                plan.note_quorum_degraded();
+                obs::counter("fault.quorum_degraded", 1);
+            }
+            if outcome.aggregated == 0 {
+                // Nothing survived to aggregate: the model stays put,
+                // but the round still happened — bytes crossed the
+                // wire, the clock ran, and the schedule advances.
+                self.last_frame_lens = frame_lens;
+                return self.finish_degraded_round(
+                    &upload_layers,
+                    actives.len(),
+                    up_bytes_total,
+                    down_total,
+                    outcome.round_secs,
+                );
+            }
+            let survivors = failed.iter().filter(|&&f| !f).count();
+            self.dropped_stragglers += (survivors - outcome.aggregated) as u64;
+            outcome
+        } else {
+            let outcome = self.net.round(&actives, bcast_self_len, &timing_lens);
+            self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
+            outcome
+        };
         for (slot, &client) in actives.iter().enumerate() {
             if outcome.included[slot] {
                 self.sampler_stats.record_absorbed(client);
             }
         }
         self.last_frame_lens = frame_lens;
-        self.dropped_stragglers += (actives.len() - outcome.aggregated) as u64;
 
         self.finish_aggregation(
             &deltas,
@@ -891,7 +1007,7 @@ impl Server {
             &upload_layers,
             actives.len(),
             loss_sum,
-            actives.len(),
+            loss_count,
             up_bytes_total,
             down_total,
             outcome.round_secs,
@@ -899,6 +1015,89 @@ impl Server {
             outcome.aggregated,
             0.0,
         )
+    }
+
+    /// Close a quorum-degraded round in which *no* upload survived its
+    /// fault chain: there is nothing to aggregate, so the model, the
+    /// server optimizer, and the LUAR selection state stay exactly as
+    /// they were (recycled layers age on the next delivered round via
+    /// the normal `LuarState` path) — but the round's bytes and clock
+    /// are real and the round counter advances so the schedule
+    /// terminates.
+    fn finish_degraded_round(
+        &mut self,
+        upload_layers: &[usize],
+        actives_len: usize,
+        up_bytes_total: u64,
+        down_total: u64,
+        round_secs: f64,
+    ) -> Result<()> {
+        let _sp = obs::span("agg.absorb");
+        let meta = self.engine.meta.clone();
+        let fedavg_frame = wire::dense_frame_len(&meta);
+        self.comm.record_wire_round(
+            actives_len as u64,
+            upload_layers,
+            up_bytes_total,
+            fedavg_frame,
+            down_total,
+        );
+        self.sim_seconds += round_secs;
+        obs::counter("agg.rounds_degraded", 1);
+        self.round += 1;
+        let last = self.round == self.cfg.rounds;
+        if last || (self.cfg.eval_every > 0 && self.round % self.cfg.eval_every == 0) {
+            let (test_loss, test_acc) = {
+                let _e = obs::span("engine.eval");
+                self.engine.eval_dataset(self.opt.params(), &self.ds)?
+            };
+            let train_loss =
+                if self.train_loss_ema.is_nan() { 0.0 } else { self.train_loss_ema };
+            self.history.push(RoundRecord {
+                round: self.round,
+                train_loss,
+                test_loss,
+                test_acc,
+                up_bytes: self.comm.up_bytes,
+                comm_ratio: self.comm.comm_ratio(),
+                kappa: 0.0,
+                sim_seconds: self.sim_seconds,
+                wire_bytes: up_bytes_total,
+                tail_s: 0.0,
+                arrivals: 0,
+                version_gap: 0.0,
+            });
+        }
+        Ok(())
+    }
+
+    /// Fold one resolved fault chain into the per-client telemetry
+    /// table and the obs counters. Retries are recorded separately
+    /// from first attempts so `sampler = speed` never double-penalizes
+    /// a client for its injected outages.
+    fn record_chain_telemetry(&mut self, client: usize, ch: &ChainOutcome) {
+        if ch.attempts > 1 {
+            self.sampler_stats.record_retries(
+                client,
+                (ch.attempts - 1) as u64,
+                ch.retry_secs,
+                ch.retry_up_bytes,
+            );
+            obs::counter("fault.retries", (ch.attempts - 1) as u64);
+        }
+        if !ch.survived {
+            self.sampler_stats.record_failure(client);
+            obs::counter("fault.perm_failures", 1);
+        }
+        if ch.drops > 0 {
+            obs::counter("fault.injected.drop", ch.drops as u64);
+        }
+        if ch.outages > 0 {
+            obs::counter("fault.injected.outage", ch.outages as u64);
+        }
+        if ch.corrupts > 0 {
+            obs::counter("fault.injected.corrupt", ch.corrupts as u64);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -911,9 +1110,12 @@ impl Server {
     /// version if the buffer filled, then refill the freed slots with
     /// freshly sampled clients trained on the newest model.
     fn run_async_round(&mut self) -> Result<()> {
-        let (c, goal, staleness) = self
-            .async_mode_params()
-            .expect("run_async_round requires the async round mode");
+        let (c, goal, staleness) = self.async_mode_params().with_context(|| {
+            format!(
+                "run_async_round requires the async round mode, got `{}`",
+                self.cfg.net.round_mode.name()
+            )
+        })?;
         if self.async_rt.is_none() {
             if self.cfg.client_failure_rate >= 1.0 {
                 anyhow::bail!("async mode cannot progress with client_failure_rate >= 1");
@@ -926,17 +1128,19 @@ impl Server {
         loop {
             // Refill to the concurrency cap: each freed slot dispatches
             // the next sampled client immediately over its own link.
-            while self.async_rt.as_ref().unwrap().wants_dispatch() {
+            while self.rt()?.wants_dispatch() {
                 self.dispatch_next_async()?;
             }
             // Absorb the next completion instant atomically.
-            let start = self.async_rt.as_mut().unwrap().absorb_instant();
+            let start = self.rt_mut()?.absorb_instant()?;
             {
-                let rt = self.async_rt.as_ref().unwrap();
+                let rt = self.rt()?;
                 let in_flight = rt.in_flight();
                 let version = rt.version;
-                for (i, u) in rt.buffer[start..].iter().enumerate() {
-                    self.history.absorbs.push(AbsorbRecord {
+                let records: Vec<AbsorbRecord> = rt.buffer[start..]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, u)| AbsorbRecord {
                         version,
                         client: u.payload.client,
                         t: u.t,
@@ -944,11 +1148,12 @@ impl Server {
                         weight: u.weight,
                         in_flight,
                         queue_depth: start + i + 1,
-                    });
-                }
+                    })
+                    .collect();
+                self.history.absorbs.extend(records);
             }
-            if self.async_rt.as_ref().unwrap().ready() {
-                let batch = self.async_rt.as_mut().unwrap().take_aggregation();
+            if self.rt()?.ready() {
+                let batch = self.rt_mut()?.take_aggregation();
                 return self.absorb_async_batch(batch);
             }
         }
@@ -958,7 +1163,7 @@ impl Server {
     /// run the shared absorb half over it (all uploads included, each
     /// with its staleness weight).
     fn absorb_async_batch(&mut self, batch: AggBatch) -> Result<()> {
-        let AggBatch { uploads, round_secs, down_bytes, mean_gap, tail_s } = batch;
+        let AggBatch { uploads, round_secs, mut down_bytes, mean_gap, tail_s } = batch;
         let n = uploads.len();
         // Bounded staleness (`sampler = staleness:cap=N`): uploads over
         // the cap are held out of the weighted combine (their bytes and
@@ -966,7 +1171,7 @@ impl Server {
         // included — the legacy behavior, bit-exactly. If the cap holds
         // *everything* out, include everything instead: an aggregation
         // is never empty (mirrors `take_aggregation`'s mean fallback).
-        let rt = self.async_rt.as_ref().expect("async batch implies runtime");
+        let rt = self.rt()?;
         let mut included: Vec<bool> =
             uploads.iter().map(|u| rt.within_cap(u.version_gap)).collect();
         if !included.iter().any(|&i| i) {
@@ -991,6 +1196,15 @@ impl Server {
             frame_lens.push(u.payload.frame_len);
             weights.push(u.weight);
             deltas.push(u.payload.delta);
+        }
+        // Orphan bytes: dispatches whose whole fault chain failed since
+        // the previous aggregation transmitted real bytes (and received
+        // the broadcast) but never landed — the ledger still pays them,
+        // in the version that closes next.
+        if let Some(plan) = &mut self.faults {
+            let (orphan_up, orphan_down) = plan.drain_orphans();
+            up_bytes_total += orphan_up;
+            down_bytes += orphan_down;
         }
         // Layer bookkeeping uses the upload set at aggregation time;
         // stale uploads encoded an older R and simply carry zeros in
@@ -1036,10 +1250,10 @@ impl Server {
     fn dispatch_next_async(&mut self) -> Result<()> {
         let _sp = obs::span("fl.dispatch");
         let meta = self.engine.meta.clone();
-        let (client, gen) = self.next_async_client();
+        let (client, gen) = self.next_async_client()?;
         let t = gen as usize;
         let lr = self.cfg.lr_at(t);
-        let version = self.async_rt.as_ref().unwrap().version;
+        let version = self.rt()?.version;
         let cache_ok = matches!(&self.async_bcast, Some(c) if c.version == version);
         if !cache_ok {
             let mu_g = self.cfg.client_opt.mu_global;
@@ -1071,8 +1285,8 @@ impl Server {
         // in between drops the memo, which merely rebuilds next call.
         let cache = self.async_bcast.take().expect("bcast cache populated above");
         // FedMut pairs mutations by parity of the dispatch sequence.
-        let slot = self.async_rt.as_ref().unwrap().dispatched() as usize;
-        let (delta_srv, ledger_len, self_len, loss) = self.client_upload(
+        let slot = self.rt()?.dispatched() as usize;
+        let (delta_srv, ledger_len, self_len, loss, sealed) = self.client_upload(
             client,
             slot,
             t,
@@ -1102,17 +1316,68 @@ impl Server {
         // Per-client telemetry keyed by the same self-contained length
         // the link schedule was just timed with.
         self.record_dispatch_telemetry(client, self_len);
-        let rt = self.async_rt.as_mut().unwrap();
+        // Fault chains: the dispatch's whole retry sequence resolves
+        // now (pure in (seed, client, version, attempt)). A delivered
+        // chain enters the queue with the chain's total seconds and
+        // its retransmission bytes on top of the ledger frame; a
+        // permanently failed chain never enters the queue — its bytes
+        // are booked as orphans for the next aggregation and the slot
+        // refills from the sampler stream on the next loop pass.
+        let mut duration = secs;
+        let mut frame_bytes = ledger_len;
+        if self.faults.is_some() {
+            let mut plan = self.faults.take().expect("checked above");
+            let now = self.rt().map(|rt| rt.now);
+            let ch = match now {
+                Ok(now) => {
+                    let frame = sealed.as_deref().expect("faults imply sealed frames");
+                    plan.attempt_chain(client, version, now, secs, frame)
+                }
+                Err(e) => {
+                    self.faults = Some(plan);
+                    self.async_bcast = Some(cache);
+                    return Err(e);
+                }
+            };
+            self.faults = Some(plan);
+            self.record_chain_telemetry(client, &ch);
+            // extra transmitting attempts re-send the sealed frame;
+            // the successful (or first) one is priced at the ledger
+            // length — same accounting as the sync path.
+            let transmitted =
+                if ch.up_bytes > 0 { ledger_len + ch.up_bytes - self_len } else { 0 };
+            if !ch.survived {
+                let plan = self.faults.as_mut().expect("restored above");
+                plan.note_orphan(transmitted, bcast_ledger);
+                self.consecutive_failed_dispatches += 1;
+                self.async_bcast = Some(cache);
+                if self.consecutive_failed_dispatches > MAX_CONSECUTIVE_FAILED_DISPATCHES {
+                    anyhow::bail!(
+                        "async dispatch cannot make progress: {} consecutive uploads \
+                         exhausted their retry budget under fault plan `{}` — every \
+                         chain is failing, so the run would never close another \
+                         version",
+                        self.consecutive_failed_dispatches,
+                        self.cfg.net.faults.spec_string()
+                    );
+                }
+                return Ok(());
+            }
+            duration = ch.secs;
+            frame_bytes = transmitted;
+        }
+        self.consecutive_failed_dispatches = 0;
+        let rt = self.rt_mut()?;
         let payload = UploadPayload {
             client,
-            version: rt.version,
+            version,
             gen,
             delta: delta_srv,
             loss,
-            frame_len: ledger_len,
+            frame_len: frame_bytes,
             bcast_len: bcast_ledger,
         };
-        rt.dispatch(payload, secs);
+        rt.dispatch(payload, duration);
         self.async_bcast = Some(cache);
         Ok(())
     }
@@ -1122,10 +1387,10 @@ impl Server {
     /// injection — failed clients are skipped at dispatch and the slot
     /// refills from the stream), so `async:c=all` walks exactly the
     /// sync cohorts.
-    fn next_async_client(&mut self) -> (usize, u64) {
+    fn next_async_client(&mut self) -> Result<(usize, u64)> {
         loop {
             let (gen, idx) = {
-                let rt = self.async_rt.as_ref().unwrap();
+                let rt = self.rt()?;
                 (rt.sample_gen, rt.sample_idx as usize)
             };
             // The post-failure cohort is a pure function of (gen, seed),
@@ -1162,16 +1427,40 @@ impl Server {
                 }
                 self.async_cohort = Some((gen, cohort));
             }
-            let cohort_len = self.async_cohort.as_ref().map_or(0, |(_, c)| c.len());
-            if idx < cohort_len {
-                self.async_rt.as_mut().unwrap().sample_idx += 1;
-                let (_, cohort) = self.async_cohort.as_ref().unwrap();
-                return (cohort[idx], gen);
+            if let Some((_, cohort)) = &self.async_cohort {
+                if idx < cohort.len() {
+                    let client = cohort[idx];
+                    self.rt_mut()?.sample_idx += 1;
+                    return Ok((client, gen));
+                }
             }
-            let rt = self.async_rt.as_mut().unwrap();
+            let rt = self.rt_mut()?;
             rt.sample_gen += 1;
             rt.sample_idx = 0;
         }
+    }
+
+    /// The async runtime, or a recoverable error explaining that no
+    /// async round has initialized it yet (instead of the old
+    /// `unwrap` panics on `async_rt`).
+    fn rt(&self) -> Result<&AsyncRuntime> {
+        self.async_rt.as_ref().with_context(|| {
+            format!(
+                "async runtime not initialized (round_mode is `{}`): \
+                 `run_async_round` creates it on first use",
+                self.cfg.net.round_mode.name()
+            )
+        })
+    }
+
+    fn rt_mut(&mut self) -> Result<&mut AsyncRuntime> {
+        let mode = self.cfg.net.round_mode.name();
+        self.async_rt.as_mut().with_context(|| {
+            format!(
+                "async runtime not initialized (round_mode is `{mode}`): \
+                 `run_async_round` creates it on first use"
+            )
+        })
     }
 
     /// Record one dispatch in the per-client telemetry table and the

@@ -17,7 +17,7 @@ use fedluar::config::{ClientOptCfg, Method, RunConfig, ServerOptCfg};
 use fedluar::exp;
 use fedluar::fl::Server;
 use fedluar::model::{artifacts_dir, ModelMeta};
-use fedluar::net::{LinkDist, RoundMode, SamplerCfg};
+use fedluar::net::{FaultsCfg, LinkDist, RoundMode, SamplerCfg};
 use fedluar::obs;
 use fedluar::obs::ObsLevel;
 
@@ -52,7 +52,7 @@ USAGE:
                [--lr F] [--seed N] [--server-opt SPEC] [--mu-global F]
                [--mu-prev F] [--eval-every N] [--out results/run.csv]
                [--link-dist SPEC] [--round-mode SPEC] [--compute-s F]
-               [--delta-frames [BOOL]] [--sampler SPEC]
+               [--delta-frames [BOOL]] [--sampler SPEC] [--faults SPEC]
                [--obs off|metrics|full] [--obs-trace FILE]
                [--obs-metrics FILE] [--obs-layer-csv FILE]
                [--obs-clients-csv FILE] [--config FILE]
@@ -97,8 +97,21 @@ frames, so the Comm column measures real bytes):
               | staleness:cap=2     bounded staleness: async uploads with
                                     version gap > cap are held out of the
                                     aggregation mean (bytes/clock still paid)
+  --faults      off                 no fault injection (default, bit-identical
+                                    to a build without the fault layer)
+              | drop:p=0.1          lose upload attempts in transit
+              | outage:p=0.05,len=30  drop + take the link down for len secs
+              | corrupt:p=0.02      flip a byte in the framed payload (always
+                                    caught by the wire integrity trailer —
+                                    corrupted updates are never aggregated)
+              | mixed:drop=F,outage=F,len=S,corrupt=F   all three at once
+                every spec also takes retries=N,backoff=S,timeout=S,quorum=N
+                (bounded retry w/ exponential backoff; an aggregation closing
+                below quorum recycles the missing layers instead of stalling);
+                seeded per (client, version, attempt) — reproducible chaos.
+                See docs/faults.md
   (config files also accept deadline_s = F, buffer_k = N,
-   delta_frames = true|false, and sampler = SPEC)
+   delta_frames = true|false, sampler = SPEC, and faults = SPEC)
 
 OBSERVABILITY (the obs: config block; telemetry is read-only — an
 `--obs full` run is bit-identical to `--obs off`):
@@ -161,6 +174,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(spec) = args.get("sampler") {
         cfg.net.sampler = SamplerCfg::parse(spec)?;
     }
+    if let Some(spec) = args.get("faults") {
+        cfg.net.faults = FaultsCfg::parse(spec)?;
+    }
     if let Some(v) = args.get("obs") {
         cfg.obs.level = ObsLevel::parse(v)?;
     }
@@ -199,13 +215,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     obs::init(&cfg.obs)?;
 
     println!(
-        "# fedluar run: {} / {} / {} / net {} over {} / sampler {}",
+        "# fedluar run: {} / {} / {} / net {} over {} / sampler {} / faults {}",
         cfg.model,
         cfg.method.label(),
         cfg.server_opt.label(),
         cfg.net.round_mode.spec_string(),
         cfg.net.link_dist.spec_string(),
-        cfg.net.sampler.spec_string()
+        cfg.net.sampler.spec_string(),
+        cfg.net.faults.spec_string()
     );
     let mut server = Server::new(cfg)?;
     let t0 = std::time::Instant::now();

@@ -16,16 +16,25 @@
 //!   `speed:pow=F` / `staleness:cap=N`) plus the per-client telemetry
 //!   table (`ClientStats`) the speed-biased policy reads.
 //!
+//! * `faults` — deterministic fault injection (`drop` / `outage` /
+//!   `corrupt` / `mixed`, seeded per `(client, version, attempt)`)
+//!   plus the server-side `FailurePolicy` (bounded retry with
+//!   exponential backoff, per-attempt timeout, quorum-degraded
+//!   close). `off` is bit-identical to a build without the module;
+//!   see `docs/faults.md`.
+//!
 //! `NetCfg` is the `net:` block of a run config (flat keys
 //! `link_dist`, `round_mode`, `deadline_s`, `buffer_k`, `compute_s`,
-//! `sampler`); `NetSim` is the per-run instance the FL server drives
-//! each round.
+//! `sampler`, `faults`); `NetSim` is the per-run instance the FL
+//! server drives each round.
 
+pub mod faults;
 pub mod links;
 pub mod sampler;
 pub mod sched;
 pub mod wire;
 
+pub use faults::{ChainOutcome, FailurePolicy, FaultKind, FaultPlan, FaultsCfg};
 pub use links::{ClientLink, LinkDist, LinkFleet};
 pub use sampler::{speed_cohort, speed_weights, ClientStats, SamplerCfg};
 pub use sched::{Arrival, AsyncQueue, RoundMode, RoundOutcome, Staleness};
@@ -66,6 +75,11 @@ pub struct NetCfg {
     /// bit-exactly; `speed:pow=F` biases by measured upload latency;
     /// `staleness:cap=N` bounds the async aggregation mean).
     pub sampler: SamplerCfg,
+    /// Deterministic fault injection + failure policy (`off` keeps
+    /// the fault path unentered and runs bit-identical to builds
+    /// without it; configs written before the key existed parse as
+    /// `off`).
+    pub faults: FaultsCfg,
 }
 
 impl Default for NetCfg {
@@ -76,6 +90,7 @@ impl Default for NetCfg {
             compute_s: 0.0,
             delta_frames: false,
             sampler: SamplerCfg::Uniform,
+            faults: FaultsCfg::default(),
         }
     }
 }
@@ -131,6 +146,7 @@ mod tests {
         assert_eq!(cfg.compute_s, 0.0);
         assert!(!cfg.delta_frames, "delta framing is opt-in");
         assert_eq!(cfg.sampler, SamplerCfg::Uniform, "biased sampling is opt-in");
+        assert!(cfg.faults.is_off(), "fault injection is opt-in");
     }
 
     #[test]
@@ -149,6 +165,7 @@ mod tests {
             compute_s: 0.0,
             delta_frames: false,
             sampler: SamplerCfg::Uniform,
+            faults: FaultsCfg::default(),
         };
         let sim = NetSim::new(cfg, 64, 9);
         let actives: Vec<usize> = (0..64).collect();
@@ -171,6 +188,7 @@ mod tests {
             compute_s: 2.0,
             delta_frames: false,
             sampler: SamplerCfg::Uniform,
+            faults: FaultsCfg::default(),
         };
         let sim = NetSim::new(cfg, 4, 1);
         let with = sim.client_secs(0, 0, 0);

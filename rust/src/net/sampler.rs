@@ -133,6 +133,20 @@ pub struct ClientStats {
     pub upload_secs_sum: Vec<f64>,
     /// Sum of self-contained upload bytes over dispatches.
     pub up_bytes: Vec<u64>,
+    /// Fault-policy retry attempts (beyond each first attempt). Kept
+    /// **separate** from `dispatches`/`upload_secs_sum` so
+    /// `speed:pow=F` never double-penalizes a client whose injected
+    /// outages forced retries — the speed weights read only
+    /// first-attempt latency. Zero-filled when faults are off (and
+    /// when loading a pre-v5 checkpoint), so `uniform` runs stay
+    /// bit-identical.
+    pub retries: Vec<u64>,
+    /// Simulated seconds spent on retries (backoffs + retry attempts).
+    pub retry_secs_sum: Vec<f64>,
+    /// Uplink bytes paid by retries.
+    pub retry_bytes: Vec<u64>,
+    /// Dispatches whose every attempt failed (permanent failures).
+    pub failures: Vec<u64>,
 }
 
 impl ClientStats {
@@ -143,6 +157,10 @@ impl ClientStats {
             held_stale: vec![0; num_clients],
             upload_secs_sum: vec![0.0; num_clients],
             up_bytes: vec![0; num_clients],
+            retries: vec![0; num_clients],
+            retry_secs_sum: vec![0.0; num_clients],
+            retry_bytes: vec![0; num_clients],
+            failures: vec![0; num_clients],
         }
     }
 
@@ -166,6 +184,20 @@ impl ClientStats {
 
     pub fn record_held(&mut self, client: usize) {
         self.held_stale[client] += 1;
+    }
+
+    /// Book `n` retry attempts (their clock and bytes) against a
+    /// client, without touching the first-attempt columns the speed
+    /// sampler reads.
+    pub fn record_retries(&mut self, client: usize, n: u64, secs: f64, bytes: u64) {
+        self.retries[client] += n;
+        self.retry_secs_sum[client] += secs;
+        self.retry_bytes[client] += bytes;
+    }
+
+    /// Book a dispatch whose every attempt failed.
+    pub fn record_failure(&mut self, client: usize) {
+        self.failures[client] += 1;
     }
 
     /// Mean measured upload latency, `None` until the first dispatch.
@@ -279,6 +311,26 @@ mod tests {
         assert_eq!(stats.mean_upload_secs(0), Some(3.0));
         assert_eq!(stats.up_bytes[0], 40);
         assert_eq!(stats.dispatches[0], 2);
+    }
+
+    #[test]
+    fn retries_never_perturb_speed_weights() {
+        // the double-penalty guard: a client that suffered injected
+        // outages is already slower on the wall clock — its retry
+        // telemetry must not also shift its cohort weight
+        let mut clean = ClientStats::new(4);
+        let mut faulted = ClientStats::new(4);
+        for c in 0..4 {
+            clean.record_dispatch(c, 1.0 + c as f64, 500);
+            faulted.record_dispatch(c, 1.0 + c as f64, 500);
+        }
+        faulted.record_retries(1, 3, 90.0, 1500);
+        faulted.record_failure(1);
+        assert_eq!(speed_weights(&clean, 1.0), speed_weights(&faulted, 1.0));
+        assert_eq!(faulted.mean_upload_secs(1), clean.mean_upload_secs(1));
+        assert_eq!(faulted.retries[1], 3);
+        assert_eq!(faulted.retry_bytes[1], 1500);
+        assert_eq!(faulted.failures[1], 1);
     }
 
     #[test]

@@ -310,6 +310,25 @@ pub fn simulate_round(mode: &RoundMode, times: &[f64]) -> RoundOutcome {
     }
 }
 
+/// Remove permanently failed slots from a round outcome: a client
+/// whose every upload attempt failed still bounded the round's clock
+/// (the server waited out its timeouts), but its update must never
+/// reach the aggregation. Failed slots are force-excluded, their
+/// weights zeroed, and `aggregated` recomputed — the quorum-degraded
+/// close in `fl::Server` compares the survivor count against
+/// `FailurePolicy::quorum` afterwards.
+pub fn mask_failed_slots(mut outcome: RoundOutcome, failed: &[bool]) -> RoundOutcome {
+    assert_eq!(outcome.included.len(), failed.len());
+    for (slot, &f) in failed.iter().enumerate() {
+        if f {
+            outcome.included[slot] = false;
+            outcome.weights[slot] = 0.0;
+        }
+    }
+    outcome.aggregated = outcome.included.iter().filter(|&&b| b).count();
+    outcome
+}
+
 /// Persistent event queue for the fully-async server: completion
 /// events survive across dispatches (unlike `simulate_round`, which
 /// fills and drains a fresh heap every round). Keys are (completion
@@ -538,6 +557,24 @@ mod tests {
         assert!(p.weight(3) < p.weight(1), "discount must decrease with the gap");
         // a = 0 degenerates to no discount
         assert_eq!(Staleness::Poly { a: 0.0 }.weight(7), 1.0);
+    }
+
+    #[test]
+    fn mask_failed_slots_excludes_and_recounts() {
+        let out = simulate_round(&RoundMode::Sync, &[0.4, 2.0, 0.6]);
+        assert_eq!(out.aggregated, 3);
+        let masked = mask_failed_slots(out, &[false, true, false]);
+        assert_eq!(masked.included, vec![true, false, true]);
+        assert_eq!(masked.weights[1], 0.0);
+        assert_eq!(masked.aggregated, 2);
+        // the failed straggler still bounded the clock (server waited
+        // out its attempts before closing)
+        assert_eq!(masked.round_secs, 2.0);
+        // masking nothing is the identity
+        let out = simulate_round(&RoundMode::Sync, &[0.1, 0.2]);
+        let same = mask_failed_slots(out.clone(), &[false, false]);
+        assert_eq!(same.included, out.included);
+        assert_eq!(same.aggregated, out.aggregated);
     }
 
     #[test]

@@ -322,6 +322,53 @@ fn fnv1a_bytes(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+// ------------------------------------------------------ integrity trailer
+
+/// Bytes appended by [`seal_trailer`]: u32 LE body length + u64 LE
+/// FNV-1a over the body.
+pub const TRAILER_LEN: usize = 12;
+
+/// Append the corruption-detection trailer to a sealed frame: the
+/// frame's byte length (u32 LE) followed by FNV-1a over every
+/// preceding byte (u64 LE). Only fault-injected runs seal trailers —
+/// with `faults = off` frames stay byte-identical to the pre-trailer
+/// wire format, and every pinned exact-length function excludes it.
+///
+/// A single flipped byte anywhere in the trailer-bearing frame is
+/// always detected: each FNV-1a step `h' = (h ^ b) * prime` is
+/// injective in the state (odd multiplier, invertible mod 2^64), so
+/// distinct bytes at any position yield distinct final hashes; a flip
+/// inside the trailer itself breaks the length or hash comparison
+/// directly. `prop_fault_trailer_detects_any_single_byte_flip` sweeps
+/// this over every flavor and every byte position.
+pub fn seal_trailer(frame: &mut Vec<u8>) {
+    let len = frame.len() as u32;
+    let hash = fnv1a_bytes(FNV_OFFSET, frame);
+    frame.extend_from_slice(&len.to_le_bytes());
+    frame.extend_from_slice(&hash.to_le_bytes());
+}
+
+/// Verify a trailer-bearing frame and return the body with the trailer
+/// stripped; errors on any mismatch (the frame was corrupted in
+/// transit) so a flipped byte can never reach the decoder silently.
+pub fn check_trailer(frame: &[u8]) -> Result<&[u8]> {
+    if frame.len() < TRAILER_LEN {
+        bail!("frame shorter than its integrity trailer ({} bytes)", frame.len());
+    }
+    let body_end = frame.len() - TRAILER_LEN;
+    let body = &frame[..body_end];
+    let len = u32::from_le_bytes(frame[body_end..body_end + 4].try_into().expect("4 bytes"));
+    if len as usize != body_end {
+        bail!("integrity trailer length mismatch: trailer says {len}, body is {body_end} bytes");
+    }
+    let want = u64::from_le_bytes(frame[body_end + 4..].try_into().expect("8 bytes"));
+    let got = fnv1a_bytes(FNV_OFFSET, body);
+    if want != got {
+        bail!("integrity trailer FNV mismatch: frame corrupted in transit");
+    }
+    Ok(body)
+}
+
 /// Per-layer FNV-1a hashes over the f32 bit patterns of `values` —
 /// what `fl::RefState` stores to validate a reference snapshot without
 /// keeping a second copy.
@@ -1302,6 +1349,34 @@ mod tests {
         bad_dim[4] ^= 0x01;
         assert!(decode_update(&bad_dim, &meta).is_err());
         assert!(decode_broadcast(f.as_bytes(), &meta).is_err(), "uplink frame on downlink");
+    }
+
+    #[test]
+    fn trailer_roundtrip_and_exhaustive_flip_detection() {
+        let meta = toy_meta();
+        let u = toy_update(11, meta.dim);
+        let f = encode_update(&u, &meta, &all_layers(&meta), &WireHint::Dense).unwrap();
+        let mut sealed = f.as_bytes().to_vec();
+        seal_trailer(&mut sealed);
+        assert_eq!(sealed.len(), f.len() + TRAILER_LEN);
+        let body = check_trailer(&sealed).unwrap();
+        assert_eq!(body, f.as_bytes(), "trailer strips back to the original frame");
+        let d = decode_update(body, &meta).unwrap();
+        assert_eq!(vec_of(&d), u.as_slice());
+        // every single-byte flip — body, length field, hash field — is
+        // rejected, for every flip mask bit
+        for pos in 0..sealed.len() {
+            for bit in 0..8u8 {
+                let mut bad = sealed.clone();
+                bad[pos] ^= 1 << bit;
+                assert!(
+                    check_trailer(&bad).is_err(),
+                    "flip at byte {pos} bit {bit} went undetected"
+                );
+            }
+        }
+        // truncation below the trailer is rejected too
+        assert!(check_trailer(&sealed[..TRAILER_LEN - 1]).is_err());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! with the fleet's uplink speed (and its decade bucket — the same
 //! bucketing that keys the `client.upload_s.*` histograms), the
 //! sampler's dispatch / absorbed / held-stale counts, the measured
-//! mean upload latency, and the cumulative uplink bytes.
+//! mean upload latency, the cumulative uplink bytes, and the fault
+//! columns (retried attempts and permanently failed uploads — zero
+//! unless `net.faults` is active; see docs/faults.md).
 //!
 //! Unlike the per-layer rows (which accumulate per round), the client
 //! table is cumulative: `obs::record_client_rounds` *replaces* the
@@ -35,10 +37,17 @@ pub struct ClientRound {
     pub mean_upload_s: f64,
     /// Cumulative uplink bytes across all dispatches.
     pub up_bytes: u64,
+    /// Retry attempts injected faults forced on this client's uploads
+    /// (counted apart from first attempts so `mean_upload_s` — and the
+    /// speed-biased sampler reading it — never double-penalizes an
+    /// unlucky client).
+    pub retries: u64,
+    /// Uploads whose whole retry chain failed (never aggregated).
+    pub failures: u64,
 }
 
-pub const CSV_HEADER: &str =
-    "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,mean_upload_s,up_bytes";
+pub const CSV_HEADER: &str = "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,\
+mean_upload_s,up_bytes,retries,failures";
 
 /// Build one row per client from the sampler telemetry + link fleet.
 pub(crate) fn build_rows(stats: &ClientStats, fleet: &LinkFleet) -> Vec<ClientRound> {
@@ -55,6 +64,8 @@ pub(crate) fn build_rows(stats: &ClientStats, fleet: &LinkFleet) -> Vec<ClientRo
                 held_stale: stats.held_stale[c],
                 mean_upload_s: stats.mean_upload_secs(c).unwrap_or(0.0),
                 up_bytes: stats.up_bytes[c],
+                retries: stats.retries[c],
+                failures: stats.failures[c],
             }
         })
         .collect()
@@ -72,7 +83,7 @@ pub(crate) fn write_csv(rows: &[ClientRound], path: impl AsRef<Path>) -> std::io
     for r in rows {
         writeln!(
             f,
-            "{},{:.3},{},{},{},{},{:.6},{}",
+            "{},{:.3},{},{},{},{},{:.6},{},{},{}",
             r.client,
             r.up_mbps,
             r.speed_bucket,
@@ -80,7 +91,9 @@ pub(crate) fn write_csv(rows: &[ClientRound], path: impl AsRef<Path>) -> std::io
             r.absorbed,
             r.held_stale,
             r.mean_upload_s,
-            r.up_bytes
+            r.up_bytes,
+            r.retries,
+            r.failures
         )?;
     }
     Ok(())
@@ -109,6 +122,8 @@ mod tests {
         stats.record_absorbed(0);
         stats.record_dispatch(2, 1.0, 50);
         stats.record_held(2);
+        stats.record_retries(0, 2, 9.0, 300);
+        stats.record_failure(3);
         (stats, fleet)
     }
 
@@ -124,6 +139,9 @@ mod tests {
         assert_eq!(rows[2].held_stale, 1);
         assert_eq!(rows[1].dispatches, 0);
         assert_eq!(rows[1].mean_upload_s, 0.0, "never dispatched -> 0");
+        assert_eq!(rows[0].retries, 2);
+        assert_eq!(rows[0].mean_upload_s, 3.0, "retries never skew the mean");
+        assert_eq!(rows[3].failures, 1);
         for r in &rows {
             let expect = fleet.link(r.client).up_bps / 1e6;
             assert_eq!(r.up_mbps, expect);
@@ -143,9 +161,10 @@ mod tests {
         assert_eq!(lines[0], CSV_HEADER);
         assert_eq!(lines.len(), 5, "header + one row per client");
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 8, "{line}");
+            assert_eq!(line.split(',').count(), 10, "{line}");
         }
         assert!(lines[1].starts_with("0,"));
-        assert!(lines[1].ends_with(",2,1,0,3.000000,200"), "{}", lines[1]);
+        assert!(lines[1].ends_with(",2,1,0,3.000000,200,2,0"), "{}", lines[1]);
+        assert!(lines[4].ends_with(",0,0,0,0.000000,0,0,1"), "{}", lines[4]);
     }
 }

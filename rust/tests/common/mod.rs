@@ -34,7 +34,10 @@ use fedluar::fl::{AsyncRuntime, DeltaFrameState, UploadPayload};
 use fedluar::luar::LuarState;
 use fedluar::metrics::{AbsorbRecord, History, RoundRecord};
 use fedluar::model::{artifacts_dir, ModelMeta};
-use fedluar::net::{wire, ClientStats, LinkDist, NetCfg, NetSim, RoundMode, SamplerCfg, Staleness};
+use fedluar::net::{
+    sched, wire, ChainOutcome, ClientStats, FaultPlan, FaultsCfg, LinkDist, NetCfg, NetSim,
+    RoundMode, SamplerCfg, Staleness,
+};
 use fedluar::rng::Rng;
 use fedluar::tensor;
 use std::path::PathBuf;
@@ -166,6 +169,10 @@ pub struct SimServer {
     /// (under `speed` the draw reads mutable telemetry, so it must be
     /// sampled once per generation, not once per dispatch).
     async_cohort: Option<(u64, Vec<usize>)>,
+    /// `Some` iff fault injection is armed — the same per-(client,
+    /// version, attempt) seeded chains `fl::Server` resolves, so the
+    /// chaos suites exercise the identical fault model engine-free.
+    pub faults: Option<FaultPlan>,
 }
 
 impl SimServer {
@@ -211,6 +218,7 @@ impl SimServer {
                 compute_s: 0.1,
                 delta_frames,
                 sampler: SamplerCfg::Uniform,
+                faults: FaultsCfg::default(),
             },
             NUM_CLIENTS,
             42,
@@ -237,6 +245,7 @@ impl SimServer {
             sampler_stats: ClientStats::new(NUM_CLIENTS),
             dispatch_log: Vec::new(),
             async_cohort: None,
+            faults: None,
         }
     }
 
@@ -245,6 +254,15 @@ impl SimServer {
     pub fn with_sampler(mut self, sampler: SamplerCfg) -> Self {
         self.sampler = sampler;
         self.cohorts = CohortPolicy::Sampled;
+        self
+    }
+
+    /// Arm deterministic fault injection, exactly as `Server::with_meta`
+    /// does: the plan is seeded with the fixture seed and `off` leaves
+    /// the fault path unentered (bit-identical to an unarmed fixture).
+    pub fn with_faults(mut self, cfg: FaultsCfg) -> Self {
+        self.net.cfg.faults = cfg;
+        self.faults = (!cfg.is_off()).then(|| FaultPlan::new(cfg, NUM_CLIENTS, self.seed));
         self
     }
 
@@ -279,14 +297,16 @@ impl SimServer {
     /// dense encode/decode (self-contained length times the link), then
     /// the residual path decides the ledger length — exactly
     /// `Server::client_upload`. Returns (decoded update, loss,
-    /// ledger bytes, self-contained bytes).
+    /// ledger bytes, self-contained bytes, sealed frame when faults
+    /// are armed — both byte counts then include the integrity
+    /// trailer, exactly as `Server` grows them).
     pub fn upload(
         &mut self,
         client: usize,
         gen: u64,
         version: u64,
         upload_layers: &[usize],
-    ) -> (Vec<f32>, f32, u64, u64) {
+    ) -> (Vec<f32>, f32, u64, u64, Option<Vec<u8>>) {
         let (mut delta_v, loss) = fake_delta(self.flavor, self.seed, client, gen, self.meta.dim);
         for &l in &self.luar.recycle_set {
             let lm = &self.meta.layers[l];
@@ -331,7 +351,15 @@ impl SimServer {
             let st = self.delta.as_mut().expect("checked above");
             st.record_upload(client, version, &decoded, &self.meta);
         }
-        (decoded, loss, ledger_len, self_len)
+        let sealed = if self.faults.is_some() {
+            let mut bytes = frame.as_bytes().to_vec();
+            wire::seal_trailer(&mut bytes);
+            Some(bytes)
+        } else {
+            None
+        };
+        let trailer = sealed.is_some() as u64 * wire::TRAILER_LEN as u64;
+        (decoded, loss, ledger_len + trailer, self_len + trailer, sealed)
     }
 
     /// Record one dispatch in the telemetry table and log — the same
@@ -450,19 +478,69 @@ impl SimServer {
             down_total = actives.len() as u64 * bcast_self;
         }
         let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(actives.len());
+        let mut frame_lens: Vec<u64> = Vec::with_capacity(actives.len());
         let mut timing_lens: Vec<u64> = Vec::with_capacity(actives.len());
-        let mut loss_sum = 0.0f64;
-        let mut up_total = 0u64;
+        let mut losses: Vec<f64> = Vec::with_capacity(actives.len());
+        let mut sealed_frames: Vec<Option<Vec<u8>>> = Vec::with_capacity(actives.len());
         for &client in &actives {
-            let (d, loss, ledger_len, self_len) = self.upload(client, t, t, &upload_layers);
-            loss_sum += loss as f64;
-            up_total += ledger_len;
+            let (d, loss, ledger_len, self_len, sealed) =
+                self.upload(client, t, t, &upload_layers);
+            losses.push(loss as f64);
+            frame_lens.push(ledger_len);
             timing_lens.push(self_len);
             deltas.push(d);
+            sealed_frames.push(sealed);
             self.record_dispatch(client, self_len);
         }
-        // the schedule is always timed against self-contained lengths
-        let outcome = self.net.round(&actives, bcast_self, &timing_lens);
+        // the schedule is always timed against self-contained lengths;
+        // with a fault plan each slot's time is its collapsed retry
+        // chain and failed slots are masked out — `Server`'s exact path
+        let mut loss_sum: f64 = losses.iter().sum();
+        let mut loss_count = actives.len();
+        let mut up_total: u64 = frame_lens.iter().sum();
+        let outcome = if self.faults.is_some() {
+            let mut plan = self.faults.take().expect("checked above");
+            let mut chains: Vec<ChainOutcome> = Vec::with_capacity(actives.len());
+            for (slot, &client) in actives.iter().enumerate() {
+                let secs = self.net.client_secs(client, bcast_self, timing_lens[slot]);
+                let frame = sealed_frames[slot].as_deref().expect("faults imply sealed frames");
+                chains.push(plan.attempt_chain(client, t, self.sim_seconds, secs, frame));
+            }
+            self.faults = Some(plan);
+            let times: Vec<f64> = chains.iter().map(|c| c.secs).collect();
+            let raw = sched::simulate_round(&self.net.cfg.round_mode, &times);
+            let failed: Vec<bool> = chains.iter().map(|c| !c.survived).collect();
+            let outcome = sched::mask_failed_slots(raw, &failed);
+            loss_sum = 0.0;
+            loss_count = 0;
+            up_total = 0;
+            for (slot, ch) in chains.iter().enumerate() {
+                self.record_chain(actives[slot], ch);
+                if ch.up_bytes > 0 {
+                    up_total += frame_lens[slot] + ch.up_bytes - timing_lens[slot];
+                }
+                if ch.survived {
+                    loss_sum += losses[slot];
+                    loss_count += 1;
+                }
+            }
+            if outcome.aggregated < self.net.cfg.faults.policy.quorum {
+                self.faults.as_mut().expect("restored above").note_quorum_degraded();
+            }
+            if outcome.aggregated == 0 {
+                self.finish_degraded(
+                    &upload_layers,
+                    actives.len(),
+                    up_total,
+                    down_total,
+                    outcome.round_secs,
+                );
+                return;
+            }
+            outcome
+        } else {
+            self.net.round(&actives, bcast_self, &timing_lens)
+        };
         for (slot, &client) in actives.iter().enumerate() {
             if outcome.included[slot] {
                 self.sampler_stats.record_absorbed(client);
@@ -475,7 +553,7 @@ impl SimServer {
             &upload_layers,
             actives.len(),
             loss_sum,
-            actives.len(),
+            loss_count,
             up_total,
             down_total,
             outcome.round_secs,
@@ -483,6 +561,59 @@ impl SimServer {
             outcome.aggregated,
             0.0,
         );
+    }
+
+    /// Fold one resolved chain into the telemetry table — the stats
+    /// half of `Server::record_chain_telemetry` (obs counters are the
+    /// real server's concern).
+    fn record_chain(&mut self, client: usize, ch: &ChainOutcome) {
+        if ch.attempts > 1 {
+            self.sampler_stats.record_retries(
+                client,
+                (ch.attempts - 1) as u64,
+                ch.retry_secs,
+                ch.retry_up_bytes,
+            );
+        }
+        if !ch.survived {
+            self.sampler_stats.record_failure(client);
+        }
+    }
+
+    /// `Server::finish_degraded_round`: nothing survived, so the model
+    /// and LUAR state stay put, but bytes, clock, and the round counter
+    /// advance.
+    fn finish_degraded(
+        &mut self,
+        upload_layers: &[usize],
+        actives_len: usize,
+        up_bytes_total: u64,
+        down_total: u64,
+        round_secs: f64,
+    ) {
+        self.comm.record_wire_round(
+            actives_len as u64,
+            upload_layers,
+            up_bytes_total,
+            wire::dense_frame_len(&self.meta),
+            down_total,
+        );
+        self.sim_seconds += round_secs;
+        self.round += 1;
+        self.history.push(RoundRecord {
+            round: self.round,
+            train_loss: 0.0,
+            test_loss: tensor::ssq(&self.params),
+            test_acc: self.params[0] as f64,
+            up_bytes: self.comm.up_bytes,
+            comm_ratio: self.comm.comm_ratio(),
+            kappa: 0.0,
+            sim_seconds: self.sim_seconds,
+            wire_bytes: up_bytes_total,
+            tail_s: 0.0,
+            arrivals: 0,
+            version_gap: 0.0,
+        });
     }
 
     pub fn dispatch_next(&mut self) {
@@ -521,11 +652,33 @@ impl SimServer {
         } else {
             bcast_self
         };
-        let (delta, loss, ledger_len, self_len) =
+        let (delta, loss, ledger_len, self_len, sealed) =
             self.upload(client, gen, version, &upload_layers);
         // timing against self-contained lengths, ledger gets the delta
         let secs = self.net.client_secs(client, bcast_self, self_len);
         self.record_dispatch(client, self_len);
+        // fault chain resolves at dispatch time, like
+        // `Server::dispatch_next_async`: a failed chain never enters
+        // the queue, its bytes are orphaned, the slot refills from the
+        // sampler stream on the caller's next pass
+        let mut duration = secs;
+        let mut frame_bytes = ledger_len;
+        if self.faults.is_some() {
+            let mut plan = self.faults.take().expect("checked above");
+            let now = self.rt.as_ref().unwrap().now;
+            let frame = sealed.as_deref().expect("faults imply sealed frames");
+            let ch = plan.attempt_chain(client, version, now, secs, frame);
+            self.faults = Some(plan);
+            self.record_chain(client, &ch);
+            let transmitted =
+                if ch.up_bytes > 0 { ledger_len + ch.up_bytes - self_len } else { 0 };
+            if !ch.survived {
+                self.faults.as_mut().expect("restored above").note_orphan(transmitted, bcast_ledger);
+                return;
+            }
+            duration = ch.secs;
+            frame_bytes = transmitted;
+        }
         let rt = self.rt.as_mut().unwrap();
         let payload = UploadPayload {
             client,
@@ -533,10 +686,10 @@ impl SimServer {
             gen,
             delta,
             loss,
-            frame_len: ledger_len,
+            frame_len: frame_bytes,
             bcast_len: bcast_ledger,
         };
-        rt.dispatch(payload, secs);
+        rt.dispatch(payload, duration);
     }
 
     pub fn run_async_round(&mut self, c: usize, staleness: Staleness) {
@@ -550,7 +703,7 @@ impl SimServer {
             while self.rt.as_ref().unwrap().wants_dispatch() {
                 self.dispatch_next();
             }
-            let start = self.rt.as_mut().unwrap().absorb_instant();
+            let start = self.rt.as_mut().unwrap().absorb_instant().unwrap();
             {
                 let rt = self.rt.as_ref().unwrap();
                 let in_flight = rt.in_flight();
@@ -596,6 +749,15 @@ impl SimServer {
                     weights.push(u.weight);
                     deltas.push(u.payload.delta);
                 }
+                let mut down_bytes = batch.down_bytes;
+                // permanently failed dispatches since the last close
+                // still paid bytes — drain them into this ledger, like
+                // `Server::absorb_async_batch`
+                if let Some(plan) = &mut self.faults {
+                    let (orphan_up, orphan_down) = plan.drain_orphans();
+                    up_total += orphan_up;
+                    down_bytes += orphan_down;
+                }
                 let upload_layers = self.upload_layers();
                 self.finish(
                     &deltas,
@@ -606,7 +768,7 @@ impl SimServer {
                     loss_sum,
                     n,
                     up_total,
-                    batch.down_bytes,
+                    down_bytes,
                     batch.round_secs,
                     batch.tail_s,
                     n,

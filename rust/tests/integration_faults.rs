@@ -1,0 +1,314 @@
+//! Chaos suite: deterministic fault injection end to end.
+//!
+//! Everything here runs against the engine-free `SimServer` fixture
+//! (which resolves the identical per-(client, version, attempt) fault
+//! chains as `fl::Server`) except the checkpoint tests, which need the
+//! real server and are artifact-gated like the rest of the heavy
+//! suites. What the suite pins:
+//!
+//! * **off is free** — `faults = off` runs bit-identically to a
+//!   fixture that never armed the fault path, sync and async;
+//! * **chaos is reproducible** — a seeded `mixed` plan over 50 async
+//!   versions completes, and two invocations agree bit-for-bit on the
+//!   history, the telemetry table, and every fault counter;
+//! * **the ledger reconciles** — retries pay real bytes (in drop mode,
+//!   exactly `sealed_len × attempts`), orphaned bytes from permanently
+//!   failed dispatches drain into the next aggregation, and the
+//!   cumulative `up_bytes` equals the sum of per-round wire bytes;
+//! * **corruption is never aggregated** — a corrupt-everything plan
+//!   leaves the model untouched for the whole run;
+//! * **quorum-degraded rounds recycle, not stall** — with every chain
+//!   failing, rounds still advance clock/bytes/round-counter while the
+//!   params and LUAR state stay put;
+//! * **checkpoint v5** round-trips the fault-plan cursor, v4 refuses
+//!   to drop it, and a truncated file fails atomically with a
+//!   "truncated at field" error.
+
+mod common;
+
+use common::{
+    assert_history_identical, bimodal_fleet, edge_fleet, have_artifacts, quick_cfg, SimServer,
+    ACTIVE,
+};
+use fedluar::config::Method;
+use fedluar::fl::Server;
+use fedluar::net::{wire, FaultsCfg, RoundMode, Staleness};
+
+fn async_mode() -> RoundMode {
+    RoundMode::Async { concurrency: 4, staleness: Staleness::Poly { a: 0.5 } }
+}
+
+fn chaos() -> FaultsCfg {
+    FaultsCfg::parse("mixed:drop=0.2,outage=0.15,len=5,corrupt=0.15,retries=2,backoff=0.5,timeout=3")
+        .unwrap()
+}
+
+/// `faults = off` must leave the fault path unentered: no trailer, no
+/// chains, bit-identical histories to a fixture that never heard of
+/// fault injection — in both round modes.
+#[test]
+fn faults_off_is_bit_identical() {
+    let off = FaultsCfg::parse("off").unwrap();
+    let mut plain = SimServer::new(RoundMode::Sync, bimodal_fleet(), Some(2), 7);
+    plain.run(12);
+    let mut armed = SimServer::new(RoundMode::Sync, bimodal_fleet(), Some(2), 7).with_faults(off);
+    armed.run(12);
+    assert_history_identical(&plain.history, &armed.history, "sync faults=off");
+
+    let mut plain = SimServer::new(async_mode(), edge_fleet(), Some(2), 7);
+    plain.run(12);
+    let mut armed = SimServer::new(async_mode(), edge_fleet(), Some(2), 7).with_faults(off);
+    armed.run(12);
+    assert_history_identical(&plain.history, &armed.history, "async faults=off");
+}
+
+/// The seeded chaos soak: 50 async versions under a `mixed` plan that
+/// injects all three fault kinds. The run completes, every fault kind
+/// actually fired, retries are visible in the plan and the per-client
+/// telemetry, the cumulative ledger reconciles with the per-round wire
+/// bytes — and a second invocation with the same seed agrees
+/// bit-for-bit on all of it.
+#[test]
+fn seeded_chaos_soak_is_deterministic() {
+    let run = |seed: u64| {
+        let mut s = SimServer::new(async_mode(), edge_fleet(), Some(2), seed).with_faults(chaos());
+        s.run(50);
+        s
+    };
+    let a = run(21);
+    let b = run(21);
+    assert_eq!(a.round, 50, "chaos run must complete");
+    assert_history_identical(&a.history, &b.history, "same-seed chaos");
+    assert_eq!(a.faults, b.faults, "fault cursor/counters must replay exactly");
+    assert_eq!(a.sampler_stats, b.sampler_stats, "telemetry must replay exactly");
+
+    let plan = a.faults.as_ref().unwrap();
+    assert!(plan.drops > 0, "mixed plan never dropped");
+    assert!(plan.outages > 0, "mixed plan never cut a link");
+    assert!(plan.corrupts > 0, "mixed plan never corrupted");
+    assert!(plan.retries > 0, "no retry ever fired");
+    assert_eq!(
+        a.sampler_stats.retries.iter().sum::<u64>(),
+        plan.retries,
+        "per-client retry telemetry must reconcile with the plan"
+    );
+    assert!(plan.perm_failures > 0, "soak should exhaust some retry budgets");
+    assert_eq!(
+        a.sampler_stats.failures.iter().sum::<u64>(),
+        plan.perm_failures,
+        "per-client failure telemetry must reconcile with the plan"
+    );
+    // the cumulative uplink ledger is exactly the sum of what each
+    // aggregation booked (orphans included, because they drain into
+    // the next close)
+    let wire_sum: u64 = a.history.records.iter().map(|r| r.wire_bytes).sum();
+    assert_eq!(a.history.records.last().unwrap().up_bytes, wire_sum);
+}
+
+/// Drop-mode byte accounting is exact: every attempt (first try,
+/// retry, or permanently failed) transmits the sealed self-contained
+/// frame, so the cumulative uplink ledger is `sealed_len` times the
+/// total attempt count — and the retry surcharge lands in the separate
+/// telemetry columns, never in the first-attempt averages.
+#[test]
+fn sync_retries_pay_exact_bytes() {
+    let cfg = FaultsCfg::parse("drop:p=0.25,retries=3,backoff=0.5,timeout=4").unwrap();
+    let mut s = SimServer::new(RoundMode::Sync, edge_fleet(), None, 11).with_faults(cfg);
+    s.run(10);
+    let plan = s.faults.as_ref().unwrap();
+    assert!(plan.retries > 0, "p=0.25 over 80 dispatches must retry");
+    let sealed_len = wire::dense_frame_len(&s.meta) + wire::TRAILER_LEN as u64;
+    let dispatches = 10 * ACTIVE as u64;
+    assert_eq!(
+        s.comm.up_bytes,
+        sealed_len * (dispatches + plan.retries),
+        "drop mode: every attempt pays one sealed frame"
+    );
+    assert_eq!(s.sampler_stats.up_bytes.iter().sum::<u64>(), sealed_len * dispatches);
+    assert_eq!(s.sampler_stats.retry_bytes.iter().sum::<u64>(), sealed_len * plan.retries);
+}
+
+/// Async orphan accounting: with retries off, every delivered chain
+/// books one sealed frame when its aggregation closes, every failed
+/// chain orphans one sealed frame that drains into the next close —
+/// so ledger + undrained orphans = sealed_len × (absorbed + failed).
+#[test]
+fn async_orphan_bytes_drain_into_the_ledger() {
+    let cfg = FaultsCfg::parse("drop:p=0.3,retries=0,timeout=5").unwrap();
+    let mut s = SimServer::new(async_mode(), edge_fleet(), None, 5).with_faults(cfg);
+    s.run(20);
+    let plan = s.faults.as_ref().unwrap();
+    assert!(plan.perm_failures > 0, "p=0.3 with no retries must fail some dispatches");
+    let sealed_len = wire::dense_frame_len(&s.meta) + wire::TRAILER_LEN as u64;
+    let absorbed: u64 = s.sampler_stats.absorbed.iter().sum();
+    assert_eq!(
+        s.comm.up_bytes + plan.orphan_up_bytes,
+        sealed_len * (absorbed + plan.perm_failures),
+        "every transmitted frame must land in the ledger or the orphan buffer"
+    );
+}
+
+/// A corrupt-everything plan: the integrity trailer catches every
+/// flipped frame at decode, so nothing is ever aggregated and the
+/// model never moves — yet the run completes and pays for the bytes.
+#[test]
+fn corrupted_frames_are_never_aggregated() {
+    let cfg = FaultsCfg::parse("corrupt:p=0.999999999999,retries=0").unwrap();
+    let mut s = SimServer::new(RoundMode::Sync, edge_fleet(), None, 9).with_faults(cfg);
+    s.run(4);
+    assert_eq!(s.round, 4, "all-corrupt run must still terminate");
+    let plan = s.faults.as_ref().unwrap();
+    assert_eq!(plan.corrupts, 4 * ACTIVE as u64, "every upload must be corrupted");
+    assert_eq!(plan.perm_failures, 4 * ACTIVE as u64);
+    assert!(s.params.iter().all(|&p| p == 0.0), "a corrupted update reached the model");
+    assert!(s.comm.up_bytes > 0, "corrupted frames still crossed the wire");
+    for r in &s.history.records {
+        assert_eq!(r.arrivals, 0, "round {}: no corrupt frame may count as an arrival", r.round);
+    }
+}
+
+/// Every chain fails: rounds close quorum-degraded with zero
+/// survivors, the model and LUAR selection stay exactly as they were,
+/// but the clock, the byte ledger, and the round counter all advance —
+/// the server recycles, it does not stall or crash.
+#[test]
+fn zero_survivor_rounds_advance_without_touching_the_model() {
+    let cfg =
+        FaultsCfg::parse("drop:p=0.999999999999,retries=1,backoff=1,timeout=5,quorum=4").unwrap();
+    let mut s = SimServer::new(RoundMode::Sync, edge_fleet(), Some(2), 3).with_faults(cfg);
+    let recycle_before = s.luar.recycle_set.clone();
+    s.run(6);
+    assert_eq!(s.round, 6, "degraded rounds must still advance the schedule");
+    let plan = s.faults.as_ref().unwrap();
+    assert_eq!(plan.quorum_degraded, 6, "every round closed below quorum");
+    assert_eq!(plan.perm_failures, 6 * ACTIVE as u64);
+    assert_eq!(plan.retries, 6 * ACTIVE as u64, "one retry per dispatch");
+    assert!(s.params.iter().all(|&p| p == 0.0), "no survivors, yet the model moved");
+    assert_eq!(s.luar.recycle_set, recycle_before, "LUAR selection must not churn");
+    assert!(s.sim_seconds > 0.0, "timeouts and backoffs must cost simulated clock");
+    assert_eq!(s.history.records.len(), 6);
+    for r in &s.history.records {
+        assert_eq!(r.arrivals, 0);
+        assert_eq!(r.kappa, 0.0);
+        assert!(r.wire_bytes > 0, "dropped frames still paid uplink bytes");
+    }
+}
+
+/// A moderate drop rate with a full-cohort quorum: most rounds close
+/// degraded (fewer than 8 survivors) but still aggregate what arrived,
+/// so the model learns from the survivors.
+#[test]
+fn partial_quorum_aggregates_survivors() {
+    let cfg = FaultsCfg::parse("drop:p=0.4,retries=0,timeout=5,quorum=8").unwrap();
+    let mut s = SimServer::new(RoundMode::Sync, edge_fleet(), Some(2), 17).with_faults(cfg);
+    s.run(10);
+    let plan = s.faults.as_ref().unwrap();
+    assert!(plan.quorum_degraded > 0, "p=0.4 under quorum=8 must degrade some rounds");
+    assert!(plan.perm_failures > 0);
+    assert!(
+        s.params.iter().any(|&p| p != 0.0),
+        "surviving uploads must still be aggregated"
+    );
+    let survived_rounds =
+        s.history.records.iter().filter(|r| r.arrivals > 0).count();
+    assert!(survived_rounds > 0, "some rounds must have closed with survivors");
+}
+
+// ---------------------------------------------------------------------
+// real-server checkpoint tests (artifact-gated)
+// ---------------------------------------------------------------------
+
+fn faulted_cfg(rounds: usize) -> fedluar::config::RunConfig {
+    let mut cfg = quick_cfg(Method::luar(2));
+    cfg.rounds = rounds;
+    cfg.net.faults = FaultsCfg::parse(
+        "mixed:drop=0.15,outage=0.05,len=3,corrupt=0.05,retries=2,backoff=0.25,timeout=2",
+    )
+    .unwrap();
+    cfg
+}
+
+/// Checkpoint v5 carries the fault-plan cursor (outage windows,
+/// counters, orphan bytes) and the retry telemetry: a run interrupted
+/// mid-chaos and resumed is bit-identical to the uninterrupted one.
+#[test]
+fn checkpoint_v5_roundtrips_fault_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut full = Server::new(faulted_cfg(8)).unwrap();
+    full.run().unwrap();
+
+    let mut first = Server::new(faulted_cfg(4)).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_faults.bin");
+    first.save_checkpoint(&path).unwrap();
+
+    let mut resumed = Server::new(faulted_cfg(8)).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 4);
+    assert_eq!(resumed.faults, first.faults, "fault cursor must survive the round-trip");
+    assert_eq!(resumed.sampler_stats, first.sampler_stats, "retry telemetry must round-trip");
+    resumed.run().unwrap();
+    assert_eq!(resumed.comm.up_bytes, full.comm.up_bytes, "resumed ledger diverged");
+    assert_eq!(resumed.faults, full.faults, "resumed fault stream diverged");
+    let (xa, ..) = resumed.opt.snapshot();
+    let (xb, ..) = full.opt.snapshot();
+    assert_eq!(xa, xb, "resumed params diverged from straight-through chaos run");
+}
+
+/// Older formats cannot carry the fault state, and say so instead of
+/// silently dropping it.
+#[test]
+fn checkpoint_v4_refuses_fault_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = Server::new(faulted_cfg(2)).unwrap();
+    s.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_faults_v4.bin");
+    let err = s.save_checkpoint_as(&path, 4).unwrap_err().to_string();
+    assert!(
+        err.contains("cannot carry fault-injection state"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Progressive truncation: every proper prefix of a real checkpoint
+/// fails to load with a "truncated at field" error naming the field,
+/// and — loading being parse-then-apply — leaves the server exactly
+/// as it was. The intact file still loads afterwards.
+#[test]
+fn truncated_checkpoint_fails_atomically() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut first = Server::new(faulted_cfg(2)).unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join("fedluar_ckpt_trunc.bin");
+    first.save_checkpoint(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    let mut resumed = Server::new(faulted_cfg(2)).unwrap();
+    let params_before: Vec<f32> = resumed.opt.snapshot().0.to_vec();
+    let tpath = std::env::temp_dir().join("fedluar_ckpt_trunc_cut.bin");
+    // ~200 evenly spaced cuts plus the edges; every one must fail with
+    // the truncation error and leave the server untouched
+    let step = (bytes.len() / 200).max(1);
+    let cuts: Vec<usize> =
+        (0..bytes.len()).step_by(step).chain([1, 3, bytes.len() - 1]).collect();
+    for cut in cuts {
+        std::fs::write(&tpath, &bytes[..cut]).unwrap();
+        let err = resumed.load_checkpoint(&tpath).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated at field `"),
+            "cut={cut}: expected a field-naming truncation error, got: {err}"
+        );
+        assert_eq!(resumed.round, 0, "cut={cut}: partial state was applied");
+    }
+    let params_after: Vec<f32> = resumed.opt.snapshot().0.to_vec();
+    assert_eq!(params_before, params_after, "a failed load must not touch the params");
+
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.round, 2, "the intact checkpoint must still load");
+}

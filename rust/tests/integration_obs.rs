@@ -176,7 +176,7 @@ impl SimServer {
             while self.rt.as_ref().unwrap().wants_dispatch() {
                 self.dispatch_next();
             }
-            self.rt.as_mut().unwrap().absorb_instant();
+            self.rt.as_mut().unwrap().absorb_instant().unwrap();
             if self.rt.as_ref().unwrap().ready() {
                 let batch = self.rt.as_mut().unwrap().take_aggregation();
                 let n = batch.uploads.len();

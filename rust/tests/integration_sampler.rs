@@ -225,7 +225,7 @@ fn staleness_cap_holds_stale_uploads_out_of_the_mean() {
 
 /// The per-client CSV is the fairness observable: one row per client
 /// whose participation counts reconcile exactly with the dispatch log,
-/// written through `obs::finish` with the pinned 8-column header.
+/// written through `obs::finish` with the pinned 10-column header.
 #[test]
 fn per_client_csv_reconciles_with_the_dispatch_log() {
     let dir = std::env::temp_dir().join("fedluar_sampler_csv_test");
@@ -267,11 +267,11 @@ fn per_client_csv_reconciles_with_the_dispatch_log() {
     let mut lines = text.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,mean_upload_s,up_bytes"
+        "client,up_mbps,speed_bucket,dispatches,absorbed,held_stale,mean_upload_s,up_bytes,retries,failures"
     );
     assert_eq!(text.lines().count(), 1 + NUM_CLIENTS);
     for line in text.lines().skip(1) {
-        assert_eq!(line.split(',').count(), 8, "{line}");
+        assert_eq!(line.split(',').count(), 10, "{line}");
     }
 }
 

@@ -11,7 +11,7 @@ use fedluar::fl::{DeltaFrameState, DELTA_MAX_REF_GAP};
 use fedluar::luar::{select_layers, LuarState};
 use fedluar::model::ModelMeta;
 use fedluar::net::wire::{self, WireHint};
-use fedluar::net::{speed_weights, ClientStats, SamplerCfg};
+use fedluar::net::{speed_weights, ClientStats, FailurePolicy, FaultKind, FaultsCfg, SamplerCfg};
 use fedluar::rng::Rng;
 use fedluar::tensor;
 use std::path::PathBuf;
@@ -642,6 +642,127 @@ fn prop_sampler_spec_roundtrips() {
         // f64 Display is shortest-roundtrip, so equality is exact
         let parsed = SamplerCfg::parse(&cfg.spec_string()).unwrap();
         assert_eq!(cfg, parsed, "seed {seed}: {}", cfg.spec_string());
+    }
+}
+
+// ---------------------------------------------------------------- faults
+
+/// Every fault spec round-trips through its config string (the
+/// checkpoint/config persistence path): randomized kinds,
+/// probabilities, window lengths, and failure-policy knobs all come
+/// back exactly (f64 Display is shortest-roundtrip).
+#[test]
+fn prop_fault_spec_roundtrips() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(13_000 + seed);
+        let policy = FailurePolicy {
+            max_retries: (rng.next_u64() % 8) as u32,
+            backoff_s: rng.f64() * 4.0 + 0.01,
+            timeout_s: rng.f64() * 60.0 + 0.1,
+            quorum: rng.gen_range(1, 12),
+        };
+        let cfg = match rng.gen_range(0, 5) {
+            // `off` carries no knobs, so only the default policy
+            // round-trips — exactly what `parse("off")` produces
+            0 => FaultsCfg::default(),
+            1 => FaultsCfg { kind: FaultKind::Drop { p: rng.f64() * 0.999 }, policy },
+            2 => FaultsCfg {
+                kind: FaultKind::Outage {
+                    p: rng.f64() * 0.999,
+                    len_s: rng.f64() * 100.0 + 0.01,
+                },
+                policy,
+            },
+            3 => FaultsCfg { kind: FaultKind::Corrupt { p: rng.f64() * 0.999 }, policy },
+            _ => FaultsCfg {
+                kind: FaultKind::Mixed {
+                    drop: rng.f64() * 0.33,
+                    outage: rng.f64() * 0.33,
+                    len_s: rng.f64() * 100.0 + 0.01,
+                    corrupt: rng.f64() * 0.33,
+                },
+                policy,
+            },
+        };
+        let parsed = FaultsCfg::parse(&cfg.spec_string()).unwrap();
+        assert_eq!(cfg, parsed, "seed {seed}: {}", cfg.spec_string());
+    }
+}
+
+/// Corruption-detector soundness across the wire surface: any single
+/// byte flip — any position, any non-zero mask — of any sealed frame
+/// flavor is rejected by the integrity trailer, and the unflipped
+/// frame always passes with its body intact.
+#[test]
+fn prop_fault_trailer_detects_any_single_byte_flip() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(14_000 + seed);
+        let meta = rand_meta(&mut rng);
+        let n = meta.num_layers();
+        let k = rng.gen_range(1, n + 1);
+        let mut subset = rng.sample_indices(n, k);
+        subset.sort_unstable();
+        let all: Vec<usize> = (0..n).collect();
+        let base: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let sparse_u: Vec<f32> =
+            base.iter().map(|&v| if rng.gen_bool(0.6) { 0.0 } else { v }).collect();
+
+        let mut frames: Vec<(&'static str, Vec<u8>)> = vec![
+            (
+                "dense",
+                wire::encode_update(&base, &meta, &subset, &WireHint::Dense)
+                    .unwrap()
+                    .as_bytes()
+                    .to_vec(),
+            ),
+            (
+                "sparse",
+                wire::encode_update(&sparse_u, &meta, &subset, &WireHint::Sparse)
+                    .unwrap()
+                    .as_bytes()
+                    .to_vec(),
+            ),
+            (
+                "bitmap",
+                wire::encode_update(&sparse_u, &meta, &all, &WireHint::Bitmap)
+                    .unwrap()
+                    .as_bytes()
+                    .to_vec(),
+            ),
+            (
+                "scalar",
+                wire::encode_update(&base, &meta, &all, &WireHint::Scalar { coef: rng.f32() })
+                    .unwrap()
+                    .as_bytes()
+                    .to_vec(),
+            ),
+            (
+                "broadcast",
+                wire::encode_broadcast(&base, &meta, &subset).unwrap().as_bytes().to_vec(),
+            ),
+        ];
+        for (name, frame) in &mut frames {
+            let body_len = frame.len();
+            wire::seal_trailer(frame);
+            assert_eq!(frame.len(), body_len + wire::TRAILER_LEN, "seed {seed}: {name}");
+            let body = wire::check_trailer(frame).unwrap();
+            assert_eq!(body.len(), body_len, "seed {seed}: {name} body mangled");
+            for _ in 0..50 {
+                let pos = rng.gen_range(0, frame.len());
+                let mask = rng.gen_range(1, 256) as u8;
+                let mut bad = frame.clone();
+                bad[pos] ^= mask;
+                assert!(
+                    wire::check_trailer(&bad).is_err(),
+                    "seed {seed}: {name}: flip at byte {pos} (mask {mask:#04x}) slipped through"
+                );
+            }
+            // truncation is caught too, not just flips
+            assert!(
+                wire::check_trailer(&frame[..frame.len() - 1]).is_err(),
+                "seed {seed}: {name}: truncated frame slipped through"
+            );
+        }
     }
 }
 
