@@ -31,6 +31,7 @@
 //! (the `version_gap` CSV column), and stale uploads are discounted
 //! polynomially — FedLUAR's recycled layers age by that gap.
 
+#![allow(clippy::disallowed_methods)] // demo driver reports real wall time (lint D2 allowlist)
 use fedluar::config::{Method, RunConfig};
 use fedluar::fl::Server;
 use fedluar::net::{LinkDist, RoundMode, Staleness};
@@ -55,6 +56,7 @@ fn run_with_net(
         cfg.net.compute_s = 0.25;
     }
     let mut server = Server::new(cfg)?;
+    // lint:allow(D2): demo driver reports real wall time, not simulated time
     let t0 = std::time::Instant::now();
     server.run()?;
     let wall = t0.elapsed().as_secs_f64();

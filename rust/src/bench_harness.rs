@@ -5,6 +5,7 @@
 //! Used by all `rust/benches/*.rs` (harness = false) binaries; their
 //! output is captured into `bench_output.txt` and EXPERIMENTS.md §Perf.
 
+#![allow(clippy::disallowed_methods)] // a benchmark harness is nothing but wall-clock reads
 use std::time::{Duration, Instant};
 
 pub struct Bench {

@@ -13,16 +13,19 @@ use super::UpdateCompressor;
 use crate::model::ModelMeta;
 use crate::net::wire::WireHint;
 use crate::rng::Rng;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 pub struct Binarize {
-    /// Per-client error-feedback residuals.
-    residuals: HashMap<usize, Vec<f32>>,
+    /// Per-client error-feedback residuals. BTreeMap, not HashMap: the
+    /// map is keyed per client so lookup order is fixed today, but any
+    /// future whole-map iteration (e.g. state snapshots) must already
+    /// be sorted to keep frames bit-identical (docs/lints.md, rule D1).
+    residuals: BTreeMap<usize, Vec<f32>>,
 }
 
 impl Binarize {
     pub fn new() -> Self {
-        Binarize { residuals: HashMap::new() }
+        Binarize { residuals: BTreeMap::new() }
     }
 }
 
@@ -88,7 +91,7 @@ mod tests {
         for lm in &meta.layers {
             let sl = &u[lm.offset..lm.offset + lm.size];
             let mut vals: Vec<f32> = sl.to_vec();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(|a, b| a.total_cmp(b));
             vals.dedup();
             assert!(vals.len() <= 2, "layer {} has {} distinct values", lm.name, vals.len());
             if vals.len() == 2 {
@@ -153,5 +156,28 @@ mod tests {
         let mut rng = Rng::seed_from_u64(3);
         let bytes = Binarize::new().compress(0, &mut u, &meta, 0, &mut rng);
         assert_eq!(bytes, 40_u64.div_ceil(8) + 2 * 4);
+    }
+
+    #[test]
+    fn nan_input_never_panics_and_is_deterministic() {
+        // Regression for the PR 7 bug class (docs/lints.md, rule D3):
+        // the two-valued check above used partial_cmp().unwrap(), which
+        // panicked if a NaN update reached the sort. The compressor
+        // itself propagates NaN through alpha (sign output stays ±NaN
+        // alpha) but must do so identically on every run.
+        let meta = toy_meta();
+        let run = || {
+            let mut bin = Binarize::new();
+            let mut rng = Rng::seed_from_u64(9);
+            let mut out = Vec::new();
+            for round in 0..3 {
+                let mut u = toy_update(6, meta.dim);
+                u[5] = f32::NAN;
+                bin.compress(0, &mut u, &meta, round, &mut rng);
+                out = u.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            }
+            out
+        };
+        assert_eq!(run(), run(), "NaN input must not perturb determinism");
     }
 }

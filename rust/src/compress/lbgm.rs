@@ -16,12 +16,15 @@ use crate::model::ModelMeta;
 use crate::net::wire::WireHint;
 use crate::rng::Rng;
 use crate::tensor;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 pub struct Lbgm {
     /// cos^2 threshold (the original's delta hyper-parameter).
     threshold: f32,
-    anchors: HashMap<usize, Vec<f32>>,
+    /// Per-client anchors. BTreeMap, not HashMap: anchor state shapes
+    /// every subsequent frame, so iteration over it must be sorted if
+    /// it ever happens (docs/lints.md, rule D1).
+    anchors: BTreeMap<usize, Vec<f32>>,
     pub scalar_rounds: u64,
     pub full_rounds: u64,
     /// The look-back coefficient of the most recent `compress` call,
@@ -34,7 +37,7 @@ impl Lbgm {
         assert!((0.0..=1.0).contains(&threshold));
         Lbgm {
             threshold,
-            anchors: HashMap::new(),
+            anchors: BTreeMap::new(),
             scalar_rounds: 0,
             full_rounds: 0,
             last_scalar: None,

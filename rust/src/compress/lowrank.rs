@@ -139,7 +139,7 @@ pub(crate) fn lowrank_plan(shape: &[usize], rank_ratio: f32) -> Option<(usize, u
         return None;
     }
     let full_rank = m.min(n);
-    let r = (((full_rank as f32) * rank_ratio).round() as usize).clamp(1, full_rank);
+    let r = crate::tensor::scaled_count(full_rank, rank_ratio, 1);
     if r < full_rank {
         Some((m, n, r))
     } else {

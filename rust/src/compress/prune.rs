@@ -39,10 +39,12 @@ impl Prune {
     }
 
     fn reconfigure(&mut self, d: usize) {
-        let keep = ((d as f32) * self.keep_ratio).round().max(1.0) as usize;
+        let keep = crate::tensor::scaled_count(d, self.keep_ratio, 1);
         let mut idx: Vec<usize> = (0..d).collect();
+        // total_cmp: NaN importance (from NaN updates) sorts as the
+        // largest magnitude — deterministic, never a sort panic (D3).
         idx.sort_by(|&a, &b| {
-            self.importance[b].partial_cmp(&self.importance[a]).unwrap().then(a.cmp(&b))
+            self.importance[b].total_cmp(&self.importance[a]).then(a.cmp(&b))
         });
         self.mask = vec![false; d];
         for &i in idx.iter().take(keep) {
@@ -153,5 +155,31 @@ mod tests {
         u[7] = 10.0;
         p.compress(0, &mut u, &meta, 5, &mut rng);
         assert!(u[7] != 0.0, "dominant coordinate pruned");
+    }
+
+    #[test]
+    fn nan_importance_never_panics_and_is_deterministic() {
+        // Regression for the PR 7 bug class (docs/lints.md, rule D3):
+        // partial_cmp().unwrap() panicked on NaN importance. With
+        // total_cmp, NaN accrues as the largest importance and the
+        // reconfigured mask is identical across runs.
+        let meta = toy_meta();
+        let run = || {
+            let mut p = Prune::new(0.25, 2);
+            let mut rng = Rng::seed_from_u64(7);
+            let mut last = Vec::new();
+            for round in 0..5 {
+                let mut u = toy_update(3, meta.dim);
+                u[3] = f32::NAN;
+                p.compress(0, &mut u, &meta, round, &mut rng);
+                last = u.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            }
+            (p.kept(), last)
+        };
+        let (kept_a, bits_a) = run();
+        let (kept_b, bits_b) = run();
+        assert_eq!(kept_a, 10, "keep_ratio 0.25 of 40");
+        assert_eq!(kept_a, kept_b);
+        assert_eq!(bits_a, bits_b, "NaN importance must not perturb determinism");
     }
 }

@@ -28,13 +28,15 @@ impl UpdateCompressor for TopK {
         _rng: &mut Rng,
     ) -> u64 {
         let d = update.len();
-        let k = (((d as f32) * self.keep_ratio).round() as usize).clamp(1, d);
+        let k = crate::tensor::scaled_count(d, self.keep_ratio, 1);
         if k == d {
             return (d as u64) * 4;
         }
         // Select the k-th largest |value| via select_nth on a copy.
+        // total_cmp: NaN magnitudes order as the largest — the partition
+        // never panics and the threshold is deterministic (D3).
         let mut mags: Vec<f32> = update.iter().map(|v| v.abs()).collect();
-        let (_, kth, _) = mags.select_nth_unstable_by(d - k, |a, b| a.partial_cmp(b).unwrap());
+        let (_, kth, _) = mags.select_nth_unstable_by(d - k, |a, b| a.total_cmp(b));
         let thresh = *kth;
         let mut kept = 0usize;
         for v in update.iter_mut() {
@@ -92,5 +94,29 @@ mod tests {
         let mut rng = Rng::seed_from_u64(2);
         TopK::new(0.0).compress(0, &mut u, &meta, 0, &mut rng);
         assert_eq!(u.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn nan_lanes_never_panic_and_zero_out() {
+        // Regression for the PR 7 bug class (docs/lints.md, rule D3):
+        // partial_cmp().unwrap() panicked when a NaN magnitude hit the
+        // selection. With total_cmp the NaN sorts above the threshold,
+        // but `NaN.abs() >= thresh` is false, so NaN lanes are zeroed —
+        // the frame stays finite and deterministic.
+        let meta = toy_meta();
+        let run = || {
+            let mut u = toy_update(5, meta.dim);
+            u[0] = f32::NAN;
+            u[17] = f32::NAN;
+            let mut rng = Rng::seed_from_u64(4);
+            TopK::new(0.25).compress(0, &mut u, &meta, 0, &mut rng);
+            u.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same-seed compress must be bit-identical");
+        assert!(a.iter().all(|&bits| !f32::from_bits(bits).is_nan()), "NaN leaked into frame");
+        let nz = a.iter().filter(|&&bits| f32::from_bits(bits) != 0.0).count();
+        assert!(nz <= 10, "kept {nz} > k");
     }
 }

@@ -5,6 +5,7 @@
 //! clients (alpha=0.1 is the paper's "highly non-IID" setting).
 
 use crate::rng::Rng;
+use crate::tensor;
 
 /// For each of `k` classes, the per-client sample counts.
 /// Returns `assignment[class][client] = count`, with
@@ -29,11 +30,14 @@ pub fn dirichlet_partition(
 /// Apportion `total` integer samples to proportions `p` (sums exactly).
 fn largest_remainder(p: &[f64], total: usize) -> Vec<usize> {
     let raw: Vec<f64> = p.iter().map(|x| x * total as f64).collect();
-    let mut counts: Vec<usize> = raw.iter().map(|x| x.floor() as usize).collect();
+    let mut counts: Vec<usize> = raw.iter().map(|&x| tensor::floor_count(x)).collect();
     let assigned: usize = counts.iter().sum();
     let mut remainders: Vec<(usize, f64)> =
         raw.iter().enumerate().map(|(i, x)| (i, x - x.floor())).collect();
-    remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    // total_cmp: a NaN proportion can never panic the sort; NaN sorts
+    // as the largest remainder, deterministically (same PR 7 bug class
+    // as luar/select.rs — see docs/lints.md, rule D3).
+    remainders.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (i, _) in remainders.iter().take(total - assigned) {
         counts[*i] += 1;
     }

@@ -173,7 +173,8 @@ mod tests {
             Features::I32(v) => v,
             _ => unreachable!(),
         };
-        let mut hist = std::collections::HashMap::new();
+        // BTreeMap keeps even test-side aggregation order-stable (D1).
+        let mut hist = std::collections::BTreeMap::new();
         for &t in &v {
             *hist.entry(t).or_insert(0usize) += 1;
         }

@@ -55,16 +55,17 @@ pub fn fig1(args: &Args) -> Result<()> {
             rows.push(format!("{model},{name},{g},{w},{r}"));
         }
         // the paper's point: argmin over |grad| != argmin over ratio
+        // (total_cmp: a NaN norm sorts last instead of panicking — D3)
         let min_g = stats
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
             .map(|(i, s)| (i, s.0.clone()))
             .unwrap();
         let min_r = stats
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1 .3.partial_cmp(&b.1 .3).unwrap())
+            .min_by(|a, b| a.1 .3.total_cmp(&b.1 .3))
             .map(|(i, s)| (i, s.0.clone()))
             .unwrap();
         println!(

@@ -12,6 +12,7 @@
 //!   --quick        small federation (fast smoke reproduction)
 //!   --fresh        ignore the run cache
 
+#![allow(clippy::disallowed_methods)] // experiment driver reports real wall time per run
 mod figs;
 mod sweeps;
 mod tables;

@@ -24,6 +24,7 @@ pub mod data;
 pub mod exp;
 pub mod fl;
 pub mod json;
+pub mod lint;
 pub mod luar;
 pub mod metrics;
 pub mod model;

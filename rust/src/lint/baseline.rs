@@ -1,0 +1,72 @@
+//! `lint-baseline.txt` handling: grandfathered findings, one line per
+//! `RULE path` pair (forward slashes, `#` comments and blank lines
+//! allowed). An entry suppresses every finding of RULE in that file;
+//! an entry that matches nothing is *stale* and fails the run, so the
+//! baseline can only shrink as sites are fixed.
+
+use super::Finding;
+use super::rules;
+use anyhow::{Result, bail};
+
+/// Parse baseline text into (rule, path) entries, validating rule ids.
+pub fn parse(src: &str) -> Result<Vec<(String, String)>> {
+    let mut entries = Vec::new();
+    for (n, raw) in src.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(path), None) = (parts.next(), parts.next(), parts.next()) else {
+            bail!("baseline line {}: expected `RULE path`, got `{line}`", n + 1);
+        };
+        if rules::rule_by_id(rule).is_none() {
+            bail!("baseline line {}: unknown rule `{rule}`", n + 1);
+        }
+        entries.push((rule.to_string(), path.to_string()));
+    }
+    Ok(entries)
+}
+
+/// Remove baselined findings. Returns (count removed, stale entries —
+/// baseline lines that matched no finding and must be deleted).
+pub fn apply(
+    findings: &mut Vec<Finding>,
+    entries: &[(String, String)],
+) -> (usize, Vec<String>) {
+    let mut baselined = 0usize;
+    let mut stale = Vec::new();
+    for (rule, path) in entries {
+        let before = findings.len();
+        findings.retain(|f| !(&f.rule == rule && &f.path == path));
+        let matched = before - findings.len();
+        if matched == 0 {
+            stale.push(format!("{rule} {path}"));
+        }
+        baselined += matched;
+    }
+    (baselined, stale)
+}
+
+/// Render findings back into baseline format (sorted, deduplicated) —
+/// what `fedluar-lint --write-baseline` emits. A1 (malformed
+/// annotation) findings are never grandfathered: fix the annotation.
+pub fn render(findings: &[Finding]) -> String {
+    let mut lines: Vec<String> = findings
+        .iter()
+        .filter(|f| f.rule != rules::ANNOTATION_RULE)
+        .map(|f| format!("{} {}", f.rule, f.path))
+        .collect();
+    lines.sort();
+    lines.dedup();
+    let mut out = String::from(
+        "# fedluar-lint baseline: grandfathered findings, `RULE path` per line.\n\
+         # Entries may only be removed (a stale entry fails the lint run).\n\
+         # See docs/lints.md.\n",
+    );
+    for l in &lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    out
+}

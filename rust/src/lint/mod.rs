@@ -1,0 +1,222 @@
+//! fedluar-lint — in-tree static analysis for the repo's determinism
+//! and panic-safety discipline (binary: `cargo run --bin fedluar-lint`).
+//!
+//! Every equivalence claim in this repro (recycling reproduces Fig. 3,
+//! `off` faults are bit-identical, async `c=all` == sync FedAvg) rests
+//! on invariants no general linter can check: no unordered iteration
+//! upstream of frames/CSVs/RNG, no wall clock on simulated paths, no
+//! NaN-unsafe float orderings, no saturating casts in codecs, no
+//! panics on library paths. This module mechanizes them as a
+//! data-driven rule catalog ([`rules::CATALOG`]) over a lightweight
+//! tokenizer ([`tokens`]), with inline `// lint:allow(RULE): reason`
+//! annotations and a shrinking [`baseline`] for grandfathered sites.
+//! The full catalog is documented in `docs/lints.md`.
+
+pub mod baseline;
+pub mod rules;
+pub mod tokens;
+
+use anyhow::{Context, Result};
+use rules::{ANNOTATION_RULE, CATALOG, in_scope, run_matcher};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Result of linting one source file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    pub findings: Vec<Finding>,
+    /// Matches silenced by a valid inline annotation.
+    pub suppressed: usize,
+}
+
+/// Result of linting the whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+    pub baselined: usize,
+    /// Baseline entries that matched nothing (must be deleted).
+    pub stale: Vec<String>,
+    pub files: usize,
+}
+
+/// A parsed `// lint:allow(RULE): reason` annotation, or the error
+/// that makes it malformed (reported as pseudo-rule A1).
+struct Annotation {
+    line: usize,
+    rule: String,
+    error: Option<String>,
+}
+
+/// Lint one file's source. `path_rel` is the repo-relative path with
+/// forward slashes — it selects which rules are in scope.
+pub fn lint_source(path_rel: &str, src: &str) -> FileLint {
+    let (mut toks, comments) = tokens::tokenize(src);
+    tokens::mark_test_code(&mut toks);
+
+    let mut out = FileLint::default();
+    let anns = parse_annotations(&comments);
+
+    // A valid annotation covers its own line (trailing-comment style)
+    // and the first following line that has any token.
+    let mut covered: BTreeSet<(String, usize)> = BTreeSet::new();
+    for a in &anns {
+        match &a.error {
+            Some(e) => out.findings.push(Finding {
+                rule: ANNOTATION_RULE.to_string(),
+                path: path_rel.to_string(),
+                line: a.line,
+                msg: format!("malformed lint:allow annotation: {e}"),
+            }),
+            None => {
+                covered.insert((a.rule.clone(), a.line));
+                if let Some(next) =
+                    toks.iter().map(|t| t.line).filter(|&l| l > a.line).min()
+                {
+                    covered.insert((a.rule.clone(), next));
+                }
+            }
+        }
+    }
+
+    for rule in CATALOG {
+        if !in_scope(rule, path_rel) {
+            continue;
+        }
+        for (idx, msg) in run_matcher(&rule.matcher, &toks) {
+            let Some(tok) = toks.get(idx) else { continue };
+            if rule.skip_test_code && tok.in_test {
+                continue;
+            }
+            if covered.contains(&(rule.id.to_string(), tok.line)) {
+                out.suppressed += 1;
+                continue;
+            }
+            out.findings.push(Finding {
+                rule: rule.id.to_string(),
+                path: path_rel.to_string(),
+                line: tok.line,
+                msg,
+            });
+        }
+    }
+    out.findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    out
+}
+
+fn parse_annotations(comments: &[tokens::Comment]) -> Vec<Annotation> {
+    const KEY: &str = "lint:allow";
+    let mut out = Vec::new();
+    for c in comments {
+        // The key must lead the comment (modulo whitespace): prose
+        // that merely *mentions* the annotation syntax — including
+        // `///` doc comments, whose text starts with `/` — never
+        // parses as one.
+        let t = c.text.trim_start();
+        if !t.starts_with(KEY) {
+            continue;
+        }
+        let rest = &t[KEY.len()..];
+        let mut ann =
+            Annotation { line: c.line, rule: String::new(), error: None };
+        if !rest.starts_with('(') {
+            ann.error = Some("expected `(RULE)` after lint:allow".to_string());
+            out.push(ann);
+            continue;
+        }
+        let Some(close) = rest.find(')') else {
+            ann.error = Some("unclosed `(` in lint:allow".to_string());
+            out.push(ann);
+            continue;
+        };
+        let rule = rest[1..close].trim();
+        if rules::rule_by_id(rule).is_none() {
+            ann.error = Some(format!("unknown rule `{rule}`"));
+            out.push(ann);
+            continue;
+        }
+        let after = &rest[close + 1..];
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            ann.error =
+                Some(format!("lint:allow({rule}) needs `: <reason>`"));
+            out.push(ann);
+            continue;
+        }
+        ann.rule = rule.to_string();
+        out.push(ann);
+    }
+    out
+}
+
+/// The directories fedluar-lint walks, relative to the repo root.
+pub const WALK_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lint every `.rs` file under the walk roots (sorted, recursive).
+/// `rust/tests/lint_fixtures/` is skipped — its files are violations
+/// on purpose. No baseline is applied here; see [`apply_baseline`].
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for r in WALK_ROOTS {
+        collect_rs(&root.join(r), &mut files)?;
+    }
+    files.sort();
+    let mut report = Report::default();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel.contains("lint_fixtures") {
+            continue;
+        }
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {rel}"))?;
+        let fl = lint_source(&rel, &src);
+        report.findings.extend(fl.findings);
+        report.suppressed += fl.suppressed;
+        report.files += 1;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule)));
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(()); // tolerate absent roots (e.g. no examples/)
+    }
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Apply `lint-baseline.txt` text to a tree report: grandfathered
+/// findings are removed and counted, entries that matched nothing are
+/// recorded as stale (the caller must treat stale as failure).
+pub fn apply_baseline(report: &mut Report, baseline_src: &str) -> Result<()> {
+    let entries = baseline::parse(baseline_src)?;
+    let (n, stale) = baseline::apply(&mut report.findings, &entries);
+    report.baselined += n;
+    report.stale.extend(stale);
+    Ok(())
+}

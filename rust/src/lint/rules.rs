@@ -1,0 +1,289 @@
+//! The fedluar-lint rule catalog. Data-driven: a rule is a scope
+//! (path prefixes), a token matcher, and documentation strings; adding
+//! a rule for a future PR means adding one entry to [`CATALOG`] (and a
+//! section to `docs/lints.md` — `integration_lint` cross-checks that
+//! every catalog id is documented).
+
+use super::tokens::Tok;
+
+/// One lint rule. Paths are repo-relative with forward slashes; a file
+/// is in scope when it starts with any `include` prefix and no
+/// `exclude` prefix. `skip_test_code` drops matches inside
+/// `#[cfg(test)]` / `#[test]` items.
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub rationale: &'static str,
+    pub advice: &'static str,
+    pub include: &'static [&'static str],
+    pub exclude: &'static [&'static str],
+    pub skip_test_code: bool,
+    pub matcher: Matcher,
+}
+
+/// Pseudo-rule id reported for malformed `lint:allow` annotations
+/// (bad syntax, unknown rule, missing reason). Not itself suppressible.
+pub const ANNOTATION_RULE: &str = "A1";
+
+pub enum Matcher {
+    /// Any identifier in the list (D1: unordered collections).
+    AnyIdent(&'static [&'static str]),
+    /// `Instant::now` call paths or any `SystemTime` mention (D2).
+    WallClock,
+    /// `partial_cmp(..)` chained into `unwrap`/`unwrap_or`/
+    /// `unwrap_or_else`/`expect` (D3). `fn partial_cmp` trait impls
+    /// are exempt.
+    PartialCmpUnwrap,
+    /// `.round()/.floor()/.ceil()/.trunc()` immediately cast with
+    /// `as <int>` (D4) — the saturating-cast footgun.
+    FloatRoundCast,
+    /// `.unwrap(` / `.expect(` and the `panic!`/`unreachable!`/
+    /// `todo!`/`unimplemented!` macros (P1).
+    PanicFamily,
+    /// One of the listed identifiers directly indexed with `[` (W1:
+    /// raw slicing of undecoded frame bytes).
+    RawIndex(&'static [&'static str]),
+}
+
+pub const CATALOG: &[Rule] = &[
+    Rule {
+        id: "D1",
+        title: "unordered collection in a determinism-critical module",
+        rationale: "HashMap/HashSet iteration order is randomized per process; any walk \
+                    of one that reaches the comm ledger, history CSVs, RNG draws, or wire \
+                    frames breaks the repo's bit-exact equivalence suites.",
+        advice: "use BTreeMap/BTreeSet, or collect + sort before iterating; annotate \
+                 `// lint:allow(D1): <why order cannot leak>` for keyed-lookup-only maps",
+        include: &[
+            "rust/src/net/",
+            "rust/src/compress/",
+            "rust/src/data/",
+            "rust/src/luar/",
+            "rust/src/fl/",
+            "rust/src/exp/",
+            "rust/src/obs/",
+            "rust/src/comm.rs",
+            "rust/src/metrics.rs",
+            "rust/src/rng.rs",
+        ],
+        exclude: &[],
+        skip_test_code: true,
+        matcher: Matcher::AnyIdent(&["HashMap", "HashSet"]),
+    },
+    Rule {
+        id: "D2",
+        title: "wall clock outside the allowlisted modules",
+        rationale: "simulation code must use the sim clock (net/sched.rs); an \
+                    Instant::now/SystemTime read on a simulated path makes schedules, \
+                    stragglers, and CSVs machine-dependent.",
+        advice: "thread the sim clock in; wall-clock reads belong in obs/, \
+                 bench_harness.rs, runtime/engine.rs, main.rs, exp/mod.rs",
+        include: &[""],
+        exclude: &[
+            "rust/src/obs/",
+            "rust/src/bench_harness.rs",
+            "rust/src/runtime/engine.rs",
+            "rust/src/main.rs",
+            "rust/src/exp/mod.rs",
+            "rust/benches/",
+        ],
+        skip_test_code: true,
+        matcher: Matcher::WallClock,
+    },
+    Rule {
+        id: "D3",
+        title: "NaN-unsafe float ordering (the PR 7 bug class)",
+        rationale: "partial_cmp(..).unwrap() panics on NaN and unwrap_or(Equal) makes \
+                    NaN compare equal to everything, so sort results depend on NaN \
+                    position; total_cmp gives a deterministic total order.",
+        advice: "use f32::total_cmp / f64::total_cmp (applies in test code too — \
+                 test sorts panic the same way)",
+        include: &[""],
+        exclude: &[],
+        skip_test_code: false,
+        matcher: Matcher::PartialCmpUnwrap,
+    },
+    Rule {
+        id: "D4",
+        title: "bare float->int cast on a codec/quantizer path",
+        rationale: "`as` saturates silently and maps NaN to 0, which turns a bad range \
+                    into wrong-but-plausible wire indices; the clamping helpers make \
+                    the degenerate cases explicit.",
+        advice: "use tensor::scaled_count / tensor::floor_count / \
+                 tensor::quant_grid_index (or add a helper there)",
+        include: &["rust/src/compress/", "rust/src/net/", "rust/src/data/"],
+        exclude: &[],
+        skip_test_code: true,
+        matcher: Matcher::FloatRoundCast,
+    },
+    Rule {
+        id: "P1",
+        title: "panic path in non-test library code",
+        rationale: "a panic in library code kills a whole federated run (and under the \
+                    fault-injection harness, masks the fault being tested); library \
+                    paths must return Result or justify the invariant.",
+        advice: "return Result, or annotate `// lint:allow(P1): <invariant>`; \
+                 grandfathered sites live in lint-baseline.txt and may only shrink",
+        include: &["rust/src/"],
+        exclude: &[],
+        skip_test_code: true,
+        matcher: Matcher::PanicFamily,
+    },
+    Rule {
+        id: "W1",
+        title: "unchecked frame slicing in the wire decoder",
+        rationale: "decode paths handle attacker-shaped (fault-injected) bytes; every \
+                    slice of the raw frame must be length-checked first or a truncated \
+                    frame panics instead of erroring.",
+        advice: "route reads through Cur::take/array (already bounds-checked); \
+                 annotate the checked choke points with `// lint:allow(W1): <check>`",
+        include: &["rust/src/net/wire.rs"],
+        exclude: &[],
+        skip_test_code: true,
+        matcher: Matcher::RawIndex(&["frame", "buf"]),
+    },
+];
+
+pub fn rule_by_id(id: &str) -> Option<&'static Rule> {
+    CATALOG.iter().find(|r| r.id == id)
+}
+
+pub fn in_scope(rule: &Rule, path: &str) -> bool {
+    rule.include.iter().any(|p| path.starts_with(p))
+        && !rule.exclude.iter().any(|p| path.starts_with(p))
+}
+
+/// Run a matcher over the token stream; returns (token index, message)
+/// per raw match. Test-code and annotation filtering happen in the
+/// engine, which owns the per-line context.
+pub fn run_matcher(m: &Matcher, toks: &[Tok]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    match m {
+        Matcher::AnyIdent(names) => {
+            for (i, t) in toks.iter().enumerate() {
+                if t.is_ident && names.contains(&t.text.as_str()) {
+                    out.push((i, format!("`{}` has unordered iteration", t.text)));
+                }
+            }
+        }
+        Matcher::WallClock => {
+            for i in 0..n {
+                if !toks[i].is_ident {
+                    continue;
+                }
+                if toks[i].text == "SystemTime" {
+                    out.push((i, "`SystemTime` read".to_string()));
+                } else if toks[i].text == "Instant"
+                    && i + 3 < n
+                    && toks[i + 1].text == ":"
+                    && toks[i + 2].text == ":"
+                    && toks[i + 3].text == "now"
+                {
+                    out.push((i, "`Instant::now()` on a simulated path".to_string()));
+                }
+            }
+        }
+        Matcher::PartialCmpUnwrap => {
+            const SINKS: [&str; 4] = ["unwrap", "unwrap_or", "unwrap_or_else", "expect"];
+            for i in 0..n {
+                if !(toks[i].is_ident && toks[i].text == "partial_cmp") {
+                    continue;
+                }
+                if i > 0 && toks[i - 1].text == "fn" {
+                    continue; // a PartialOrd impl, not a call site
+                }
+                if i + 1 >= n || toks[i + 1].text != "(" {
+                    continue;
+                }
+                let Some(close) = match_paren(toks, i + 1) else { continue };
+                if close + 2 < n
+                    && toks[close + 1].text == "."
+                    && SINKS.contains(&toks[close + 2].text.as_str())
+                {
+                    out.push((
+                        i,
+                        format!(
+                            "`partial_cmp(..).{}(..)` — NaN panics or aliases; use `total_cmp`",
+                            toks[close + 2].text
+                        ),
+                    ));
+                }
+            }
+        }
+        Matcher::FloatRoundCast => {
+            const ROUNDERS: [&str; 4] = ["round", "floor", "ceil", "trunc"];
+            const INTS: [&str; 10] =
+                ["u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize"];
+            for i in 0..n.saturating_sub(5) {
+                if toks[i].text == "."
+                    && ROUNDERS.contains(&toks[i + 1].text.as_str())
+                    && toks[i + 2].text == "("
+                    && toks[i + 3].text == ")"
+                    && toks[i + 4].text == "as"
+                    && INTS.contains(&toks[i + 5].text.as_str())
+                {
+                    out.push((
+                        i + 1,
+                        format!(
+                            "`.{}() as {}` saturating cast on a codec path",
+                            toks[i + 1].text,
+                            toks[i + 5].text
+                        ),
+                    ));
+                }
+            }
+        }
+        Matcher::PanicFamily => {
+            const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+            for i in 0..n {
+                if !toks[i].is_ident {
+                    continue;
+                }
+                let t = toks[i].text.as_str();
+                if (t == "unwrap" || t == "expect")
+                    && i > 0
+                    && toks[i - 1].text == "."
+                    && i + 1 < n
+                    && toks[i + 1].text == "("
+                {
+                    out.push((i, format!("`.{t}()` on a library path")));
+                } else if MACROS.contains(&t) && i + 1 < n && toks[i + 1].text == "!" {
+                    out.push((i, format!("`{t}!` on a library path")));
+                }
+            }
+        }
+        Matcher::RawIndex(names) => {
+            for i in 0..n.saturating_sub(1) {
+                if toks[i].is_ident
+                    && names.contains(&toks[i].text.as_str())
+                    && toks[i + 1].text == "["
+                {
+                    out.push((
+                        i,
+                        format!("raw `{}[..]` slice without a visible bounds check", toks[i].text),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Index of the `)` matching the `(` at `open`, if any.
+fn match_paren(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}

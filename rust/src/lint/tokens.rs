@@ -1,0 +1,316 @@
+//! A lightweight Rust tokenizer — just enough lexical structure for
+//! the fedluar-lint rule matchers (see `rules.rs`): identifiers,
+//! punctuation, and line numbers, with comments captured separately
+//! (annotations live in line comments) and string/char/lifetime
+//! literals consumed so their contents can never fake a match. This is
+//! deliberately NOT a full lexer; it only has to be conservative
+//! enough that rule matchers see real code tokens.
+
+/// One lexical token. `in_test` is set by [`mark_test_code`] for
+/// tokens inside `#[cfg(test)]` / `#[test]` items.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub is_ident: bool,
+    pub line: usize,
+    pub in_test: bool,
+}
+
+/// A `//` line comment (text after the slashes, line it starts on).
+/// Block comments are consumed but not recorded: `lint:allow`
+/// annotations are only honored in line comments.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Placeholder text for consumed string literals: keeps the token
+/// stream shape without exposing literal contents to the matchers.
+pub const STR_TOK: &str = "\u{1}str";
+
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: b[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        // ---- block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // ---- string-likes: "...", r"...", r#"..."#, b"...", br#"..."#
+        if let Some(end) = string_like_end(&b, i) {
+            let tline = line;
+            for &ch in b.get(i..end).into_iter().flatten() {
+                if ch == '\n' {
+                    line += 1;
+                }
+            }
+            toks.push(Tok { text: STR_TOK.to_string(), is_ident: false, line: tline, in_test: false });
+            i = end;
+            continue;
+        }
+        // ---- char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\u{..}'
+                let mut j = i + 3;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { text: "'c'".to_string(), is_ident: false, line, in_test: false });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && (b[i + 1].is_alphanumeric() || b[i + 1] == '_') && b[i + 2] == '\'' {
+                toks.push(Tok { text: "'c'".to_string(), is_ident: false, line, in_test: false });
+                i += 3;
+                continue;
+            }
+            // lifetime: consume the quote and the ident; emit nothing
+            // (no matcher keys on lifetimes).
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        // ---- number
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            // fractional part: consume '.' only when a digit follows
+            // (so `12..16` stays `12`, `.`, `.`, `16`).
+            if j + 1 < n && b[j] == '.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+            }
+            let text: String = b[start..j].iter().collect();
+            toks.push(Tok { text, is_ident: false, line, in_test: false });
+            i = j;
+            continue;
+        }
+        // ---- identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            toks.push(Tok { text, is_ident: true, line, in_test: false });
+            i = j;
+            continue;
+        }
+        // ---- single-char punctuation
+        toks.push(Tok { text: c.to_string(), is_ident: false, line, in_test: false });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// If a string literal starts at `i`, return the index one past its
+/// closing quote. Handles `"`, `b"`, and raw forms `r#*"` / `br#*"`.
+fn string_like_end(b: &[char], i: usize) -> Option<usize> {
+    let n = b.len();
+    let c = b[i];
+    if c == '"' {
+        return Some(plain_string_end(b, i + 1));
+    }
+    if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+        return Some(plain_string_end(b, i + 2));
+    }
+    // raw strings: r"..." / r#"..."# / br"..." / br#"..."#
+    let mut k = i;
+    if c == 'b' && i + 1 < n && b[i + 1] == 'r' {
+        k = i + 2;
+    } else if c == 'r' {
+        k = i + 1;
+    } else {
+        return None;
+    }
+    let mut hashes = 0usize;
+    while k < n && b[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || b[k] != '"' {
+        return None; // raw identifier (r#fn) or plain ident starting r/b
+    }
+    // scan for `"` followed by `hashes` hash marks
+    let mut j = k + 1;
+    while j < n {
+        if b[j] == '"' {
+            let mut h = 0usize;
+            while j + 1 + h < n && b[j + 1 + h] == '#' && h < hashes {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// End of a non-raw string body starting just after the opening quote.
+fn plain_string_end(b: &[char], mut j: usize) -> usize {
+    let n = b.len();
+    while j < n {
+        if b[j] == '\\' {
+            j += 2;
+        } else if b[j] == '"' {
+            return j + 1;
+        } else {
+            j += 1;
+        }
+    }
+    n
+}
+
+/// Mark tokens inside `#[cfg(test)]` / `#[test]` items with
+/// `in_test = true`, so rules with `skip_test_code` ignore them.
+/// Recognizes the attribute, skips any further attributes, then marks
+/// through the item's brace block (or to the `;` of a block-less item).
+pub fn mark_test_code(toks: &mut [Tok]) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            if let Some((attr_end, is_test)) = attr_span(toks, i + 1) {
+                if is_test {
+                    mark_item(toks, i, attr_end + 1);
+                }
+                i = attr_end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Given the index of an attribute's `[`, return (index of matching
+/// `]`, whether the attribute marks test-only code). Test markers are
+/// `#[test]` and `#[cfg(..test..)]` without a `not`.
+fn attr_span(toks: &[Tok], open: usize) -> Option<(usize, bool)> {
+    let n = toks.len();
+    let mut depth = 0usize;
+    let mut idents: Vec<&str> = Vec::new();
+    let mut j = open;
+    while j < n {
+        match toks[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    let is_test = match idents.first() {
+                        Some(&"test") => idents.len() == 1,
+                        Some(&"cfg") => {
+                            idents.iter().any(|&s| s == "test")
+                                && !idents.iter().any(|&s| s == "not")
+                        }
+                        _ => false,
+                    };
+                    return Some((j, is_test));
+                }
+            }
+            _ => {
+                if toks[j].is_ident {
+                    idents.push(&toks[j].text);
+                }
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Mark from `start` (the `#` of the test attribute) through the end
+/// of the annotated item: skip further attributes, then the first `{`
+/// opens the item body (mark to its matching `}`); a `;` first means a
+/// block-less item.
+fn mark_item(toks: &mut [Tok], start: usize, mut k: usize) {
+    let n = toks.len();
+    // skip stacked attributes (#[test] #[ignore] fn ...)
+    while k + 1 < n && toks[k].text == "#" && toks[k + 1].text == "[" {
+        match attr_span(toks, k + 1) {
+            Some((end, _)) => k = end + 1,
+            None => return,
+        }
+    }
+    let mut j = k;
+    while j < n {
+        if toks[j].text == ";" {
+            break;
+        }
+        if toks[j].text == "{" {
+            let mut depth = 0usize;
+            while j < n {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            break;
+        }
+        j += 1;
+    }
+    for t in toks.iter_mut().take((j + 1).min(n)).skip(start) {
+        t.in_test = true;
+    }
+}

@@ -1,0 +1,177 @@
+//! fedluar-lint: the repo's in-tree determinism & panic-safety linter.
+//! See `docs/lints.md` for the rule catalog and suppression workflow.
+//!
+//! Exit codes: 0 clean, 1 findings or stale baseline, 2 usage error.
+
+use fedluar::lint;
+use fedluar::lint::rules::{ANNOTATION_RULE, CATALOG};
+use std::path::PathBuf;
+
+const HELP: &str = "\
+fedluar-lint — in-tree determinism & panic-safety lint
+
+USAGE:
+    fedluar-lint [OPTIONS]
+
+OPTIONS:
+    --root <DIR>        repo root to lint (default: .)
+    --baseline <FILE>   baseline file (default: <root>/lint-baseline.txt
+                        when present; pass --no-baseline to skip)
+    --no-baseline       ignore any baseline file
+    --write-baseline    rewrite the baseline from current findings
+                        (for grandfathering during large refactors)
+    --list-rules        print the rule catalog and exit
+    -h, --help          print this help and exit
+
+Walks rust/src, rust/tests, rust/benches, examples/ (skipping
+rust/tests/lint_fixtures/). Suppress a single finding with
+`// lint:allow(RULE): reason` on or directly above the offending line;
+grandfathered findings live in lint-baseline.txt (one `RULE path` per
+line) and may only shrink — a stale entry fails the run.
+
+Rules are documented in docs/lints.md; `--list-rules` summarizes them.
+
+EXIT CODES:
+    0  clean
+    1  findings, malformed annotations, or stale baseline entries
+    2  usage or I/O error
+";
+
+struct Opts {
+    root: PathBuf,
+    baseline: Option<PathBuf>,
+    no_baseline: bool,
+    write_baseline: bool,
+    list_rules: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::from("."),
+        baseline: None,
+        no_baseline: false,
+        write_baseline: false,
+        list_rules: false,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => opts.root = PathBuf::from(v),
+                None => return Err("--root needs a value".to_string()),
+            },
+            "--baseline" => match it.next() {
+                Some(v) => opts.baseline = Some(PathBuf::from(v)),
+                None => return Err("--baseline needs a value".to_string()),
+            },
+            "--no-baseline" => opts.no_baseline = true,
+            "--write-baseline" => opts.write_baseline = true,
+            "--list-rules" => opts.list_rules = true,
+            "-h" | "--help" => {
+                print!("{HELP}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown option `{other}` (see --help)")),
+        }
+    }
+    Ok(opts)
+}
+
+fn list_rules() {
+    println!("fedluar-lint rule catalog (full docs: docs/lints.md)\n");
+    for r in CATALOG {
+        println!("{}  {}", r.id, r.title);
+        println!("    why:  {}", r.rationale);
+        println!("    fix:  {}", r.advice);
+        let test_note = if r.skip_test_code { "skips #[cfg(test)] code" } else { "applies in tests too" };
+        println!("    scope: {:?} minus {:?} ({test_note})\n", r.include, r.exclude);
+    }
+    println!("{ANNOTATION_RULE}  malformed lint:allow annotation (always on, not suppressible)");
+}
+
+fn run(opts: &Opts) -> Result<i32, String> {
+    let mut report =
+        lint::lint_tree(&opts.root).map_err(|e| format!("{e:#}"))?;
+
+    let baseline_path = match (&opts.baseline, opts.no_baseline) {
+        (_, true) => None,
+        (Some(p), _) => {
+            if !p.is_file() {
+                return Err(format!("baseline {} not found", p.display()));
+            }
+            Some(p.clone())
+        }
+        (None, _) => {
+            let p = opts.root.join("lint-baseline.txt");
+            p.is_file().then_some(p)
+        }
+    };
+
+    if opts.write_baseline {
+        let path = opts.root.join("lint-baseline.txt");
+        let text = lint::baseline::render(&report.findings);
+        std::fs::write(&path, text)
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        println!(
+            "fedluar-lint: wrote {} ({} entries grandfathered)",
+            path.display(),
+            report.findings.len()
+        );
+        return Ok(0);
+    }
+
+    if let Some(p) = baseline_path {
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        lint::apply_baseline(&mut report, &text).map_err(|e| format!("{e:#}"))?;
+    }
+
+    for f in &report.findings {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    for s in &report.stale {
+        println!("stale baseline entry (site fixed — delete the line): {s}");
+    }
+    println!(
+        "fedluar-lint: {} files, {} findings, {} baselined, {} annotation-suppressed{}",
+        report.files,
+        report.findings.len(),
+        report.baselined,
+        report.suppressed,
+        if report.stale.is_empty() {
+            String::new()
+        } else {
+            format!(", {} STALE baseline entries", report.stale.len())
+        }
+    );
+    if report.findings.is_empty() && report.stale.is_empty() {
+        Ok(0)
+    } else {
+        Ok(1)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match parse_args(&args) {
+        Err(e) => {
+            eprintln!("fedluar-lint: {e}");
+            2
+        }
+        Ok(opts) => {
+            if opts.list_rules {
+                list_rules();
+                0
+            } else {
+                match run(&opts) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("fedluar-lint: {e}");
+                        2
+                    }
+                }
+            }
+        }
+    };
+    std::process::exit(code);
+}

@@ -11,6 +11,7 @@
 //!   fedluar exp table2 --quick
 //!   fedluar exp fig1 --model cnn
 
+#![allow(clippy::disallowed_methods)] // CLI driver reports real wall time (lint D2 allowlist)
 use anyhow::{bail, Result};
 use fedluar::cli::Args;
 use fedluar::config::{ClientOptCfg, Method, RunConfig, ServerOptCfg};
@@ -130,6 +131,12 @@ OBSERVABILITY (the obs: config block; telemetry is read-only — an
                                        seconds, bytes — sampler fairness)
   (config files accept obs_level / obs_trace / obs_metrics / obs_layer_csv /
    obs_clients_csv; the value `none` clears a path)
+
+STATIC ANALYSIS:
+  cargo run --release --bin fedluar-lint   in-tree determinism & panic-safety
+                                           lints (D1-D4, P1, W1); rule catalog
+                                           and suppression workflow in
+                                           docs/lints.md
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {

@@ -193,26 +193,43 @@ impl<'a> Cur<'a> {
         if self.pos + n > self.buf.len() {
             bail!("frame truncated at byte {} (wanted {n} more)", self.pos);
         }
+        // lint:allow(W1): the length check above is exactly the bound
+        // this slice needs; every other decode slice routes through here.
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
+    /// `take(N)` as a fixed-size array, without a `try_into().unwrap()`
+    /// on the decode path: `take` already guarantees the length.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let mut a = [0u8; N];
+        a.copy_from_slice(self.take(N)?);
+        Ok(a)
+    }
+
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.array()?))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.array()?))
     }
 
     fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.array()?))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = self.take(n * 4)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
     }
 }
 
@@ -286,6 +303,8 @@ fn header(flavor: Flavor, dim: usize, layer_ids: &[usize]) -> Result<Vec<u8>> {
 fn seal(mut frame: Vec<u8>, n_layers: usize) -> WireFrame {
     let body = HEADER_LEN + 2 * n_layers;
     let payload_len = (frame.len() - body) as u32;
+    // lint:allow(W1): encode side — `header()` wrote HEADER_LEN bytes
+    // before any payload, so bytes 12..16 always exist here.
     frame[12..16].copy_from_slice(&payload_len.to_le_bytes());
     WireFrame { bytes: frame }
 }
@@ -356,12 +375,15 @@ pub fn check_trailer(frame: &[u8]) -> Result<&[u8]> {
         bail!("frame shorter than its integrity trailer ({} bytes)", frame.len());
     }
     let body_end = frame.len() - TRAILER_LEN;
-    let body = &frame[..body_end];
-    let len = u32::from_le_bytes(frame[body_end..body_end + 4].try_into().expect("4 bytes"));
+    // split_at / Cur keep every slice bounds-derived — no raw indexing
+    // or try_into().expect() on this decode path (rules W1/P1).
+    let (body, trailer) = frame.split_at(body_end);
+    let mut cur = Cur { buf: trailer, pos: 0 };
+    let len = cur.u32()?;
     if len as usize != body_end {
         bail!("integrity trailer length mismatch: trailer says {len}, body is {body_end} bytes");
     }
-    let want = u64::from_le_bytes(frame[body_end + 4..].try_into().expect("8 bytes"));
+    let want = cur.u64()?;
     let got = fnv1a_bytes(FNV_OFFSET, body);
     if want != got {
         bail!("integrity trailer FNV mismatch: frame corrupted in transit");
@@ -555,7 +577,7 @@ pub fn encode_update(
                 pack_bits(
                     sl.iter().map(|&v| {
                         if step > 0.0 {
-                            (((v - lo) / step).round() as i64).clamp(0, qmax as i64) as u32
+                            crate::tensor::quant_grid_index(v, lo, step, qmax)
                         } else {
                             0
                         }
@@ -734,8 +756,8 @@ pub fn decode_update_delta(
     if inner != Flavor::Dense {
         bail!("delta frame carries {inner:?}, expected a Dense uplink");
     }
-    let ref_version = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
-    let check = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let ref_version = cur.u64()?;
+    let check = cur.u64()?;
     let local = combine_layer_hashes(&layer_hashes(reference, meta), &layer_ids);
     if check != local {
         bail!("delta reference mismatch (frame {check:#018x}, local {local:#018x})");
@@ -796,8 +818,8 @@ pub fn decode_broadcast_delta(
     if inner != Flavor::Broadcast {
         bail!("delta frame carries {inner:?}, expected a Broadcast downlink");
     }
-    let ref_version = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
-    let check = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+    let ref_version = cur.u64()?;
+    let check = cur.u64()?;
     let all: Vec<usize> = (0..meta.num_layers()).collect();
     let local = combine_layer_hashes(&layer_hashes(reference, meta), &all);
     if check != local {
@@ -951,7 +973,7 @@ pub fn decode_update(frame: &[u8], meta: &ModelMeta) -> Result<Decoded> {
             return Ok(Decoded::Scalar(cur.f32()?));
         }
         Flavor::SeededMask => {
-            let seed = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+            let seed = cur.u64()?;
             let rate = cur.f32()?;
             let kept = cur.u32()? as usize;
             let vals = cur.f32s(kept)?;

@@ -36,6 +36,7 @@
 //! or any model state, which is why `level=off` and `level=full` runs
 //! are bit-identical (`tests/integration_obs.rs`).
 
+#![allow(clippy::disallowed_methods)] // obs/ is the designated wall-clock module (lint D2 allowlist)
 pub mod clients;
 pub mod layers;
 pub mod metrics;

@@ -1,5 +1,6 @@
 //! The PJRT engine: one compiled executable per lowered graph.
 
+#![allow(clippy::disallowed_methods)] // engine timings are telemetry, not simulation state
 use super::literal::{features_literal, i32_literal, scalar_f32, vec_f32_literal};
 use crate::data::{FedDataset, Features};
 use crate::model::ModelMeta;

@@ -94,6 +94,64 @@ pub fn weighted_mean_rows(rows: &[&[f32]], w: &[f32], out: &mut [f32]) {
     }
 }
 
+// ------------------------------------------------------- checked casts
+//
+// Bare `as` float->int casts silently saturate and map NaN to 0, which
+// has bitten codec paths before (see docs/lints.md, rule D4). These
+// helpers spell the clamping out; fedluar-lint requires them in the
+// compress/ and net/ codec paths.
+
+/// `round(total * ratio)` clamped to `[min, total]`, NaN-safe: a NaN
+/// ratio yields `min`. Bit-identical to the old
+/// `((total as f32) * ratio).round().clamp(min, total) as usize`
+/// pattern for finite inputs (top-k keep counts, low-rank target
+/// ranks, PruneFL mask sizes).
+pub fn scaled_count(total: usize, ratio: f32, min: usize) -> usize {
+    let raw = ((total as f32) * ratio).round();
+    if !(raw >= min as f32) {
+        // NaN and below-min land here; never exceed `total` unless the
+        // caller's floor already does.
+        return min.min(total.max(min));
+    }
+    if raw >= total as f32 {
+        total
+    } else {
+        raw as usize
+    }
+}
+
+/// `floor(x)` as a sample count: negative and NaN inputs yield 0,
+/// values beyond `usize::MAX` saturate. Matches the saturating
+/// semantics of `x.floor() as usize` exactly, but explicitly.
+pub fn floor_count(x: f64) -> usize {
+    if !(x > 0.0) {
+        return 0;
+    }
+    let f = x.floor();
+    if f >= usize::MAX as f64 {
+        usize::MAX
+    } else {
+        f as usize
+    }
+}
+
+/// Uniform-grid quantization index: `round((v - lo) / step)` clamped
+/// to `[0, qmax]`. NaN and negative offsets map to 0, overshoot maps
+/// to `qmax` — the same values the wire codec's old
+/// `(((v - lo) / step).round() as i64).clamp(0, qmax as i64) as u32`
+/// produced, without a bare float->int `as` cast on the data path.
+pub fn quant_grid_index(v: f32, lo: f32, step: f32, qmax: u32) -> u32 {
+    let t = ((v - lo) / step).round();
+    if !(t > 0.0) {
+        return 0;
+    }
+    if t >= qmax as f32 {
+        qmax
+    } else {
+        t as u32
+    }
+}
+
 /// Cosine similarity; 0 when either vector is ~zero.
 pub fn cosine(x: &[f32], y: &[f32]) -> f64 {
     let nx = norm(x);
@@ -171,5 +229,47 @@ mod tests {
     fn mean_of_nothing_panics() {
         let mut out = vec![0.0f32; 1];
         mean_rows(&[], &mut out);
+    }
+
+    #[test]
+    fn scaled_count_matches_legacy_cast() {
+        for d in [1usize, 7, 40, 1000] {
+            for ratio in [0.0f32, 0.1, 0.25, 0.5, 0.999, 1.0] {
+                let legacy = (((d as f32) * ratio).round() as usize).clamp(1, d);
+                assert_eq!(scaled_count(d, ratio, 1), legacy, "d={d} ratio={ratio}");
+            }
+        }
+        // NaN ratio degrades to the floor instead of casting NaN to 0
+        assert_eq!(scaled_count(40, f32::NAN, 1), 1);
+        assert_eq!(scaled_count(40, f32::INFINITY, 1), 40);
+        assert_eq!(scaled_count(0, 0.5, 1), 1, "empty total still honors the floor");
+    }
+
+    #[test]
+    fn floor_count_matches_legacy_cast() {
+        for x in [0.0f64, 0.3, 1.0, 2.7, 1e6, 1e6 + 0.999] {
+            assert_eq!(floor_count(x), x.floor() as usize, "x={x}");
+        }
+        assert_eq!(floor_count(-3.2), 0);
+        assert_eq!(floor_count(f64::NAN), 0);
+        assert_eq!(floor_count(f64::INFINITY), usize::MAX);
+    }
+
+    #[test]
+    fn quant_grid_index_matches_legacy_cast() {
+        let qmax = 15u32;
+        for (v, lo, step) in [
+            (0.5f32, 0.0f32, 0.1f32),
+            (0.0, 0.0, 0.1),
+            (-2.0, 0.0, 0.1),
+            (100.0, 0.0, 0.1),
+            (0.349, 0.3, 0.0033),
+        ] {
+            let legacy = (((v - lo) / step).round() as i64).clamp(0, qmax as i64) as u32;
+            assert_eq!(quant_grid_index(v, lo, step, qmax), legacy, "v={v} lo={lo} step={step}");
+        }
+        // NaN offsets map to the low grid point, never panic
+        assert_eq!(quant_grid_index(f32::NAN, 0.0, 0.1, qmax), 0);
+        assert_eq!(quant_grid_index(1.0, 0.0, 0.0, qmax), qmax, "inf/0-step saturates high");
     }
 }

@@ -1,0 +1,214 @@
+//! fedluar-lint end-to-end: every catalog rule firing and suppressed
+//! (fixtures under lint_fixtures/), annotation handling, baseline
+//! round-trip + staleness, and — the enforcement test — the real tree
+//! linting clean against the checked-in lint-baseline.txt.
+
+use fedluar::lint::{self, Finding, baseline, lint_source, lint_tree, rules};
+use std::path::Path;
+
+const FIX_D1: &str = include_str!("lint_fixtures/fixture_d1.rs");
+const FIX_D2: &str = include_str!("lint_fixtures/fixture_d2.rs");
+const FIX_D3: &str = include_str!("lint_fixtures/fixture_d3.rs");
+const FIX_D4: &str = include_str!("lint_fixtures/fixture_d4.rs");
+const FIX_P1: &str = include_str!("lint_fixtures/fixture_p1.rs");
+const FIX_W1: &str = include_str!("lint_fixtures/fixture_w1.rs");
+
+/// (rule, line) pairs of a file's findings, in report order.
+fn keys(findings: &[Finding]) -> Vec<(String, usize)> {
+    findings.iter().map(|f| (f.rule.clone(), f.line)).collect()
+}
+
+// ------------------------------------------------ per-rule fixtures
+
+#[test]
+fn d1_fires_and_suppresses() {
+    let r = lint_source("rust/src/net/fixture_d1.rs", FIX_D1);
+    assert_eq!(
+        keys(&r.findings),
+        vec![("D1".to_string(), 5), ("D1".to_string(), 8)],
+        "{:?}",
+        r.findings
+    );
+    assert_eq!(r.suppressed, 1, "annotated HashSet alias");
+}
+
+#[test]
+fn d1_out_of_scope_module_is_ignored() {
+    // Same source under a path outside D1's scope: no findings.
+    let r = lint_source("rust/src/runtime/fixture_d1.rs", FIX_D1);
+    assert!(keys(&r.findings).iter().all(|(rule, _)| rule != "D1"), "{:?}", r.findings);
+}
+
+#[test]
+fn d2_fires_and_suppresses() {
+    let r = lint_source("rust/src/fl/fixture_d2.rs", FIX_D2);
+    assert_eq!(keys(&r.findings), vec![("D2".to_string(), 6)], "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1, "annotated SystemTime read");
+}
+
+#[test]
+fn d2_allowlisted_module_is_exempt() {
+    let r = lint_source("rust/src/obs/fixture_d2.rs", FIX_D2);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn d3_fires_in_tests_too_and_skips_trait_impls() {
+    let r = lint_source("rust/tests/fixture_d3.rs", FIX_D3);
+    // line 6: library sort; line 34: #[cfg(test)] sort — D3 applies in
+    // test code as well. The `fn partial_cmp` impl (18) and its inner
+    // non-unwrapped call (19) must not fire.
+    assert_eq!(
+        keys(&r.findings),
+        vec![("D3".to_string(), 6), ("D3".to_string(), 34)],
+        "{:?}",
+        r.findings
+    );
+    assert_eq!(r.suppressed, 1, "annotated unwrap_or(Equal) form");
+}
+
+#[test]
+fn d4_fires_and_suppresses() {
+    let r = lint_source("rust/src/compress/fixture_d4.rs", FIX_D4);
+    assert_eq!(keys(&r.findings), vec![("D4".to_string(), 6)], "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1, "annotated floor cast");
+}
+
+#[test]
+fn p1_fires_skips_test_code_and_reports_bad_annotations() {
+    let r = lint_source("rust/src/fl/fixture_p1.rs", FIX_P1);
+    assert_eq!(
+        keys(&r.findings),
+        vec![
+            ("P1".to_string(), 6),  // unwrap on library path
+            ("P1".to_string(), 11), // panic! on library path
+            ("A1".to_string(), 20), // unknown rule ZZ9
+            ("A1".to_string(), 23), // missing `: reason`
+        ],
+        "{:?}",
+        r.findings
+    );
+    assert_eq!(r.suppressed, 1, "annotated unwrap in head_allowed");
+    // the #[cfg(test)] unwrap at line 31 must not appear
+    assert!(r.findings.iter().all(|f| f.line != 31));
+}
+
+#[test]
+fn w1_fires_and_suppresses() {
+    let r = lint_source("rust/src/net/wire.rs", FIX_W1);
+    assert_eq!(keys(&r.findings), vec![("W1".to_string(), 6)], "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1, "annotated bounds-checked index");
+}
+
+// ------------------------------------------------- annotation corner
+
+#[test]
+fn annotation_covers_same_line_trailing_comment() {
+    let src = "pub fn f(xs: &[u32]) -> u32 {\n    *xs.first().unwrap() // lint:allow(P1): fixture\n}\n";
+    let r = lint_source("rust/src/fl/inline.rs", src);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn annotation_only_covers_next_token_line() {
+    // A blank line between annotation and violation still suppresses
+    // (first *token* line after the comment), but a second violation
+    // two statements later does not ride along.
+    let src = "// lint:allow(P1): first only\n\n\
+               pub fn f(a: &[u32]) -> u32 { *a.first().unwrap() }\n\
+               pub fn g(a: &[u32]) -> u32 { *a.first().unwrap() }\n";
+    let r = lint_source("rust/src/fl/next.rs", src);
+    assert_eq!(keys(&r.findings), vec![("P1".to_string(), 4)], "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn strings_and_comments_never_match() {
+    let src = "pub fn f() -> &'static str {\n    // HashMap unwrap() panic! Instant::now in a comment\n    \"HashMap unwrap() partial_cmp(x).unwrap() Instant::now\"\n}\n";
+    let r = lint_source("rust/src/net/strings.rs", src);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+// --------------------------------------------------------- baseline
+
+#[test]
+fn baseline_round_trip_and_staleness() {
+    let mut findings = lint_source("rust/src/fl/fixture_p1.rs", FIX_P1).findings;
+    let entries = baseline::parse(
+        "# comment line\n\nP1 rust/src/fl/fixture_p1.rs\nD1 rust/src/fl/fixture_p1.rs\n",
+    )
+    .expect("baseline parses");
+    let (baselined, stale) = baseline::apply(&mut findings, &entries);
+    assert_eq!(baselined, 2, "both P1 findings grandfathered");
+    assert_eq!(stale, vec!["D1 rust/src/fl/fixture_p1.rs".to_string()], "no D1 finding => stale");
+    // A1 annotation findings are never baselined away
+    assert_eq!(
+        keys(&findings),
+        vec![("A1".to_string(), 20), ("A1".to_string(), 23)],
+        "{:?}",
+        findings
+    );
+}
+
+#[test]
+fn baseline_rejects_unknown_rules_and_bad_lines() {
+    assert!(baseline::parse("Q9 rust/src/foo.rs\n").is_err(), "unknown rule id");
+    assert!(baseline::parse("P1 rust/src/foo.rs extra-field\n").is_err(), "three fields");
+    assert!(baseline::parse("just-one-field\n").is_err(), "one field");
+}
+
+#[test]
+fn baseline_render_parses_back() {
+    let findings = lint_source("rust/src/fl/fixture_p1.rs", FIX_P1).findings;
+    let text = baseline::render(&findings);
+    let entries = baseline::parse(&text).expect("rendered baseline parses");
+    // fixture has P1 and A1 findings; render dedups per (rule, path)
+    // and drops A1 (malformed annotations are never grandfathered), so
+    // exactly one entry survives and it round-trips through parse.
+    assert_eq!(entries, vec![("P1".to_string(), "rust/src/fl/fixture_p1.rs".to_string())]);
+}
+
+// ---------------------------------------------- whole-tree contract
+
+#[test]
+fn tree_is_clean_under_checked_in_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut report = lint_tree(root).expect("tree lints");
+    assert!(report.files > 30, "walker found only {} files", report.files);
+    assert!(
+        report.findings.iter().all(|f| !f.path.contains("lint_fixtures")),
+        "fixtures must be skipped by the walker"
+    );
+    let baseline_text = std::fs::read_to_string(root.join("lint-baseline.txt"))
+        .expect("lint-baseline.txt is checked in");
+    lint::apply_baseline(&mut report, &baseline_text).expect("baseline applies");
+    assert!(
+        report.findings.is_empty(),
+        "non-baselined findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.stale.is_empty(), "stale baseline entries: {:?}", report.stale);
+}
+
+// ------------------------------------------------- catalog hygiene
+
+#[test]
+fn catalog_ids_unique_and_documented() {
+    let mut ids: Vec<&str> = rules::CATALOG.iter().map(|r| r.id).collect();
+    let n = ids.len();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate rule ids");
+    let docs = include_str!("../../docs/lints.md");
+    for r in rules::CATALOG {
+        assert!(docs.contains(&format!("## {}", r.id)), "docs/lints.md missing section for {}", r.id);
+    }
+    assert!(docs.contains("## A1"), "docs/lints.md missing the A1 annotation rule");
+    assert!(docs.contains("lint:allow"), "docs/lints.md must explain suppression");
+}

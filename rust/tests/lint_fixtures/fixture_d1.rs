@@ -1,0 +1,28 @@
+//! Lint fixture: rule D1 (unordered collections in determinism-
+//! critical modules). Never compiled — integration_lint.rs feeds this
+//! text to the linter under the pseudo-path rust/src/net/fixture_d1.rs.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> Vec<(u32, usize)> {
+    let mut h = HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0usize) += 1;
+    }
+    let mut out: Vec<(u32, usize)> = h.into_iter().collect();
+    out.sort();
+    out
+}
+
+// lint:allow(D1): scratch set is drained into a sorted Vec before any I/O
+pub type ScratchSet = std::collections::HashSet<u32>;
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_code_is_exempt() {
+        let _m: HashMap<u8, u8> = HashMap::new();
+    }
+}

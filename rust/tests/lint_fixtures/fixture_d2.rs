@@ -1,0 +1,14 @@
+//! Lint fixture: rule D2 (wall clock outside allowlisted modules).
+//! Never compiled — linted under the pseudo-path
+//! rust/src/fl/fixture_d2.rs.
+
+pub fn stamp_nanos() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn stamp_allowed() -> u64 {
+    // lint:allow(D2): fixture demonstrates an annotated wall-clock read
+    let _t = std::time::SystemTime::now();
+    0
+}

@@ -1,0 +1,36 @@
+//! Lint fixture: rule D3 (NaN-unsafe float ordering). Never compiled —
+//! linted under the pseudo-path rust/tests/fixture_d3.rs (outside
+//! P1's scope, so the `.unwrap()` sites exercise D3 alone).
+
+pub fn sort_scores(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn sort_scores_legacy(xs: &mut [f64]) {
+    // lint:allow(D3): fixture demonstrates suppression of the legacy form
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}
+
+pub struct Wrapper(pub f32);
+
+impl PartialOrd for Wrapper {
+    // a trait impl *defining* partial_cmp must not fire
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(&other.0)
+    }
+}
+
+impl PartialEq for Wrapper {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn d3_applies_in_test_code_too() {
+        let mut v = vec![1.0f32, 0.5];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+}

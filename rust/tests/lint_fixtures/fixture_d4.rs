@@ -1,0 +1,16 @@
+//! Lint fixture: rule D4 (bare float->int cast on a codec path).
+//! Never compiled — linted under the pseudo-path
+//! rust/src/compress/fixture_d4.rs.
+
+pub fn quantize_bad(v: f32, step: f32) -> u32 {
+    (v / step).round() as u32
+}
+
+pub fn floor_allowed(v: f64) -> usize {
+    // lint:allow(D4): fixture demonstrates suppression; v is pre-clamped
+    v.floor() as usize
+}
+
+pub fn int_to_int_is_fine(v: u64) -> usize {
+    v as usize
+}

@@ -1,0 +1,33 @@
+//! Lint fixture: rule P1 (panic paths in non-test library code) and
+//! pseudo-rule A1 (malformed annotations). Never compiled — linted
+//! under the pseudo-path rust/src/fl/fixture_p1.rs.
+
+pub fn head(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("fixture");
+    }
+}
+
+pub fn head_allowed(xs: &[u32]) -> u32 {
+    // lint:allow(P1): caller guarantees non-empty in this fixture
+    *xs.first().unwrap()
+}
+
+// lint:allow(ZZ9): no such rule in the catalog
+pub const A: u32 = 1;
+
+// lint:allow(P1) forgot the colon and the reason
+pub const B: u32 = 2;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Vec<u32> = vec![1];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}

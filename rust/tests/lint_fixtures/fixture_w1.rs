@@ -1,0 +1,16 @@
+//! Lint fixture: rule W1 (unchecked frame slicing in the wire
+//! decoder). Never compiled — linted under the pseudo-path
+//! rust/src/net/wire.rs, the only file in W1's scope.
+
+pub fn decode_u32_bad(frame: &[u8]) -> u32 {
+    let raw = &frame[0..4];
+    u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]])
+}
+
+pub fn byte_at_checked(buf: &[u8], pos: usize) -> Option<u8> {
+    if pos >= buf.len() {
+        return None;
+    }
+    // lint:allow(W1): bounds checked on the line above
+    Some(buf[pos])
+}

@@ -4,7 +4,7 @@
 //! be replayed exactly.
 
 use fedluar::comm::CommAccountant;
-use fedluar::compress::{Binarize, DropoutAvg, LowRank, Quantize, UpdateCompressor};
+use fedluar::compress::{Binarize, DropoutAvg, Lbgm, LowRank, Quantize, UpdateCompressor};
 use fedluar::config::{RecycleMode, SelectionScheme};
 use fedluar::data::{FedDataset, SynthSpec};
 use fedluar::fl::{DeltaFrameState, DELTA_MAX_REF_GAP};
@@ -787,6 +787,80 @@ fn prop_staleness_counts_consecutive_recycles() {
             let mut buf: Vec<f32> = (0..meta.dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             st.compose_update(&mut buf, &meta, RecycleMode::Recycle);
             assert_eq!(st.staleness, expected, "seed {seed}");
+        }
+    }
+}
+
+// ------------------------------------------- stateful compressor replay
+
+/// The per-client compressor state maps (Binarize error-feedback
+/// residuals, LBGM anchors) are BTreeMap-keyed by client id (rule D1,
+/// docs/lints.md). Pin the property that motivated the switch: two
+/// same-seed replays of a multi-round schedule — with the cohort
+/// *visited in reversed order* on the second replay of every round —
+/// produce bit-identical compressed updates per (client, round), and
+/// NaN-poisoned lanes never panic the orderings inside.
+#[test]
+fn prop_stateful_compressors_replay_bit_identical() {
+    for seed in 0..24u64 {
+        let mut mrng = Rng::seed_from_u64(9_000 + seed);
+        let meta = rand_meta(&mut mrng);
+        let clients: Vec<usize> = vec![7, 3, 11, 0, 5];
+
+        // One deterministic update per (round, client), NaN in one
+        // lane every third round to exercise the total_cmp paths.
+        let updates: Vec<Vec<Vec<f32>>> = (0..6)
+            .map(|round| {
+                clients
+                    .iter()
+                    .map(|&c| {
+                        let mut r = Rng::seed_from_u64(
+                            seed * 1_000_003 + (round as u64) * 1_009 + c as u64,
+                        );
+                        let mut u: Vec<f32> =
+                            (0..meta.dim).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                        if round % 3 == 0 {
+                            u[round % meta.dim] = f32::NAN;
+                        }
+                        u
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let replay = |reverse_within_round: bool| -> Vec<Vec<u32>> {
+            let mut bin = Binarize::new();
+            let mut lbgm = Lbgm::new(0.5);
+            let mut out = Vec::new();
+            for (round, per_client) in updates.iter().enumerate() {
+                let mut order: Vec<usize> = (0..clients.len()).collect();
+                if reverse_within_round {
+                    order.reverse();
+                }
+                let mut bits_by_slot: Vec<Vec<u32>> = vec![Vec::new(); clients.len()];
+                for slot in order {
+                    let cid = clients[slot];
+                    let mut rng = Rng::seed_from_u64(seed * 31 + round as u64);
+                    let mut b = per_client[slot].clone();
+                    bin.compress(cid, &mut b, &meta, round, &mut rng);
+                    let mut l = per_client[slot].clone();
+                    lbgm.compress(cid, &mut l, &meta, round, &mut rng);
+                    bits_by_slot[slot] =
+                        b.iter().chain(l.iter()).map(|v| v.to_bits()).collect();
+                }
+                out.extend(bits_by_slot);
+            }
+            out
+        };
+
+        let forward = replay(false);
+        let reversed = replay(true);
+        assert_eq!(
+            forward, reversed,
+            "seed {seed}: per-client compressor state must not depend on cohort visit order"
+        );
+        for bits in &forward {
+            assert!(!bits.is_empty(), "seed {seed}: every slot compressed");
         }
     }
 }
